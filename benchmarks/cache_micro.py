@@ -1,0 +1,91 @@
+"""Cache micro-benchmarks: per-row lookup/insert cost per backend.
+
+One row per (cache family × operation); ``us_per_row`` is the paper-
+relevant number (how much overhead a cache adds vs recomputation).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.caching import (DenseScorerCache, IndexerCache, KeyValueCache,
+                           RetrieverCache, ScorerCache)
+from repro.core import ColFrame, GenericTransformer, add_ranks
+from repro.ir import InvertedIndex, msmarco_like
+
+
+def _timed(fn, *args):
+    t0 = time.perf_counter()
+    out = fn(*args)
+    return out, time.perf_counter() - t0
+
+
+def run(n_rows: int = 2000) -> List[Dict]:
+    corpus = msmarco_like(1, scale=0.05)
+    index = InvertedIndex.build(corpus.get_corpus_iter())
+    rows = []
+
+    # a scorer frame with n_rows (query, docno) pairs
+    docs = corpus.docs
+    n = min(n_rows, len(docs))
+    frame = ColFrame({
+        "qid": [f"q{i % 50}" for i in range(n)],
+        "query": [f"query text {i % 50}" for i in range(n)],
+        "docno": [str(docs["docno"][i]) for i in range(n)],
+        "score": np.zeros(n), "rank": np.zeros(n, dtype=np.int64)})
+
+    scorer = GenericTransformer(
+        lambda inp: inp.assign(score=np.arange(len(inp), dtype=np.float64)),
+        "identity_scorer", key_columns=("query", "docno"),
+        value_columns=("score",))
+
+    with ScorerCache(None, scorer) as sc:
+        _, t_cold = _timed(sc, frame)
+        _, t_hot = _timed(sc, frame)
+        rows.append({"name": "scorer_cache_insert",
+                     "us_per_row": t_cold / n * 1e6})
+        rows.append({"name": "scorer_cache_hit",
+                     "us_per_row": t_hot / n * 1e6})
+
+    with DenseScorerCache(None, scorer,
+                          docnos=docs["docno"].tolist()) as dc:
+        _, t_cold = _timed(dc, frame)
+        _, t_hot = _timed(dc, frame)
+        rows.append({"name": "dense_scorer_cache_insert",
+                     "us_per_row": t_cold / n * 1e6})
+        rows.append({"name": "dense_scorer_cache_hit",
+                     "us_per_row": t_hot / n * 1e6})
+
+    topics = corpus.get_topics()
+    bm25 = index.bm25(num_results=100)
+    with RetrieverCache(None, bm25) as rc:
+        _, t_cold = _timed(rc, topics)
+        out, t_hot = _timed(rc, topics)
+        rows.append({"name": "retriever_cache_insert",
+                     "us_per_row": t_cold / max(len(out), 1) * 1e6})
+        rows.append({"name": "retriever_cache_hit",
+                     "us_per_row": t_hot / max(len(out), 1) * 1e6})
+
+    with IndexerCache(None) as ic:
+        _, t_w = _timed(ic.index, corpus.get_corpus_iter())
+        _, t_r = _timed(lambda: sum(1 for _ in ic))
+        rows.append({"name": "indexer_cache_write",
+                     "us_per_row": t_w / len(docs) * 1e6})
+        rows.append({"name": "indexer_cache_replay",
+                     "us_per_row": t_r / len(docs) * 1e6})
+
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_row")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_row']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

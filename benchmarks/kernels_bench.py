@@ -1,0 +1,107 @@
+"""Kernel benchmarks.
+
+The container is CPU-only, so wall-clock here measures the XLA reference
+path (the jnp oracle, jitted) — a correctness+throughput baseline.  The
+Pallas kernels are verified (interpret mode) at the same shapes; their
+TPU performance is projected from the roofline terms in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bm25_block import bm25_block_op, bm25_block_ref
+from repro.kernels.cachekey_hash import cachekey_hash_op, cachekey_hash_ref
+from repro.kernels.embedding_bag import embedding_bag_op, embedding_bag_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention_op
+
+
+def _bench(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> List[Dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # flash attention: oracle throughput + kernel equivalence
+    for (B, H, K, S, hd) in [(1, 8, 2, 512, 64), (2, 8, 8, 1024, 64)]:
+        q = jnp.array(rng.normal(size=(B, H, S, hd)), jnp.float32)
+        k = jnp.array(rng.normal(size=(B, K, S, hd)), jnp.float32)
+        v = jnp.array(rng.normal(size=(B, K, S, hd)), jnp.float32)
+        ref_t = _bench(jax.jit(attention_ref), q, k, v)
+        flops = 4.0 * B * H * S * S * hd
+        out = flash_attention_op(q, k, v)
+        err = float(jnp.abs(out - attention_ref(q, k, v)).max())
+        rows.append({"name": f"flash_attn_B{B}H{H}S{S}",
+                     "us_per_call": ref_t * 1e6,
+                     "derived": f"xla_ref_gflops={flops / ref_t / 1e9:.1f};"
+                                f"kernel_max_err={err:.1e}"})
+
+    # embedding bag
+    for (V, d, B, L) in [(100_000, 64, 4096, 10), (1_000_000, 64, 1024, 20)]:
+        tab = jnp.array(rng.normal(size=(V, d)), jnp.float32)
+        ids = jnp.array(rng.integers(0, V, (B, L)), jnp.int32)
+        ref_t = _bench(jax.jit(embedding_bag_ref), tab, ids)
+        small = (jnp.array(rng.normal(size=(1000, d)), jnp.float32),
+                 jnp.array(rng.integers(0, 1000, (64, L)), jnp.int32))
+        err = float(jnp.abs(embedding_bag_op(*small)
+                            - embedding_bag_ref(*small)).max())
+        gb = (B * L * d * 4) / 1e9
+        rows.append({"name": f"embedding_bag_V{V}_B{B}",
+                     "us_per_call": ref_t * 1e6,
+                     "derived": f"xla_ref_gather_GBps={gb / ref_t:.1f};"
+                                f"kernel_max_err={err:.1e}"})
+
+    # cachekey hash vs host hashing (the cost the kernel eliminates)
+    toks = jnp.array(rng.integers(0, 2 ** 31 - 1, (4096, 64)), jnp.int32)
+    dev_t = _bench(jax.jit(cachekey_hash_ref), toks)
+    import hashlib
+    import pickle
+    host_rows = np.asarray(toks)
+    t0 = time.perf_counter()
+    for i in range(512):
+        hashlib.sha256(pickle.dumps(host_rows[i].tolist())).digest()
+    host_t = (time.perf_counter() - t0) / 512 * 4096
+    ok = bool((cachekey_hash_op(toks[:256]) ==
+               cachekey_hash_ref(toks[:256])).all())
+    rows.append({"name": "cachekey_hash_4096x64",
+                 "us_per_call": dev_t * 1e6,
+                 "derived": f"host_sha256pickle_us={host_t * 1e6:.0f};"
+                            f"kernel_exact={ok}"})
+
+    # bm25 block
+    tf = jnp.array(rng.poisson(0.2, (64, 8192)), jnp.float32)
+    idf = jnp.array(rng.random(64) * 5, jnp.float32)
+    dl = jnp.array(rng.integers(20, 100, 8192), jnp.float32)
+    ref_t = _bench(jax.jit(lambda *a: bm25_block_ref(*a, avg_dl=55.0)),
+                   tf, idf, dl)
+    err = float(jnp.abs(bm25_block_op(tf, idf, dl, avg_dl=55.0)
+                        - bm25_block_ref(tf, idf, dl, avg_dl=55.0)).max())
+    rows.append({"name": "bm25_block_64x8192",
+                 "us_per_call": ref_t * 1e6,
+                 "derived": f"docs_per_s={8192 / ref_t / 1e6:.2f}M;"
+                            f"kernel_max_err={err:.1e}"})
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

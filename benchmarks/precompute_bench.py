@@ -1,0 +1,86 @@
+"""Prefix-precomputation benchmark: naive vs LCP (§3) vs trie (beyond).
+
+Sweeps the number of pipelines sharing a BM25 prefix; reports wall time
+and stage invocations for each strategy, plus the §6 ablation pattern
+(A; A»B; A»B»C) where the trie strictly dominates LCP.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import (ColFrame, Experiment, GenericTransformer,
+                        run_with_precompute, run_with_trie)
+from repro.ir import InvertedIndex, TextLoader, msmarco_like
+
+
+def run() -> List[Dict]:
+    corpus = msmarco_like(1, scale=0.15)
+    index = InvertedIndex.build(corpus.get_corpus_iter())
+    topics = corpus.get_topics()
+    rows = []
+
+    for n_pipes in (2, 4, 8):
+        bm25 = index.bm25(num_results=200)
+        calls = {"n": 0}
+        orig = bm25.transform
+        def counting(inp):
+            calls["n"] += len(inp)
+            return orig(inp)
+        bm25.transform = counting
+        systems = [bm25 % (10 * (i + 1)) for i in range(n_pipes)]
+
+        calls["n"] = 0
+        t0 = time.perf_counter()
+        naive = [s(topics) for s in systems]
+        t_naive = time.perf_counter() - t0
+        calls_naive = calls["n"]
+
+        calls["n"] = 0
+        t0 = time.perf_counter()
+        pre, _ = run_with_precompute(systems, topics)
+        t_pre = time.perf_counter() - t0
+        calls_pre = calls["n"]
+
+        for got, want in zip(pre, naive):       # transparency invariant
+            assert got.equals(want, cols=["qid", "docno", "score"])
+
+        rows.append({"name": f"precompute_lcp_{n_pipes}pipes",
+                     "t_naive_s": round(t_naive, 4),
+                     "t_precompute_s": round(t_pre, 4),
+                     "speedup": round(t_naive / max(t_pre, 1e-9), 2),
+                     "bm25_calls_naive": calls_naive,
+                     "bm25_calls_precompute": calls_pre})
+
+    # §6 ablation: A; A>>B; A>>B>>C
+    bm25 = index.bm25(num_results=100)
+    rerank = GenericTransformer(
+        lambda inp: inp.assign(score=inp["score"] * 1.1), "rerank1")
+    rerank2 = GenericTransformer(
+        lambda inp: inp.assign(score=inp["score"] + 1.0), "rerank2")
+    pipes = [bm25, bm25 >> rerank, bm25 >> rerank >> rerank2]
+    t0 = time.perf_counter()
+    _, lcp_stats = run_with_precompute(pipes, topics)
+    t_lcp = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _, trie_stats = run_with_trie(pipes, topics)
+    t_trie = time.perf_counter() - t0
+    rows.append({"name": "ablation_lcp_vs_trie",
+                 "t_naive_s": None, "t_precompute_s": round(t_trie, 4),
+                 "speedup": round(t_lcp / max(t_trie, 1e-9), 2),
+                 "bm25_calls_naive": lcp_stats.stage_invocations_saved,
+                 "bm25_calls_precompute": trie_stats.stage_invocations_saved})
+    return rows
+
+
+def main():
+    rows = run()
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

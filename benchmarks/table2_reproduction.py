@@ -1,0 +1,135 @@
+"""Reproduction of the paper's §5 demonstration experiment (Table 2).
+
+Pipelines: [bm25 % k >> Mono % 10 >> Duo for k in (20, 50, 100, 200)]
+on MSMARCO-v1/v2-scaled synthetic corpora (43 / 53 queries, v2 ≈ 4.4×
+v1 docs — the paper's ratios; absolute sizes reduced for CPU).
+
+Settings (paper Table 2):
+  (1) no caching            — BM25 executed once per pipeline (4×)
+  (2) prefix precomputation — BM25 executed once (§3)
+  (3) + cold ScorerCache    — Mono scored once per distinct (q,d) pair
+  (4) + hot ScorerCache     — Mono fully cached from (3)
+
+Reported: wall time + Δ% vs (1), BM25 invocations, Mono pair-scorings,
+and the *result-equality* check (nDCG@10/MAP identical across settings —
+the invariant that makes the caching sound).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.caching import ScorerCache
+from repro.core import Experiment
+from repro.ir import InvertedIndex, TextLoader, msmarco_like
+from repro.models.cross_encoder import DuoScorer, EncoderConfig, MonoScorer
+
+CUTS = (20, 50, 100, 200)
+MEASURES = ["nDCG@10", "MAP"]
+CE = EncoderConfig(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                   vocab_size=8192, max_len=32)
+
+
+class CountingBM25:
+    def __init__(self, bm25):
+        self.bm25 = bm25
+        self.invocations = 0
+        orig = bm25.transform
+        def counting(inp):
+            self.invocations += len(inp)
+            return orig(inp)
+        bm25.transform = counting
+
+
+def run_version(version: int, scale: float) -> List[Dict]:
+    corpus = msmarco_like(version, scale=scale)
+    index = InvertedIndex.build(corpus.get_corpus_iter())
+    loader = TextLoader(corpus.text_map())
+    topics, qrels = corpus.get_topics(), corpus.get_qrels()
+    rows = []
+    shared_cache_path = None
+    baseline_means = None
+    base_time = None
+
+    for setting, (pre, cached) in enumerate(
+            [(False, None), (True, None), (True, "cold"), (True, "hot")],
+            start=1):
+        bm25 = index.bm25(num_results=max(CUTS))
+        counter = CountingBM25(bm25)
+        mono = MonoScorer(CE)
+        duo = DuoScorer(CE, max_docs=10)
+        if cached is None:
+            stage = mono
+            cache = None
+        else:
+            if cached == "cold" or shared_cache_path is None:
+                cache = ScorerCache(None, mono)
+                cache._temporary = False
+                shared_cache_path = cache.path
+            else:
+                cache = ScorerCache(shared_cache_path, mono)
+            stage = cache
+        systems = [bm25 % k >> loader >> stage % 10 >> duo for k in CUTS]
+
+        t0 = time.perf_counter()
+        res = Experiment(systems, topics, qrels, MEASURES,
+                         precompute_prefix=pre,
+                         names=[f"k={k}" for k in CUTS])
+        dt = time.perf_counter() - t0
+        if cache is not None:
+            cache.close()
+
+        if setting == 1:
+            baseline_means = res.means
+            base_time = dt
+        else:   # result-equality invariant
+            for n in res.names:
+                for m in MEASURES:
+                    assert abs(res.means[n][m]
+                               - baseline_means[n][m]) < 1e-9, \
+                        f"setting {setting} changed {n}/{m}!"
+
+        rows.append({
+            "corpus": f"msmarco-v{version}",
+            "setting": setting,
+            "precompute": pre,
+            "mono_cache": cached or "none",
+            "time_s": round(dt, 3),
+            "delta_vs_1": round(dt / base_time, 3),
+            "bm25_queries": counter.invocations,
+            "mono_pairs_scored": mono.invocations,
+            "nDCG@10(k=200)": round(res.means["k=200"]["nDCG@10"], 4),
+        })
+    import shutil
+    if shared_cache_path:
+        shutil.rmtree(shared_cache_path, ignore_errors=True)
+    return rows
+
+
+def run(scale: float = 0.08) -> List[Dict]:
+    rows = []
+    rows += run_version(1, scale)
+    rows += run_version(2, scale)
+    return rows
+
+
+def main():
+    rows = run()
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    # the paper's qualitative claims, checked:
+    for v in ("msmarco-v1", "msmarco-v2"):
+        sub = [r for r in rows if r["corpus"] == v]
+        assert sub[1]["bm25_queries"] < sub[0]["bm25_queries"], \
+            "precompute must reduce BM25 work"
+        assert sub[3]["mono_pairs_scored"] == 0, "hot cache must re-score 0"
+        assert sub[2]["mono_pairs_scored"] <= sub[1]["mono_pairs_scored"]
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""The paper's §5 experiment, condensed: four pipelines under four
+caching settings, showing time/work falling while results stay fixed.
+
+    PYTHONPATH=src python examples/cached_experiment.py
+"""
+from benchmarks.table2_reproduction import run
+
+rows = run(scale=0.05)
+cols = list(rows[0].keys())
+widths = [max(len(c), 14) for c in cols]
+print("  ".join(c.ljust(w) for c, w in zip(cols, widths)))
+for r in rows:
+    print("  ".join(str(r[c]).ljust(w) for c, w in zip(cols, widths)))
+print("\nNote: identical nDCG columns across settings = the caching "
+      "transparency invariant; falling bm25/mono counters = the saved "
+      "work (paper Table 2's mechanism).")

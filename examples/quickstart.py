@@ -1,0 +1,49 @@
+"""Quickstart: declarative IR pipelines, experiments, precompute, caches.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.caching import RetrieverCache, ScorerCache, auto_cache
+from repro.core import Experiment
+from repro.ir import InvertedIndex, TextLoader, msmarco_like
+from repro.models.cross_encoder import EncoderConfig, MonoScorer
+
+# 1. a corpus + topics + qrels (synthetic MSMARCO-v1-scaled)
+dataset = msmarco_like(1, scale=0.1)
+
+# 2. index it; build a BM25 retriever (Q -> R)
+index = InvertedIndex.build(dataset.get_corpus_iter())
+bm25 = index.bm25(num_results=100)
+
+# 3. the paper's operator language: compose a retrieve-and-rerank pipeline
+mono = MonoScorer(EncoderConfig(n_layers=2, d_model=64, n_heads=4,
+                                d_ff=128, vocab_size=8192, max_len=32))
+loader = TextLoader(dataset.text_map())
+pipeline = bm25 % 20 >> loader >> mono
+print("pipeline:", pipeline)
+
+# 4. a declarative experiment over four rank cutoffs — ONE bm25 pass
+#    thanks to prefix precomputation (paper §3)
+res = Experiment(
+    [bm25 % k >> loader >> mono for k in (5, 10, 20, 50)],
+    dataset.get_topics(), dataset.get_qrels(),
+    ["nDCG@10", "MAP", "R@50"],
+    names=[f"k={k}" for k in (5, 10, 20, 50)],
+    precompute_prefix=True,          # <---- the paper's §3 feature
+    baseline=0,
+)
+print(res)
+print("precompute saved stage invocations:",
+      res.precompute.stage_invocations_saved)
+
+# 5. explicit caching (paper §4): wrap the scorer, re-run for free
+with ScorerCache(None, mono) as cached_mono:
+    cached = bm25 % 20 >> loader >> cached_mono
+    cached(dataset.get_topics())
+    cached(dataset.get_topics())     # <- all values cached
+    print("scorer cache:", cached_mono.stats)
+
+# 6. or let the framework pick the right cache family from transformer
+#    metadata (the paper's §6 future work, implemented here)
+c = auto_cache(bm25)
+print("auto_cache(bm25) ->", type(c).__name__)
+c.close()

@@ -1,0 +1,10 @@
+"""Serve a small scorer with batched requests + ScorerCache.
+
+    PYTHONPATH=src python examples/serve_scorer.py
+"""
+from repro.launch.serve import main
+
+stats = main(["--requests", "400", "--n-queries", "16",
+              "--max-batch", "64"])
+print("cache makes repeat traffic cheap: p50 includes hot requests; "
+      "run with --no-cache to compare.")

@@ -1,0 +1,70 @@
+"""Perf hillclimb driver: hypothesis -> change -> re-lower -> record.
+
+Each variant is (cfg_overrides, opt_cfg, rules). Appends RooflineReports
+to results/perf.jsonl with the variant name.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys, time, traceback
+import jax.numpy as jnp
+
+sys.path.insert(0, "/root/repo/src")
+from repro.launch.dryrun import run_cell
+from repro.distrib.shardings import ShardingRules
+from repro.train.optimizer import AdamWConfig
+
+BF16MOM = AdamWConfig(moment_dtype=jnp.bfloat16)
+SP = ShardingRules().override(seq=("model",))
+
+VARIANTS = {
+    # (arch, shape): [(variant_name, cfg_overrides, opt_cfg, rules), ...]
+    ("granite-moe-3b-a800m", "train_4k"): [
+        ("baseline", None, None, None),
+        ("grouped16", {"dispatch_groups": 16}, None, None),
+        ("grouped16+bf16mom", {"dispatch_groups": 16}, BF16MOM, None),
+        ("grouped16+bf16mom+dots", {"dispatch_groups": 16, "remat": "dots"},
+         BF16MOM, None),
+        ("grouped16+sp", {"dispatch_groups": 16}, None, SP),
+    ],
+    ("phi3.5-moe-42b-a6.6b", "train_4k"): [
+        ("baseline", None, None, None),
+        ("grouped16", {"dispatch_groups": 16}, None, None),
+        ("grouped16+bf16mom", {"dispatch_groups": 16}, BF16MOM, None),
+        ("grouped16+bf16mom+sp", {"dispatch_groups": 16}, BF16MOM, SP),
+    ],
+    ("qwen1.5-110b", "train_4k"): [
+        ("baseline", None, None, None),
+        ("dots", {"remat": "dots"}, None, None),
+        ("bf16mom", None, BF16MOM, None),
+        ("bf16mom+sp", None, BF16MOM, SP),
+        ("bf16mom+chunk1024", {"attn_chunk": 1024}, BF16MOM, None),
+    ],
+}
+
+def main():
+    which = sys.argv[1] if len(sys.argv) > 1 else None
+    out = open("/root/repo/results/perf.jsonl", "a")
+    for (arch, shape), variants in VARIANTS.items():
+        if which and which not in arch:
+            continue
+        for name, ov, opt, rules in variants:
+            t0 = time.time()
+            try:
+                rep = run_cell(arch, shape, False, rules=rules,
+                               verbose=False, cfg_overrides=ov,
+                               opt_cfg=opt)
+                d = rep.to_dict()
+                d["variant"] = name
+                out.write(json.dumps(d) + "\n")
+                out.flush()
+                print(f"{arch:22s} {name:26s} comp={rep.compute_s:8.2f} "
+                      f"mem={rep.memory_s:8.2f} coll={rep.collective_s:8.2f} "
+                      f"dom={rep.dominant:10s} roofline={rep.roofline_fraction:.4f} "
+                      f"({time.time()-t0:.0f}s)")
+            except Exception as e:
+                traceback.print_exc()
+                print(f"{arch} {name} FAILED: {e}")
+    out.close()
+
+if __name__ == "__main__":
+    main()

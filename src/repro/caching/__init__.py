@@ -1,0 +1,27 @@
+# Explicit caching strategies (paper §4) + TPU adaptations.
+from .base import CacheMissError, CacheStats, CacheTransformer
+from .kv import KeyValueCache
+from .scorer import ScorerCache
+from .dense import DenseScorerCache
+from .retriever import RetrieverCache
+from .indexer import IndexerCache
+from .lazy import Lazy
+from .artifact import Artifact, to_hub, from_hub, hub_dir, \
+    install_artifact_methods
+from .bucketing import BucketedRunner, bucket_size, pad_batch
+from .compile_cache import CompileCache, default_compile_cache
+from .auto import auto_cache, typecheck_pipeline, UncacheableError
+
+# Artifact API conformance for every cache family (paper §4.5)
+for _cls in (KeyValueCache, ScorerCache, DenseScorerCache, RetrieverCache,
+             IndexerCache):
+    install_artifact_methods(_cls)
+
+__all__ = [
+    "CacheMissError", "CacheStats", "CacheTransformer",
+    "KeyValueCache", "ScorerCache", "DenseScorerCache", "RetrieverCache",
+    "IndexerCache", "Lazy", "Artifact", "to_hub", "from_hub", "hub_dir",
+    "BucketedRunner", "bucket_size", "pad_batch",
+    "CompileCache", "default_compile_cache",
+    "auto_cache", "typecheck_pipeline", "UncacheableError",
+]

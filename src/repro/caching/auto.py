@@ -1,0 +1,96 @@
+"""auto_cache — inferring the caching strategy (paper §6 future work).
+
+The paper notes explicit caches "rely on direct application by the
+researcher ... since current transformer implementations do not provide
+sufficient information to automatically infer the correct caching
+strategy.  In the future, we may enhance the Transformer API to include
+this kind of information, e.g. the input and output columns."
+
+Our Transformer base class carries exactly that metadata
+(``key_columns`` / ``value_columns`` / ``one_to_many`` / ``cacheable`` /
+``deterministic``), so the inference is implementable:
+
+* ``cacheable=False``  → refuse (pairwise/listwise scorers, adaptive
+  rerankers — §5's DuoT5 caveat);
+* ``one_to_many=True`` → RetrieverCache keyed by ``key_columns``;
+* value ``score`` with ``docno`` in keys → ScorerCache;
+* otherwise            → KeyValueCache on (key_columns → value_columns).
+
+The same metadata powers ``typecheck_pipeline`` — the "added benefit"
+footnote 13 anticipates (automatic type-checking of pipelines).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from ..core.frame import ColFrame
+from ..core.pipeline import Compose, Transformer, stages_of
+from .kv import KeyValueCache
+from .retriever import RetrieverCache
+from .scorer import ScorerCache
+
+__all__ = ["auto_cache", "typecheck_pipeline", "UncacheableError"]
+
+
+class UncacheableError(TypeError):
+    pass
+
+
+def auto_cache(transformer: Transformer, path: Optional[str] = None,
+               **kwargs):
+    """Pick and construct the right cache family from metadata."""
+    if isinstance(transformer, Compose):
+        raise UncacheableError(
+            "auto_cache wraps a single stage; wrap stages individually or "
+            "rely on prefix precomputation for whole-pipeline sharing")
+    if not getattr(transformer, "cacheable", True):
+        raise UncacheableError(
+            f"{transformer!r} declares cacheable=False (its outputs depend "
+            f"on the candidate pool, like DuoT5 — see paper §5)")
+    if not getattr(transformer, "deterministic", True):
+        raise UncacheableError(
+            f"{transformer!r} declares deterministic=False; caching would "
+            f"freeze one sample of a stochastic process")
+    keys = tuple(getattr(transformer, "key_columns", ()) or ())
+    vals = tuple(getattr(transformer, "value_columns", ()) or ())
+    if getattr(transformer, "one_to_many", False):
+        return RetrieverCache(path, transformer,
+                              key=keys or ("qid", "query"), **kwargs)
+    if "docno" in keys or vals == ("score",):
+        return ScorerCache(path, transformer,
+                           key=keys or ("query", "docno"),
+                           value=vals or ("score",), **kwargs)
+    if not keys or not vals:
+        raise UncacheableError(
+            f"{transformer!r} does not declare key/value columns; cannot "
+            f"infer a caching strategy (the paper-§6 situation)")
+    return KeyValueCache(path, transformer, key=keys, value=vals, **kwargs)
+
+
+def typecheck_pipeline(pipeline: Transformer) -> List[Tuple[str, str]]:
+    """Static column-flow check along a Compose chain.
+
+    Returns a list of (stage repr, error) — empty when well-typed.
+    Uses the declared input/output column sets; stages without
+    declarations pass through unchanged columns conservatively.
+    """
+    errors: List[Tuple[str, str]] = []
+    available: Optional[set] = None  # None = unknown/any
+    for stage in stages_of(pipeline):
+        need = getattr(stage, "input_columns", None)
+        if need is not None and available is not None:
+            missing = set(need) - available
+            if missing:
+                errors.append((repr(stage),
+                               f"missing input columns {sorted(missing)} "
+                               f"(have {sorted(available)})"))
+        out_cols = getattr(stage, "output_columns", None)
+        if out_cols is not None:
+            available = set(out_cols)
+        else:
+            produced = set(getattr(stage, "value_columns", ()) or ())
+            if available is not None:
+                available = available | produced
+            if need is not None and available is None:
+                available = set(need) | produced
+    return errors

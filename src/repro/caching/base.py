@@ -1,0 +1,138 @@
+"""Shared machinery for explicit caches (paper §4).
+
+Common behaviours across all cache families:
+
+* **temporary mode** — omit the path and a temp directory is created and
+  deleted when the cache is closed / used as a context manager (§4.5);
+* **no-transformer mode** — a cache constructed without a wrapped
+  transformer raises ``CacheMissError`` on miss (§4.5);
+* **Lazy transformers** — resolved only when first needed (§4.5);
+* **determinism verification** — beyond-paper: ``verify_fraction>0``
+  re-executes a sample of *hit* rows through the wrapped transformer and
+  asserts the cached values match (the paper §6 notes determinism is
+  assumed; on TPU/XLA SPMD it is checkable, so we check);
+* **hit/miss accounting** — exposed as ``stats``.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import shutil
+import tempfile
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+from ..core.frame import ColFrame
+from ..core.pipeline import Transformer
+
+__all__ = ["CacheMissError", "CacheStats", "CacheTransformer",
+           "resolve_transformer", "pickle_key", "pickle_value",
+           "unpickle_value"]
+
+
+class CacheMissError(KeyError):
+    """Raised on a miss when no wrapped transformer was provided."""
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    inserts: int = 0
+    verified: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def __str__(self):
+        return (f"hits={self.hits} misses={self.misses} "
+                f"hit_rate={self.hit_rate:.3f}")
+
+
+def resolve_transformer(t: Any) -> Optional[Transformer]:
+    """Resolve Lazy wrappers (see lazy.py) to a concrete transformer."""
+    if t is None:
+        return None
+    if hasattr(t, "_resolve_lazy"):
+        return t._resolve_lazy()
+    return t
+
+
+def pickle_key(vals: Tuple) -> bytes:
+    return pickle.dumps(vals, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def pickle_value(vals: Tuple) -> bytes:
+    return pickle.dumps(vals, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def unpickle_value(b: bytes) -> Tuple:
+    return pickle.loads(b)
+
+
+class CacheTransformer(Transformer):
+    """Base for cache components that wrap a transformer."""
+
+    def __init__(self, path: Optional[str], transformer: Any = None,
+                 *, verify_fraction: float = 0.0):
+        self._transformer_raw = transformer
+        self._temporary = path is None
+        if path is None:
+            path = tempfile.mkdtemp(prefix="repro-cache-")
+        self.path = path
+        os.makedirs(self.path, exist_ok=True)
+        self.stats = CacheStats()
+        self.verify_fraction = float(verify_fraction)
+        self._closed = False
+
+    # -- wrapped transformer -------------------------------------------------
+    @property
+    def transformer(self) -> Optional[Transformer]:
+        t = resolve_transformer(self._transformer_raw)
+        return t
+
+    def _require_transformer(self, n_misses: int) -> Transformer:
+        t = self.transformer
+        if t is None:
+            raise CacheMissError(
+                f"{type(self).__name__} at {self.path!r}: {n_misses} cache "
+                f"misses but no transformer was provided")
+        return t
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._close_backend()
+        if self._temporary:
+            shutil.rmtree(self.path, ignore_errors=True)
+        self._closed = True
+
+    def _close_backend(self) -> None:  # pragma: no cover - overridden
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def __del__(self):  # best-effort temp cleanup
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # -- equality: caches are transparent, so they inherit the wrapped
+    #    transformer's signature for LCP purposes *plus* a cache marker.
+    def signature(self):
+        inner = self.transformer
+        return (type(self).__name__,
+                inner.signature() if inner is not None else None,
+                os.path.abspath(self.path))

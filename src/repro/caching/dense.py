@@ -1,0 +1,148 @@
+"""DenseScorerCache — dense-array scorer cache (paper §4.2 impl. detail).
+
+When a large proportion of a corpus is scored (e.g. exhaustive
+cross-encoder studies), SQLite pays high per-row overheads re-storing
+document identifiers.  The paper's alternative backend uses HDF5 plus an
+``npids`` docno⇄index sidecar.  HDF5 is unavailable offline, so we use a
+functionally identical layout:
+
+* ``scores.npy`` — a memory-mapped float32 matrix ``[n_query_rows, n_docs]``
+  with NaN = "not cached";
+* ``npids.json`` — the docno enumeration (docno → column index);
+* ``queries.json`` — query string → row index (grown on demand).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.frame import ColFrame
+from ..core.pipeline import add_ranks
+from .base import CacheMissError, CacheTransformer
+
+__all__ = ["DenseScorerCache"]
+
+
+class DenseScorerCache(CacheTransformer):
+    """(query row, docno column) → float32 score, dense storage."""
+
+    GROW = 64  # row-capacity growth quantum
+
+    def __init__(self, path: Optional[str] = None, transformer: Any = None,
+                 *, docnos: Optional[Sequence[str]] = None,
+                 verify_fraction: float = 0.0):
+        super().__init__(path, transformer, verify_fraction=verify_fraction)
+        self._npids_path = os.path.join(self.path, "npids.json")
+        self._queries_path = os.path.join(self.path, "queries.json")
+        self._scores_path = os.path.join(self.path, "scores.npy")
+        if os.path.exists(self._npids_path):
+            with open(self._npids_path) as f:
+                self.docnos: List[str] = json.load(f)
+        else:
+            if docnos is None:
+                raise ValueError("DenseScorerCache needs `docnos` on first "
+                                 "creation (the npids enumeration)")
+            self.docnos = [str(d) for d in docnos]
+            with open(self._npids_path, "w") as f:
+                json.dump(self.docnos, f)
+        self._doc_idx: Dict[str, int] = {d: i for i, d in
+                                         enumerate(self.docnos)}
+        if os.path.exists(self._queries_path):
+            with open(self._queries_path) as f:
+                self._query_rows: Dict[str, int] = json.load(f)
+        else:
+            self._query_rows = {}
+        self._mat = self._open_matrix()
+
+    # -- storage --------------------------------------------------------------
+    def _open_matrix(self) -> np.memmap:
+        n_docs = len(self.docnos)
+        if not os.path.exists(self._scores_path):
+            cap = max(self.GROW, len(self._query_rows))
+            mat = np.lib.format.open_memmap(
+                self._scores_path, mode="w+", dtype=np.float32,
+                shape=(cap, n_docs))
+            mat[:] = np.nan
+            mat.flush()
+            return mat
+        return np.lib.format.open_memmap(self._scores_path, mode="r+")
+
+    def _row_for(self, query: str, create: bool) -> Optional[int]:
+        row = self._query_rows.get(query)
+        if row is None and create:
+            row = len(self._query_rows)
+            if row >= self._mat.shape[0]:
+                self._grow(row + 1)
+            self._query_rows[query] = row
+            with open(self._queries_path, "w") as f:
+                json.dump(self._query_rows, f)
+        return row
+
+    def _grow(self, need: int):
+        old = self._mat
+        cap = max(need, old.shape[0] * 2, self.GROW)
+        tmp = self._scores_path + ".tmp"
+        new = np.lib.format.open_memmap(tmp, mode="w+", dtype=np.float32,
+                                        shape=(cap, old.shape[1]))
+        new[:old.shape[0]] = old[:]
+        new[old.shape[0]:] = np.nan
+        new.flush()
+        del old
+        os.replace(tmp, self._scores_path)
+        self._mat = np.lib.format.open_memmap(self._scores_path, mode="r+")
+
+    def _close_backend(self):
+        try:
+            self._mat.flush()
+            del self._mat
+        except Exception:
+            pass
+
+    def __len__(self) -> int:
+        if not self._query_rows:
+            return 0
+        rows = sorted(self._query_rows.values())
+        return int(np.sum(~np.isnan(self._mat[rows])))
+
+    # -- transform --------------------------------------------------------------
+    def transform(self, inp: ColFrame) -> ColFrame:
+        if len(inp) == 0:
+            return inp
+        queries = [str(q) for q in inp["query"].tolist()]
+        docnos = [str(d) for d in inp["docno"].tolist()]
+        scores = np.full(len(inp), np.nan, dtype=np.float64)
+        miss_idx: List[int] = []
+        for i, (q, d) in enumerate(zip(queries, docnos)):
+            row = self._query_rows.get(q)
+            col = self._doc_idx.get(d)
+            if col is None:
+                raise KeyError(f"docno {d!r} not in npids enumeration")
+            if row is not None:
+                v = float(self._mat[row, col])
+                if not np.isnan(v):
+                    scores[i] = v
+                    continue
+            miss_idx.append(i)
+        self.stats.hits += len(inp) - len(miss_idx)
+        self.stats.misses += len(miss_idx)
+
+        if miss_idx:
+            t = self._require_transformer(len(miss_idx))
+            sub = inp.take(np.asarray(miss_idx, dtype=np.int64))
+            out = t(sub)
+            if len(out) != len(miss_idx):
+                raise ValueError("DenseScorerCache requires a pointwise "
+                                 "(1:1) scorer")
+            fresh = np.asarray(out["score"], dtype=np.float64)
+            for j, i in enumerate(miss_idx):
+                row = self._row_for(queries[i], create=True)
+                col = self._doc_idx[docnos[i]]
+                self._mat[row, col] = np.float32(fresh[j])
+                scores[i] = fresh[j]
+            self._mat.flush()
+            self.stats.inserts += len(miss_idx)
+
+        return add_ranks(inp.assign(score=scores))

@@ -1,0 +1,165 @@
+"""KeyValueCache — row-wise key→value memoization (paper §4.1).
+
+Maps one or more *key* columns to one or more *value* columns under the
+assumption that rows are independent and values depend only on keys.
+Suitable for Q→Q / D→D stages (query/document rewriters, Doc2Query).
+
+Implementation matches the paper: a SQLite database whose keys and
+values are pickled blobs.  Rows that miss are batched through the
+wrapped transformer, inserted, and merged back in position.
+"""
+from __future__ import annotations
+
+import sqlite3
+import os
+from typing import Any, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.frame import ColFrame
+from .base import (CacheMissError, CacheTransformer, pickle_key,
+                   pickle_value, unpickle_value)
+
+__all__ = ["KeyValueCache"]
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS kv (
+  key   BLOB PRIMARY KEY,
+  value BLOB NOT NULL
+) WITHOUT ROWID;
+"""
+
+
+class KeyValueCache(CacheTransformer):
+    """Row-by-row key→value cache backed by SQLite."""
+
+    def __init__(self, path: Optional[str] = None, transformer: Any = None,
+                 *, key: Any = "text", value: Any = "text",
+                 verify_fraction: float = 0.0):
+        super().__init__(path, transformer, verify_fraction=verify_fraction)
+        self.key_cols: Tuple[str, ...] = \
+            (key,) if isinstance(key, str) else tuple(key)
+        self.value_cols: Tuple[str, ...] = \
+            (value,) if isinstance(value, str) else tuple(value)
+        self._db = sqlite3.connect(os.path.join(self.path, "kv.sqlite3"))
+        self._db.executescript(_SCHEMA)
+        # bulk lookups are much faster with a page cache
+        self._db.execute("PRAGMA cache_size = -65536")
+        self._db.execute("PRAGMA journal_mode = WAL")
+        self._db.execute("PRAGMA synchronous = NORMAL")
+
+    # -- backend -------------------------------------------------------------
+    def _close_backend(self):
+        try:
+            self._db.close()
+        except Exception:
+            pass
+
+    def _get_many(self, keys: List[bytes]) -> List[Optional[bytes]]:
+        out: List[Optional[bytes]] = [None] * len(keys)
+        CHUNK = 900  # sqlite var limit is 999
+        pos = {k: i for i, k in enumerate(keys)}
+        for lo in range(0, len(keys), CHUNK):
+            chunk = keys[lo:lo + CHUNK]
+            q = ("SELECT key, value FROM kv WHERE key IN (%s)"
+                 % ",".join("?" * len(chunk)))
+            for k, v in self._db.execute(q, chunk):
+                out[pos[bytes(k)]] = bytes(v)
+        return out
+
+    def _put_many(self, items: Iterable[Tuple[bytes, bytes]]):
+        with self._db:
+            self._db.executemany(
+                "INSERT OR REPLACE INTO kv (key, value) VALUES (?, ?)", items)
+
+    def __len__(self) -> int:
+        (n,) = self._db.execute("SELECT COUNT(*) FROM kv").fetchone()
+        return int(n)
+
+    # -- transform -----------------------------------------------------------
+    def _keys_of(self, frame: ColFrame) -> List[bytes]:
+        cols = [frame[c].tolist() for c in self.key_cols]
+        return [pickle_key(t) for t in zip(*cols)] if len(frame) else []
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        if len(inp) == 0:
+            return inp
+        keys = self._keys_of(inp)
+        found = self._get_many(keys)
+        miss_idx = [i for i, v in enumerate(found) if v is None]
+        self.stats.hits += len(keys) - len(miss_idx)
+        self.stats.misses += len(miss_idx)
+
+        values: List[Optional[Tuple]] = \
+            [unpickle_value(v) if v is not None else None for v in found]
+
+        if miss_idx:
+            t = self._require_transformer(len(miss_idx))
+            # dedup identical keys within the miss batch
+            uniq: dict = {}
+            for i in miss_idx:
+                uniq.setdefault(keys[i], []).append(i)
+            rep_rows = [idxs[0] for idxs in uniq.values()]
+            miss_frame = inp.take(np.asarray(rep_rows, dtype=np.int64))
+            out = t(miss_frame)
+            if len(out) != len(rep_rows):
+                raise ValueError(
+                    f"KeyValueCache: wrapped transformer returned {len(out)} "
+                    f"rows for {len(rep_rows)} inputs — KeyValueCache "
+                    f"requires a row-wise (1:1) transformer")
+            new_items = []
+            for j, (k, idxs) in enumerate(uniq.items()):
+                val = tuple(out[c][j] for c in self.value_cols)
+                new_items.append((k, pickle_value(val)))
+                for i in idxs:
+                    values[i] = val
+            self._put_many(new_items)
+            self.stats.inserts += len(new_items)
+
+        if self.verify_fraction > 0 and len(keys) > len(miss_idx):
+            self._verify(inp, keys, values, miss_idx)
+
+        out_frame = inp
+        for ci, c in enumerate(self.value_cols):
+            col = np.empty(len(inp), dtype=object)
+            col[:] = [v[ci] for v in values]
+            # preserve numeric dtype when possible
+            try:
+                col = col.astype(np.float64) if all(
+                    isinstance(x, (int, float, np.floating, np.integer))
+                    for x in col.tolist()) else col
+            except Exception:
+                pass
+            out_frame = out_frame.assign(**{c: col})
+        return out_frame
+
+    # -- determinism verification (beyond paper §6) ---------------------------
+    def _verify(self, inp: ColFrame, keys: List[bytes],
+                values: List[Optional[Tuple]], miss_idx: List[int]):
+        t = self.transformer
+        if t is None:
+            return
+        hit_idx = [i for i in range(len(keys)) if i not in set(miss_idx)]
+        rng = np.random.default_rng(0)
+        n = max(1, int(len(hit_idx) * self.verify_fraction))
+        sample = rng.choice(hit_idx, size=min(n, len(hit_idx)), replace=False)
+        frame = inp.take(np.asarray(sample, dtype=np.int64))
+        fresh = t(frame)
+        for j, i in enumerate(sample):
+            got = tuple(fresh[c][j] for c in self.value_cols)
+            exp = values[i]
+            ok = all(_val_eq(g, e) for g, e in zip(got, exp))
+            if not ok:
+                raise AssertionError(
+                    f"KeyValueCache determinism violation at key index {i}: "
+                    f"cached {exp!r} vs fresh {got!r}")
+        self.stats.verified += len(sample)
+
+
+def _val_eq(a, b) -> bool:
+    if isinstance(a, (float, np.floating)) and isinstance(b, (float, np.floating)):
+        return bool(np.isclose(a, b, rtol=1e-5, atol=1e-6))
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        return bool(np.allclose(np.asarray(a), np.asarray(b),
+                                rtol=1e-5, atol=1e-6))
+    return a == b

@@ -1,0 +1,94 @@
+"""RetrieverCache — one input row → many output rows (paper §4.3).
+
+Caches whole per-query result frames.  Implementation matches the
+paper: a ``dbm`` database whose keys are SHA256 hashes of the pickled
+key tuple and whose values are compressed pickles of the value frame.
+(The paper compresses with LZ4; LZ4 is unavailable offline so we use
+zlib level 1 — same interface, same asymptotics; noted in DESIGN.md.)
+"""
+from __future__ import annotations
+
+import dbm
+import hashlib
+import os
+import pickle
+import zlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.frame import ColFrame
+from .base import CacheMissError, CacheTransformer, pickle_key
+
+__all__ = ["RetrieverCache"]
+
+
+class RetrieverCache(CacheTransformer):
+    """Caches the full result frame per input row (keyed ⟨qid,query⟩)."""
+
+    def __init__(self, path: Optional[str] = None, retriever: Any = None,
+                 *, key: Any = ("qid", "query"),
+                 verify_fraction: float = 0.0):
+        super().__init__(path, retriever, verify_fraction=verify_fraction)
+        self.key_cols: Tuple[str, ...] = \
+            (key,) if isinstance(key, str) else tuple(key)
+        self._db = dbm.open(os.path.join(self.path, "retriever.db"), "c")
+
+    def _close_backend(self):
+        try:
+            self._db.close()
+        except Exception:
+            pass
+
+    # -- encoding ----------------------------------------------------------
+    @staticmethod
+    def _hash_key(key_tuple: Tuple) -> bytes:
+        return hashlib.sha256(pickle_key(key_tuple)).digest()
+
+    @staticmethod
+    def _encode_frame(rows: List[dict]) -> bytes:
+        return zlib.compress(
+            pickle.dumps(rows, protocol=pickle.HIGHEST_PROTOCOL), 1)
+
+    @staticmethod
+    def _decode_frame(blob: bytes) -> List[dict]:
+        return pickle.loads(zlib.decompress(blob))
+
+    def __len__(self) -> int:
+        return len(self._db.keys())
+
+    # -- transform ----------------------------------------------------------
+    def transform(self, inp: ColFrame) -> ColFrame:
+        if len(inp) == 0:
+            return inp
+        key_tuples = inp.key_tuples(list(self.key_cols))
+        hashes = [self._hash_key(k) for k in key_tuples]
+        results: List[Optional[List[dict]]] = []
+        miss_idx: List[int] = []
+        for i, h in enumerate(hashes):
+            blob = self._db.get(h)
+            if blob is None:
+                results.append(None)
+                miss_idx.append(i)
+            else:
+                results.append(self._decode_frame(blob))
+        self.stats.hits += len(hashes) - len(miss_idx)
+        self.stats.misses += len(miss_idx)
+
+        if miss_idx:
+            t = self._require_transformer(len(miss_idx))
+            sub = inp.take(np.asarray(miss_idx, dtype=np.int64))
+            out = t(sub)
+            groups = out.group_indices(list(self.key_cols)) if len(out) else {}
+            for i in miss_idx:
+                k = key_tuples[i]
+                idxs = groups.get(k)
+                rows = out.take(idxs).to_dicts() if idxs is not None else []
+                self._db[hashes[i]] = self._encode_frame(rows)
+                results[i] = rows
+            self.stats.inserts += len(miss_idx)
+
+        all_rows: List[dict] = []
+        for rows in results:
+            all_rows.extend(rows or [])
+        return ColFrame.from_dicts(all_rows)

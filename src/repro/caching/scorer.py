@@ -1,0 +1,42 @@
+"""ScorerCache — caching pointwise scorer/reranker results (paper §4.2).
+
+Pointwise scorers assign each document a new score independently (the
+probability ranking principle), so ``(query, docno) → score`` caching is
+sound.  After merging cached + fresh scores the rank column is
+re-assigned.  The key/value columns can be overridden (e.g.
+``("qid","docno","query","text")`` to be robust to query/text rewriting,
+exactly as §2.1 discusses).
+
+Not applicable to pairwise/listwise scorers (DuoT5) or adaptive
+rerankers — their scores depend on the candidate pool; such transformers
+carry ``cacheable=False`` and ``auto_cache`` refuses to wrap them.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.frame import ColFrame
+from ..core.pipeline import add_ranks
+from .kv import KeyValueCache
+
+__all__ = ["ScorerCache"]
+
+
+class ScorerCache(KeyValueCache):
+    """(query, docno) → score cache with rank re-assignment."""
+
+    def __init__(self, path: Optional[str] = None, transformer: Any = None,
+                 *, key: Any = ("query", "docno"), value: Any = ("score",),
+                 verify_fraction: float = 0.0):
+        super().__init__(path, transformer, key=key, value=value,
+                         verify_fraction=verify_fraction)
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        if len(inp) == 0:
+            return inp
+        out = super().transform(inp)
+        score = np.asarray(out["score"], dtype=np.float64)
+        out = out.assign(score=score)
+        return add_ranks(out)

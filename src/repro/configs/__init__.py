@@ -1,0 +1,5 @@
+from .registry import ARCHS, get_arch, all_cells
+from .base import ArchDef, Cell, LM_SHAPES, GNN_SHAPES, RECSYS_SHAPES
+
+__all__ = ["ARCHS", "get_arch", "all_cells", "ArchDef", "Cell",
+           "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES"]

@@ -1,0 +1,577 @@
+"""Arch/shape cell builders for the dry-run and smoke tests.
+
+Every assigned architecture is an ``ArchDef``; every (arch × shape)
+pair builds a ``Cell``: a step function + abstract (ShapeDtypeStruct)
+inputs + input/output shardings for a given mesh.  Lowering a Cell on
+the production mesh IS the multi-pod dry-run.
+
+Shape semantics per the assignment:
+* LM ``train_*``   -> train_step (fwd+bwd+AdamW)
+* LM ``prefill_*`` -> prefill (forward, builds KV cache)
+* LM ``decode_*`` / ``long_*`` -> decode_step (1 token vs KV cache)
+* GNN / recsys ``train*`` -> train_step; ``serve*``/``retrieval*`` ->
+  forward-only serving step.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distrib.shardings import ShardingRules, batch_axes
+from ..models import lm as LM
+from ..models import gcn as GCN
+from ..models import recsys as RS
+from ..models.common import ParamSpec, abstract_params, init_params
+from ..train.optimizer import AdamWConfig, adamw_state_specs
+from ..train.loop import make_train_step
+
+__all__ = ["ArchDef", "Cell", "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES",
+           "lm_arch", "gnn_arch", "recsys_arch"]
+
+
+def _sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+@dataclass
+class Cell:
+    """One dry-run cell: arch × shape, ready to lower on a mesh."""
+    arch: str
+    shape: str
+    kind: str                                  # train|prefill|decode|serve
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    #: per-arg: either a ParamSpec pytree (resolved via rules) or a
+    #: callable (mesh, rules) -> sharding pytree, or None (replicated)
+    arg_spec_trees: Tuple[Any, ...]
+    out_spec_trees: Optional[Tuple[Any, ...]] = None
+    donate_argnums: Tuple[int, ...] = ()
+    notes: str = ""
+
+    def shardings(self, mesh: Mesh, rules: ShardingRules):
+        def resolve(tree, args_abs):
+            if tree is None:
+                return jax.tree.map(
+                    lambda _: NamedSharding(mesh, P()), args_abs)
+            if callable(tree):
+                return tree(mesh, rules)
+            return rules.tree_shardings(tree, mesh)
+        ins = tuple(resolve(t, a) for t, a in
+                    zip(self.arg_spec_trees, self.abstract_args))
+        outs = None
+        if self.out_spec_trees is not None:
+            outs = tuple(resolve(t, None) if not callable(t) and t is not None
+                         else (t(mesh, rules) if callable(t) else None)
+                         for t in self.out_spec_trees)
+        return ins, outs
+
+    def lower(self, mesh: Mesh, rules: Optional[ShardingRules] = None):
+        from ..models.common import activation_sharding
+        rules = rules or ShardingRules()
+        in_sh, out_sh = self.shardings(mesh, rules)
+        jit_kwargs: Dict[str, Any] = {"in_shardings": in_sh}
+        if out_sh is not None:
+            jit_kwargs["out_shardings"] = out_sh
+        if self.donate_argnums:
+            jit_kwargs["donate_argnums"] = self.donate_argnums
+        with mesh, activation_sharding(mesh, rules.spec_for):
+            jitted = jax.jit(self.fn, **jit_kwargs)
+            return jitted.lower(*self.abstract_args)
+
+
+@dataclass
+class ArchDef:
+    name: str
+    family: str                    # lm | gnn | recsys
+    config: Any
+    source: str = ""
+    notes: str = ""
+    cell_builder: Optional[Callable] = None
+    smoke_builder: Optional[Callable] = None
+
+    def shape_names(self) -> List[str]:
+        return list({"lm": LM_SHAPES, "gnn": GNN_SHAPES,
+                     "recsys": RECSYS_SHAPES}[self.family])
+
+    def cell(self, shape_name: str, **overrides) -> Cell:
+        return self.cell_builder(self, shape_name, **overrides)
+
+    def smoke(self):
+        """(reduced config, callable() -> dict of output arrays)."""
+        return self.smoke_builder(self)
+
+
+# ---------------------------------------------------------------------------
+# shape tables (from the assignment)
+# ---------------------------------------------------------------------------
+
+LM_SHAPES: Dict[str, Dict] = {
+    "train_4k":    dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k":  dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k":   dict(seq_len=524288, global_batch=1, kind="decode",
+                        window=8192),
+}
+
+GNN_SHAPES: Dict[str, Dict] = {
+    "full_graph_sm": dict(kind="train", n_nodes=2708, n_edges=10556,
+                          d_feat=1433, n_classes=7),
+    "minibatch_lg":  dict(kind="train_sampled", n_nodes=232965,
+                          n_edges=114615892, batch_nodes=1024,
+                          fanouts=(15, 10), d_feat=602, n_classes=41),
+    "ogb_products":  dict(kind="train", n_nodes=2449029, n_edges=61859140,
+                          d_feat=100, n_classes=47),
+    "molecule":      dict(kind="train_mol", n_nodes=30, n_edges=64,
+                          batch=128, d_feat=64, n_classes=10),
+}
+
+RECSYS_SHAPES: Dict[str, Dict] = {
+    "train_batch":    dict(kind="train", batch=65536),
+    "serve_p99":      dict(kind="serve", batch=512),
+    "serve_bulk":     dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1,
+                           n_candidates=1_000_000),
+}
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _batch_sharding_fn(ndim: int, dim0: Optional[int] = None):
+    """Shard dim0 over the batch mesh axes, pruning on indivisibility
+    (long_500k has global_batch=1: batch stays replicated)."""
+    def f(mesh, rules):
+        ax = list(batch_axes(mesh))
+        if dim0 is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            while ax and dim0 % int(np.prod([sizes[a] for a in ax])):
+                ax.pop()
+        spec = P(tuple(ax) if len(ax) > 1 else (ax[0] if ax else None),
+                 *([None] * (ndim - 1)))
+        return NamedSharding(mesh, spec)
+    return f
+
+
+def _batch_tree_fn(tree_shapes: Dict[str, int]):
+    """dict field -> ndim; shards dim0 on batch axes (if divisible)."""
+    def f(mesh, rules):
+        ax = batch_axes(mesh)
+        out = {}
+        for k, meta in tree_shapes.items():
+            ndim, dim0 = meta
+            n = int(np.prod([dict(zip(mesh.axis_names,
+                                      mesh.devices.shape))[a] for a in ax])) \
+                if ax else 1
+            use = ax if (n and dim0 % max(n, 1) == 0) else ()
+            spec = P(use if len(use) > 1 else (use[0] if use else None),
+                     *([None] * (ndim - 1)))
+            out[k] = NamedSharding(mesh, spec)
+        return out
+    return f
+
+
+def _lm_cell(arch: "ArchDef", shape_name: str, *,
+             rules: Optional[ShardingRules] = None,
+             cfg_overrides: Optional[Dict] = None,
+             opt_cfg: Optional[AdamWConfig] = None) -> Cell:
+    sh = LM_SHAPES[shape_name]
+    cfg: LM.LMConfig = arch.config
+    S, B, kind = sh["seq_len"], sh["global_batch"], sh["kind"]
+    if "window" in sh:
+        cfg = replace(cfg, attn_window=sh["window"])
+    if cfg_overrides:
+        cfg = replace(cfg, **cfg_overrides)
+    opt_cfg = opt_cfg or AdamWConfig()
+    specs = LM.param_specs(cfg)
+    params_abs = abstract_params(specs)
+
+    if kind == "train":
+        loss = lambda p, b: LM.causal_lm_loss(p, b, cfg)
+        step_fn, _ = make_train_step(loss, opt_cfg)
+        opt_specs = {"adam": adamw_state_specs(specs,
+                                               opt_cfg.moment_dtype)}
+        opt_abs = abstract_params(opt_specs)
+        batch_abs = {"tokens": _sds((B, S)), "labels": _sds((B, S))}
+        batch_fn = _batch_tree_fn({"tokens": (2, B), "labels": (2, B)})
+        return Cell(arch.name, shape_name, kind, step_fn,
+                    (params_abs, opt_abs, batch_abs),
+                    (specs, opt_specs, batch_fn),
+                    out_spec_trees=(specs, opt_specs, None),
+                    donate_argnums=(0, 1))
+
+    if kind == "prefill":
+        fn = lambda p, t: LM.prefill(p, t, cfg)
+        return Cell(arch.name, shape_name, kind, fn,
+                    (params_abs, _sds((B, S))),
+                    (specs, _batch_sharding_fn(2, B)))
+
+    # decode
+    cache_specs = LM.init_cache_specs(cfg, B, S)
+    cache_abs = abstract_params(cache_specs)
+    fn = lambda p, c, t, pos: LM.decode_one(p, c, t, pos, cfg)
+    return Cell(arch.name, shape_name, "decode", fn,
+                (params_abs, cache_abs, _sds((B,)),
+                 jax.ShapeDtypeStruct((), jnp.int32)),
+                (specs, cache_specs, _batch_sharding_fn(1, B), None),
+                donate_argnums=(1,),
+                notes=("windowed-attention variant (published config is "
+                       "full attention; see DESIGN.md §long-context)"
+                       if "window" in sh else ""))
+
+
+def _strip_layer_dim(s: ParamSpec) -> ParamSpec:
+    return ParamSpec(s.shape[1:], s.logical_axes[1:], s.dtype, init=s.init)
+
+
+def lm_layer_probe(arch: "ArchDef", shape_name: str,
+                   cfg_overrides: Optional[Dict] = None) -> Cell:
+    """Single-layer probe cell for while-body cost correction.
+
+    XLA cost_analysis counts a while (scan) body once regardless of trip
+    count, so the full scanned module under-reports per-layer FLOPs /
+    bytes / collective traffic by ×L.  The dry-run compiles this probe —
+    one transformer block at the cell's exact activation shapes and
+    shardings (chunk loop unrolled) — and corrects:
+
+        total ≈ scanned_module + (L - 1) × probe
+    """
+    sh = LM_SHAPES[shape_name]
+    cfg: LM.LMConfig = arch.config
+    S, B, kind = sh["seq_len"], sh["global_batch"], sh["kind"]
+    if "window" in sh:
+        cfg = replace(cfg, attn_window=sh["window"])
+    if cfg_overrides:
+        cfg = replace(cfg, **cfg_overrides)
+    cfg = replace(cfg, scan_layers=False)   # unroll the chunk loop
+    layer_specs = jax.tree.map(
+        _strip_layer_dim, LM.param_specs(cfg)["layers"],
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+    layer_abs = abstract_params(layer_specs)
+    D = cfg.d_model
+
+    if kind in ("train", "prefill"):
+        x_abs = jax.ShapeDtypeStruct((B, S, D), cfg.dtype)
+        if kind == "train":
+            def fn(x, layer):
+                def proxy(args):
+                    out, aux, _ = LM.layer_forward(args[0], args[1], cfg)
+                    return jnp.sum(out.astype(jnp.float32)) + aux
+                body = jax.checkpoint(
+                    proxy, policy=jax.checkpoint_policies.nothing_saveable) \
+                    if cfg.remat == "full" else proxy
+                return jax.grad(body)((x, layer))
+        else:
+            def fn(x, layer):
+                out, _, kv = LM.layer_forward(x, layer, cfg, collect_kv=True)
+                return out, kv
+        return Cell(arch.name, shape_name, f"probe_{kind}", fn,
+                    (x_abs, layer_abs),
+                    (_batch_sharding_fn(3, B), layer_specs))
+
+    # decode probe
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    x_abs = jax.ShapeDtypeStruct((B, D), cfg.dtype)
+    cache_spec = ParamSpec((B, S, K, hd),
+                           ("batch", "kv_seq", "kv_heads", "head_dim"),
+                           cfg.dtype, init="zeros")
+    cache_abs = jax.ShapeDtypeStruct((B, S, K, hd), cfg.dtype)
+
+    def fn(x, layer, kc, vc, pos):
+        return LM.layer_decode(x, layer, kc, vc, pos, cfg)
+
+    return Cell(arch.name, shape_name, "probe_decode", fn,
+                (x_abs, layer_abs, cache_abs, cache_abs,
+                 jax.ShapeDtypeStruct((), jnp.int32)),
+                (_batch_sharding_fn(2, B), layer_specs, cache_spec,
+                 cache_spec, None))
+
+
+def _lm_smoke(arch: "ArchDef"):
+    cfg: LM.LMConfig = arch.config
+    small = replace(cfg, n_layers=2,
+                    d_model=max(64, cfg.head_dim * min(cfg.n_heads, 4)),
+                    n_heads=min(cfg.n_heads, 4),
+                    n_kv_heads=min(cfg.n_kv_heads,
+                                   max(1, min(cfg.n_heads, 4) // 2)),
+                    d_head=min(cfg.head_dim, 32), d_ff=128,
+                    vocab_size=512, vocab_pad_multiple=128,
+                    n_experts=min(cfg.n_experts, 4) if cfg.is_moe else 0,
+                    top_k=min(cfg.top_k, 2) if cfg.is_moe else 0,
+                    dtype=jnp.float32, remat="none")
+
+    def run():
+        params = init_params(LM.param_specs(small), jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (2, 16), 0,
+                                  small.vocab_size)
+        logits, _ = LM.forward(params, toks, small)
+        loss = LM.causal_lm_loss(params, {"tokens": toks, "labels": toks},
+                                 small)
+        lg, cache = LM.prefill(params, toks, small)
+        cache = jax.tree.map(
+            lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, 8), (0, 0), (0, 0))),
+            cache)
+        lg2, _ = LM.decode_one(params, cache, toks[:, -1], jnp.int32(16),
+                               small)
+        return {"logits": logits, "loss": loss, "prefill_logits": lg,
+                "decode_logits": lg2}
+
+    return small, run
+
+
+def lm_arch(name: str, cfg: LM.LMConfig, source: str = "",
+            notes: str = "") -> ArchDef:
+    return ArchDef(name, "lm", cfg, source, notes,
+                   cell_builder=_lm_cell, smoke_builder=_lm_smoke)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_cell(arch: "ArchDef", shape_name: str) -> Cell:
+    sh = GNN_SHAPES[shape_name]
+    cfg: GCN.GCNConfig = replace(arch.config, d_feat=sh["d_feat"],
+                                 n_classes=sh["n_classes"]) \
+        if shape_name != "molecule" else \
+        replace(arch.config, d_feat=sh["d_feat"], n_classes=sh["n_classes"])
+    specs = GCN.gcn_param_specs(cfg)
+    params_abs = abstract_params(specs)
+    opt_specs = {"adam": adamw_state_specs(specs)}
+    opt_abs = abstract_params(opt_specs)
+
+    if sh["kind"] == "train":
+        Np = _pad_to(sh["n_nodes"], 512)
+        Ep = _pad_to(sh["n_edges"], 512)
+        loss = lambda p, b: GCN.gcn_full_graph_loss(p, b, cfg)
+        step_fn, _ = make_train_step(loss, AdamWConfig())
+        batch_abs = {"feats": _sds((Np, cfg.d_feat), jnp.float32),
+                     "src": _sds((Ep,)), "dst": _sds((Ep,)),
+                     "deg": _sds((Np,), jnp.float32),
+                     "labels": _sds((Np,)),
+                     "label_mask": _sds((Np,), jnp.float32)}
+
+        def bsh(mesh, rules):
+            node = NamedSharding(mesh, rules.spec_for(
+                (Np,), ("nodes",), mesh))
+            node2 = NamedSharding(mesh, rules.spec_for(
+                (Np, cfg.d_feat), ("nodes", None), mesh))
+            edge = NamedSharding(mesh, rules.spec_for(
+                (Ep,), ("edges",), mesh))
+            return {"feats": node2, "src": edge, "dst": edge, "deg": node,
+                    "labels": node, "label_mask": node}
+
+        return Cell(arch.name, shape_name, "train", step_fn,
+                    (params_abs, opt_abs, batch_abs),
+                    (specs, opt_specs, bsh),
+                    out_spec_trees=(specs, opt_specs, None),
+                    donate_argnums=(0, 1))
+
+    if sh["kind"] == "train_sampled":
+        B = sh["batch_nodes"]
+        f1, f2 = sh["fanouts"]
+        loss = lambda p, b: GCN.gcn_sampled_loss(p, b, cfg)
+        step_fn, _ = make_train_step(loss, AdamWConfig())
+        F = cfg.d_feat
+        batch_abs = {"feats_hop0": _sds((B, F), jnp.float32),
+                     "feats_hop1": _sds((B, f1, F), jnp.float32),
+                     "feats_hop2": _sds((B, f1, f2, F), jnp.float32),
+                     "labels": _sds((B,))}
+        batch_fn = _batch_tree_fn({k: (len(s.shape), B) for k, s in
+                                   batch_abs.items()})
+        return Cell(arch.name, shape_name, "train", step_fn,
+                    (params_abs, opt_abs, batch_abs),
+                    (specs, opt_specs, batch_fn),
+                    out_spec_trees=(specs, opt_specs, None),
+                    donate_argnums=(0, 1))
+
+    # molecule: batched small graphs
+    G, N, E = sh["batch"], sh["n_nodes"], sh["n_edges"]
+    loss = lambda p, b: GCN.gcn_molecule_loss(p, b, cfg)
+    step_fn, _ = make_train_step(loss, AdamWConfig())
+    batch_abs = {"feats": _sds((G, N, cfg.d_feat), jnp.float32),
+                 "src": _sds((G, E)), "dst": _sds((G, E)),
+                 "deg": _sds((G, N), jnp.float32), "labels": _sds((G,))}
+    batch_fn = _batch_tree_fn({k: (len(s.shape), G)
+                               for k, s in batch_abs.items()})
+    return Cell(arch.name, shape_name, "train", step_fn,
+                (params_abs, opt_abs, batch_abs),
+                (specs, opt_specs, batch_fn),
+                out_spec_trees=(specs, opt_specs, None),
+                donate_argnums=(0, 1))
+
+
+def _gnn_smoke(arch: "ArchDef"):
+    cfg = replace(arch.config, d_feat=32, n_classes=7)
+
+    def run():
+        rng = np.random.default_rng(0)
+        params = init_params(GCN.gcn_param_specs(cfg), jax.random.key(0))
+        N, E = 64, 256
+        src = jnp.array(rng.integers(0, N, E), jnp.int32)
+        dst = jnp.array(rng.integers(0, N, E), jnp.int32)
+        batch = {"feats": jnp.array(rng.normal(size=(N, 32)), jnp.float32),
+                 "src": src, "dst": dst,
+                 "deg": jnp.array(np.bincount(np.asarray(dst),
+                                              minlength=N) + 1, jnp.float32),
+                 "labels": jnp.array(rng.integers(0, 7, N), jnp.int32),
+                 "label_mask": jnp.ones(N, jnp.float32)}
+        loss = GCN.gcn_full_graph_loss(params, batch, cfg)
+        logits = GCN.gcn_full_graph_logits(
+            params, batch["feats"], src, dst, batch["deg"], cfg)
+        return {"loss": loss, "logits": logits}
+
+    return cfg, run
+
+
+def gnn_arch(name: str, cfg: GCN.GCNConfig, source: str = "",
+             notes: str = "") -> ArchDef:
+    return ArchDef(name, "gnn", cfg, source, notes,
+                   cell_builder=_gnn_cell, smoke_builder=_gnn_smoke)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_batch_abs(cfg: RS.RecsysConfig, B: int) -> Dict:
+    if cfg.kind in ("dlrm", "dcn"):
+        return {"dense": _sds((B, cfg.n_dense), jnp.float32),
+                "sparse": _sds((B, cfg.n_sparse)),
+                "labels": _sds((B,))}
+    if cfg.kind == "mind":
+        return {"hist_ids": _sds((B, cfg.hist_len)),
+                "hist_mask": _sds((B, cfg.hist_len), jnp.float32),
+                "target_ids": _sds((B,))}
+    if cfg.kind == "two_tower":
+        return {"user_ids": _sds((B,)), "item_ids": _sds((B,))}
+    raise ValueError(cfg.kind)
+
+
+def _recsys_cell(arch: "ArchDef", shape_name: str) -> Cell:
+    sh = RECSYS_SHAPES[shape_name]
+    cfg: RS.RecsysConfig = arch.config
+    specs = RS.recsys_param_specs(cfg)
+    params_abs = abstract_params(specs)
+
+    if sh["kind"] == "train":
+        B = sh["batch"]
+        loss = lambda p, b: RS.recsys_train_loss(p, b, cfg)
+        step_fn, _ = make_train_step(loss, AdamWConfig())
+        opt_specs = {"adam": adamw_state_specs(specs)}
+        batch_abs = _recsys_batch_abs(cfg, B)
+        batch_fn = _batch_tree_fn({k: (len(s.shape), B)
+                                   for k, s in batch_abs.items()})
+        return Cell(arch.name, shape_name, "train", step_fn,
+                    (params_abs, abstract_params(opt_specs), batch_abs),
+                    (specs, opt_specs, batch_fn),
+                    out_spec_trees=(specs, opt_specs, None),
+                    donate_argnums=(0, 1))
+
+    if sh["kind"] == "serve":
+        B = sh["batch"]
+        fn = lambda p, b: RS.recsys_serve(p, b, cfg)
+        batch_abs = _recsys_batch_abs(cfg, B)
+        if cfg.kind == "two_tower":   # score user against the paired item
+            batch_abs = {"user_ids": _sds((B,)), "cand_ids": _sds((B,))}
+            fn = lambda p, b: RS.two_tower_retrieval_scores(p, b, cfg)
+        batch_fn = _batch_tree_fn({k: (len(s.shape), s.shape[0])
+                                   for k, s in batch_abs.items()})
+        return Cell(arch.name, shape_name, "serve", fn,
+                    (params_abs, batch_abs), (specs, batch_fn))
+
+    # retrieval_cand: one query scored against n_candidates
+    N = sh["n_candidates"]
+    if cfg.kind == "two_tower":
+        batch_abs = {"user_ids": _sds((1,)), "cand_ids": _sds((N,))}
+        fn = lambda p, b: RS.two_tower_retrieval_scores(p, b, cfg)
+    elif cfg.kind == "mind":
+        batch_abs = {"hist_ids": _sds((1, cfg.hist_len)),
+                     "hist_mask": _sds((1, cfg.hist_len), jnp.float32),
+                     "target_ids": _sds((N,))}
+
+        def fn(p, b, _cfg=cfg):
+            u = RS.mind_interests(p, b["hist_ids"], b["hist_mask"], _cfg)
+            t = jnp.take(p["item_embed"], b["target_ids"], axis=0,
+                         mode="clip")
+            return jnp.einsum("qkd,nd->qkn", u, t).max(axis=1)
+    else:   # dlrm/dcn: broadcast one user over N candidate rows
+        batch_abs = _recsys_batch_abs(cfg, N)
+        batch_abs.pop("labels")
+        fn = (lambda p, b: RS.recsys_serve(
+            p, {**b, "labels": None}, cfg)) if False else \
+            (lambda p, b: jax.nn.sigmoid(
+                (RS.dlrm_forward if cfg.kind == "dlrm" else RS.dcn_forward)(
+                    p, b, cfg)))
+    batch_fn = _batch_tree_fn({k: (len(s.shape), s.shape[0])
+                               for k, s in batch_abs.items()})
+    return Cell(arch.name, shape_name, "serve", fn,
+                (params_abs, batch_abs), (specs, batch_fn))
+
+
+def _recsys_smoke(arch: "ArchDef"):
+    cfg: RS.RecsysConfig = arch.config
+    embed_small = min(cfg.embed_dim, 8)
+    small = replace(
+        cfg,
+        vocab_sizes=tuple(min(v, 64) for v in cfg.vocab_sizes),
+        embed_dim=embed_small,
+        # DLRM invariant: bottom-MLP output dim == embed_dim
+        bot_mlp=(tuple(min(x, 16) for x in cfg.bot_mlp[:-1])
+                 + (embed_small,)) if cfg.bot_mlp else (),
+        top_mlp=tuple(min(x, 16) for x in cfg.top_mlp),
+        deep_mlp=tuple(min(x, 16) for x in cfg.deep_mlp),
+        tower_mlp=tuple(min(x, 16) for x in cfg.tower_mlp),
+        item_vocab=min(cfg.item_vocab, 128),
+        user_vocab=min(cfg.user_vocab, 128),
+        hist_len=min(cfg.hist_len, 8))
+
+    def run():
+        rng = np.random.default_rng(0)
+        params = init_params(RS.recsys_param_specs(small), jax.random.key(0))
+        B = 16
+        if small.kind in ("dlrm", "dcn"):
+            batch = {"dense": jnp.array(rng.normal(size=(B, small.n_dense)),
+                                        jnp.float32),
+                     "sparse": jnp.array(
+                         rng.integers(0, min(small.vocab_sizes),
+                                      (B, small.n_sparse)), jnp.int32),
+                     "labels": jnp.array(rng.integers(0, 2, B), jnp.int32)}
+        elif small.kind == "mind":
+            batch = {"hist_ids": jnp.array(
+                rng.integers(0, small.item_vocab, (B, small.hist_len)),
+                jnp.int32),
+                "hist_mask": jnp.ones((B, small.hist_len), jnp.float32),
+                "target_ids": jnp.array(
+                    rng.integers(0, small.item_vocab, B), jnp.int32)}
+        else:
+            batch = {"user_ids": jnp.array(
+                rng.integers(0, small.user_vocab, B), jnp.int32),
+                "item_ids": jnp.array(
+                    rng.integers(0, small.item_vocab, B), jnp.int32)}
+        loss = RS.recsys_train_loss(params, batch, small)
+        if small.kind == "two_tower":
+            serve = RS.recsys_serve(params, {
+                "user_ids": batch["user_ids"][:1],
+                "cand_ids": batch["item_ids"]}, small)
+        else:
+            serve = RS.recsys_serve(params, batch, small)
+        return {"loss": loss, "serve": serve}
+
+    return small, run
+
+
+def recsys_arch(name: str, cfg: RS.RecsysConfig, source: str = "",
+                notes: str = "") -> ArchDef:
+    return ArchDef(name, "recsys", cfg, source, notes,
+                   cell_builder=_recsys_cell, smoke_builder=_recsys_smoke)

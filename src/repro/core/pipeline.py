@@ -1,0 +1,385 @@
+"""Declarative pipeline algebra (the paper's §2.1 operator language).
+
+Transformers are relations→relations functions combined with operators:
+
+    >>   then / compose            %    rank cutoff
+    +    linear combine            *    scalar product
+    **   feature union             |    set union
+    &    set intersection          ^    concatenate
+
+Design points carried from the paper:
+  * the *conceptual* pipeline is an expression tree; ``t % k`` is sugar
+    for ``t >> RankCutoff(k)`` so that prefix precomputation (§3) can
+    share ``t`` across pipelines with different cutoffs — exactly the
+    demo experiment's structure;
+  * transformers expose an equality property (structural ``signature()``)
+    — the only requirement the paper's LCP algorithm places on them;
+  * beyond the paper (§6 future work): transformers additionally declare
+    ``key_columns`` / ``value_columns`` / ``deterministic`` /
+    ``cacheable`` so caching strategies can be *inferred* and pipelines
+    statically type-checked.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .frame import ColFrame
+
+__all__ = [
+    "Transformer", "Indexer", "Compose", "RankCutoff", "LinearCombine",
+    "ScalarProduct", "FeatureUnion", "SetUnion", "SetIntersection",
+    "Concatenate", "Identity", "GenericTransformer", "SourceResults",
+    "add_ranks", "stages_of", "pipeline_hash",
+]
+
+
+def add_ranks(res: ColFrame) -> ColFrame:
+    """(Re-)assign the rank column: descending score per qid, stable."""
+    if len(res) == 0:
+        return res.assign(rank=np.empty(0, dtype=np.int64)) if "rank" not in res \
+            else res
+    ranks = np.zeros(len(res), dtype=np.int64)
+    for _, idx in res.group_indices(["qid"]).items():
+        scores = res["score"][idx].astype(np.float64)
+        docnos = res["docno"][idx]
+        order = np.lexsort((np.asarray(docnos, dtype=object).astype(str), -scores))
+        ranks[idx[order]] = np.arange(len(idx))
+    return res.assign(rank=ranks)
+
+
+class Transformer:
+    """Base class for all pipeline stages."""
+
+    #: required input / produced output columns (None = unconstrained)
+    input_columns: Optional[frozenset] = None
+    output_columns: Optional[frozenset] = None
+    #: cache-strategy metadata (beyond-paper §6 future work)
+    key_columns: Tuple[str, ...] = ()
+    value_columns: Tuple[str, ...] = ()
+    deterministic: bool = True
+    cacheable: bool = True
+    #: one-to-many stages (retrievers) need RetrieverCache not KeyValueCache
+    one_to_many: bool = False
+
+    # -- execution -----------------------------------------------------
+    def transform(self, inp: ColFrame) -> ColFrame:
+        raise NotImplementedError
+
+    def __call__(self, inp: Any) -> ColFrame:
+        frame = ColFrame.coerce(inp)
+        if self.input_columns is not None:
+            missing = self.input_columns - set(frame.columns)
+            if missing and len(frame):
+                raise TypeError(
+                    f"{self!r} expected columns {sorted(self.input_columns)}, "
+                    f"missing {sorted(missing)}")
+        return self.transform(frame)
+
+    # -- structural identity (paper §3: equality is all LCP needs) ------
+    def signature(self) -> Tuple:
+        return (type(self).__name__,)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, Transformer) and self.signature() == other.signature()
+
+    def __ne__(self, other) -> bool:
+        return not self.__eq__(other)
+
+    def __hash__(self) -> int:
+        return hash(self.signature())
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}{self.signature()[1:]}"
+
+    # -- operator language ----------------------------------------------
+    def __rshift__(self, other: "Transformer") -> "Compose":
+        return Compose([self, other])
+
+    def __mod__(self, k: int) -> "Compose":
+        return Compose([self, RankCutoff(int(k))])
+
+    def __add__(self, other: "Transformer") -> "LinearCombine":
+        return LinearCombine(self, other)
+
+    def __mul__(self, scalar: float) -> "ScalarProduct":
+        return ScalarProduct(self, float(scalar))
+
+    __rmul__ = __mul__
+
+    def __pow__(self, other: "Transformer") -> "FeatureUnion":
+        return FeatureUnion(self, other)
+
+    def __or__(self, other: "Transformer") -> "SetUnion":
+        return SetUnion(self, other)
+
+    def __and__(self, other: "Transformer") -> "SetIntersection":
+        return SetIntersection(self, other)
+
+    def __xor__(self, other: "Transformer") -> "Concatenate":
+        return Concatenate(self, other)
+
+
+class Indexer(Transformer):
+    """Terminal stage (D → ∅): consumes a corpus stream."""
+
+    def index(self, corpus_iter: Iterable[dict]) -> Any:
+        raise NotImplementedError
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        self.index(inp.to_dicts())
+        return ColFrame()
+
+
+class Compose(Transformer):
+    """``>>`` — sequential composition; flattens nested composes."""
+
+    def __init__(self, stages: Sequence[Transformer]):
+        flat: List[Transformer] = []
+        for s in stages:
+            if isinstance(s, Compose):
+                flat.extend(s.stages)
+            else:
+                flat.append(s)
+        self.stages: Tuple[Transformer, ...] = tuple(flat)
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        out = inp
+        for s in self.stages:
+            out = s(out)
+        return out
+
+    def signature(self) -> Tuple:
+        return ("Compose",) + tuple(s.signature() for s in self.stages)
+
+    def __repr__(self) -> str:
+        return " >> ".join(repr(s) for s in self.stages)
+
+    def index(self, corpus_iter: Iterable[dict]):
+        """Indexing pipeline: pass the stream through non-terminal stages,
+        then hand it to the terminal indexer (paper §4.1/§4.4 usage)."""
+        *head, last = self.stages
+        stream: Iterable[dict] = corpus_iter
+
+        def _apply(stage, it):
+            frame = ColFrame.from_dicts(it)
+            return stage(frame).to_dicts()
+
+        for stage in head:
+            if hasattr(stage, "transform_iter"):
+                stream = stage.transform_iter(stream)
+            else:
+                stream = _apply(stage, stream)
+        if not isinstance(last, Indexer) and not hasattr(last, "index"):
+            raise TypeError(f"last stage of an indexing pipeline must be an "
+                            f"Indexer, got {last!r}")
+        return last.index(stream)
+
+
+class RankCutoff(Transformer):
+    """``% k`` — keep the top-k rows per query (by rank, else score)."""
+
+    input_columns = frozenset({"qid", "docno", "score"})
+    key_columns = ("qid",)
+
+    def __init__(self, k: int):
+        self.k = int(k)
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        if len(inp) == 0:
+            return inp
+        res = inp if "rank" in inp else add_ranks(inp)
+        keep = res["rank"] < self.k
+        return res.mask(keep)
+
+    def signature(self) -> Tuple:
+        return ("RankCutoff", self.k)
+
+
+class _Binary(Transformer):
+    def __init__(self, left: Transformer, right: Transformer):
+        self.left = left
+        self.right = right
+
+    def signature(self) -> Tuple:
+        return (type(self).__name__, self.left.signature(), self.right.signature())
+
+
+class LinearCombine(_Binary):
+    """``+`` — sum query-document scores of the two result lists."""
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        a, b = self.left(inp), self.right(inp)
+        return _combine_scores(a, b, lambda x, y: x + y)
+
+
+class ScalarProduct(Transformer):
+    """``*`` — multiply scores by a scalar."""
+
+    def __init__(self, inner: Transformer, scalar: float):
+        self.inner = inner
+        self.scalar = scalar
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        res = self.inner(inp)
+        return add_ranks(res.assign(score=res["score"] * self.scalar))
+
+    def signature(self) -> Tuple:
+        return ("ScalarProduct", self.inner.signature(), self.scalar)
+
+
+class FeatureUnion(_Binary):
+    """``**`` — combine the two result lists as a features column."""
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        a, b = self.left(inp), self.right(inp)
+        keys_a = a.key_tuples(["qid", "docno"])
+        keys_b = b.key_tuples(["qid", "docno"])
+        sb = dict(zip(keys_b, b["score"].tolist()))
+        sa = dict(zip(keys_a, a["score"].tolist()))
+        all_keys = list(dict.fromkeys(keys_a + keys_b))
+        feats = np.empty(len(all_keys), dtype=object)
+        for i, k in enumerate(all_keys):
+            feats[i] = np.array([sa.get(k, 0.0), sb.get(k, 0.0)], dtype=np.float64)
+        qids = np.empty(len(all_keys), dtype=object)
+        docnos = np.empty(len(all_keys), dtype=object)
+        qids[:] = [k[0] for k in all_keys]
+        docnos[:] = [k[1] for k in all_keys]
+        out = ColFrame({"qid": qids, "docno": docnos,
+                        "score": np.array([f[0] for f in feats]),
+                        "features": feats})
+        return add_ranks(out)
+
+
+class SetUnion(_Binary):
+    """``|`` — set union of documents (scores/ranks dropped)."""
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        a, b = self.left(inp), self.right(inp)
+        merged = ColFrame.concat([a, b])
+        keep = [c for c in merged.columns if c not in ("score", "rank")]
+        return merged.select(keep).dedup(["qid", "docno"])
+
+
+class SetIntersection(_Binary):
+    """``&`` — set intersection of documents (scores/ranks dropped)."""
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        a, b = self.left(inp), self.right(inp)
+        bk = set(b.key_tuples(["qid", "docno"]))
+        mask = np.array([k in bk for k in a.key_tuples(["qid", "docno"])],
+                        dtype=bool)
+        keep = [c for c in a.columns if c not in ("score", "rank")]
+        return a.mask(mask).select(keep).dedup(["qid", "docno"])
+
+
+class Concatenate(_Binary):
+    """``^`` — append right results below the left results per query."""
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        a, b = self.left(inp), self.right(inp)
+        if len(a) == 0:
+            return add_ranks(b)
+        ak = set(a.key_tuples(["qid", "docno"]))
+        mask = np.array([k not in ak for k in b.key_tuples(["qid", "docno"])],
+                        dtype=bool)
+        b_new = b.mask(mask)
+        # offset right scores so they sort strictly below the left block
+        if len(b_new):
+            min_a = {}
+            for (qid,), idx in a.group_indices(["qid"]).items():
+                min_a[qid] = float(a["score"][idx].min())
+            max_b = {}
+            for (qid,), idx in b_new.group_indices(["qid"]).items():
+                max_b[qid] = float(b_new["score"][idx].max())
+            shift = np.array([
+                min_a.get(q, 0.0) - max_b.get(q, 0.0) - 1.0
+                for q in b_new["qid"].tolist()])
+            b_new = b_new.assign(score=b_new["score"] + shift)
+        common = [c for c in a.columns if c in b_new.columns] or list(a.columns)
+        out = ColFrame.concat([a.select(common), b_new.select(common)]) \
+            if len(b_new) else a
+        return add_ranks(out)
+
+
+class Identity(Transformer):
+    """Returns its input unchanged (paper §2.2's pass-through)."""
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        return inp
+
+
+class SourceResults(Transformer):
+    """A constant result set as a pipeline stage (paper §2.2's
+    ``pt.Transformer.from_df(res)`` pattern): joins the stored results
+    back onto the incoming queries."""
+
+    def __init__(self, results: ColFrame, name: str = "source"):
+        self.results = results
+        self.name = name
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        if len(inp) == 0 or "qid" not in inp:
+            return self.results
+        qids = set(inp["qid"].tolist())
+        mask = np.array([q in qids for q in self.results["qid"].tolist()],
+                        dtype=bool)
+        return self.results.mask(mask)
+
+    def signature(self) -> Tuple:
+        return ("SourceResults", self.name, len(self.results))
+
+
+class GenericTransformer(Transformer):
+    """Wrap a plain function as a transformer (named for equality)."""
+
+    def __init__(self, fn, name: str, *, key_columns=(), value_columns=(),
+                 one_to_many=False, cacheable=True, deterministic=True,
+                 params: Tuple = ()):
+        self.fn = fn
+        self.name = name
+        self.params = tuple(params)
+        self.key_columns = tuple(key_columns)
+        self.value_columns = tuple(value_columns)
+        self.one_to_many = one_to_many
+        self.cacheable = cacheable
+        self.deterministic = deterministic
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        return ColFrame.coerce(self.fn(inp))
+
+    def signature(self) -> Tuple:
+        return ("GenericTransformer", self.name) + self.params
+
+
+def _combine_scores(a: ColFrame, b: ColFrame, op) -> ColFrame:
+    keys_a = a.key_tuples(["qid", "docno"])
+    keys_b = b.key_tuples(["qid", "docno"])
+    sa = dict(zip(keys_a, a["score"].tolist()))
+    sb = dict(zip(keys_b, b["score"].tolist()))
+    all_keys = list(dict.fromkeys(keys_a + keys_b))
+    scores = np.array([op(sa.get(k, 0.0), sb.get(k, 0.0)) for k in all_keys])
+    qids = np.empty(len(all_keys), dtype=object)
+    docnos = np.empty(len(all_keys), dtype=object)
+    qids[:] = [k[0] for k in all_keys]
+    docnos[:] = [k[1] for k in all_keys]
+    return add_ranks(ColFrame({"qid": qids, "docno": docnos, "score": scores}))
+
+
+# ---------------------------------------------------------------------------
+# pipeline introspection helpers (used by precompute + caches)
+# ---------------------------------------------------------------------------
+
+def stages_of(pipeline: Transformer) -> Tuple[Transformer, ...]:
+    """The sequential stage decomposition used by LCP (Compose chains
+    decompose; every other node is a single opaque stage)."""
+    if isinstance(pipeline, Compose):
+        return pipeline.stages
+    return (pipeline,)
+
+
+def pipeline_hash(t: Transformer) -> str:
+    """Stable hex digest of a transformer's structural signature."""
+    return hashlib.sha256(repr(t.signature()).encode()).hexdigest()[:16]

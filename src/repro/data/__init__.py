@@ -1,0 +1,5 @@
+from .pipeline import (StepKeyedDataset, lm_synthetic, recsys_synthetic,
+                       gcn_sampled)
+
+__all__ = ["StepKeyedDataset", "lm_synthetic", "recsys_synthetic",
+           "gcn_sampled"]

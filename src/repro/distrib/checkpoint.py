@@ -1,0 +1,184 @@
+"""Sharded, atomic, async, *elastic* checkpointing.
+
+Design (1000+-node posture, dimensioned down to this container):
+
+* **content**: every leaf of (params, opt_state, extras) is saved as an
+  ``.npy`` under a flat path derived from its pytree path, plus a JSON
+  manifest (step, leaf index, shapes, dtypes).  The manifest is
+  mesh-agnostic: restore re-shards onto *any* mesh ("elastic restore"
+  — scale from 256 to 512 chips between runs without conversion).
+* **atomicity**: writes go to ``<dir>/.tmp-<step>`` and are committed
+  with a single ``os.replace`` to ``<dir>/step_<k>`` — a crash mid-save
+  never corrupts the latest checkpoint; ``latest()`` only sees
+  committed directories.
+* **async**: ``save_async`` snapshots leaves to host memory then writes
+  on a background thread, returning control to the train loop (the
+  standard MaxText/Orbax overlap); ``wait()`` joins before the next
+  save.
+* **retention**: keep the newest ``keep`` checkpoints, delete older.
+
+On a real multi-host pod each process would save only its addressable
+shards; here the single process owns everything, which keeps the commit
+protocol identical.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Checkpointer", "save_checkpoint", "restore_checkpoint",
+           "latest_step"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten_with_names(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = ".".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((name or "leaf", leaf))
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := _STEP_RE.match(d))]
+    return max(steps) if steps else None
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    """Synchronous atomic save. Returns the committed directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp-{step}-{os.getpid()}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "leaves": [], "time": time.time(),
+                "format_version": 1}
+    for i, (name, leaf) in enumerate(_flatten_with_names(tree)):
+        arr = np.asarray(leaf)          # device->host gather if sharded
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or logical_dtype not in np.sctypeDict:
+            # exotic dtypes (bfloat16, fp8) round-trip via float32
+            arr = arr.astype(np.float32)
+        fn = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["leaves"].append(
+            {"name": name, "file": fn, "shape": list(arr.shape),
+             "dtype": logical_dtype})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)              # atomic commit
+    return final
+
+
+def restore_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None,
+                       shardings: Any = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``like``.
+
+    ``shardings``: optional pytree of NamedShardings (same structure) —
+    the elastic path: leaves are device_put onto the *current* mesh
+    regardless of the mesh that saved them.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir!r}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    names_like = [n for n, _ in _flatten_with_names(like)]
+    by_name = {l["name"]: l for l in manifest["leaves"]}
+    missing = [n for n in names_like if n not in by_name]
+    if missing:
+        raise ValueError(f"checkpoint at step {step} missing leaves "
+                         f"{missing[:5]}...")
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for name, leaf, shd in zip(names_like, leaves, shard_leaves):
+        arr = np.load(os.path.join(d, by_name[name]["file"]))
+        want_dtype = getattr(leaf, "dtype", arr.dtype)
+        if str(arr.dtype) != str(want_dtype):
+            # jnp handles ml_dtypes casts (bfloat16 etc.) that numpy lacks
+            arr = np.asarray(jnp.asarray(arr).astype(want_dtype))
+        if shd is not None:
+            arr = jax.device_put(arr, shd)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class Checkpointer:
+    """Async checkpoint manager with retention."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.saves = 0
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()
+        # snapshot to host synchronously (cheap vs. disk) so the train
+        # loop can mutate its arrays immediately afterwards
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_tree)
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        self.saves += 1
+
+    def save(self, step: int, tree: Any) -> str:
+        self.wait()
+        path = save_checkpoint(self.ckpt_dir, step, tree)
+        self.saves += 1
+        self._gc()
+        return path
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        self.wait()
+        return restore_checkpoint(self.ckpt_dir, like, step, shardings)
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.ckpt_dir)
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.ckpt_dir):
+            return
+        steps = sorted(int(m.group(1)) for d in os.listdir(self.ckpt_dir)
+                       if (m := _STEP_RE.match(d)))
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s}"),
+                          ignore_errors=True)

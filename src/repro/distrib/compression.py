@@ -1,0 +1,91 @@
+"""Gradient compression with error feedback (distributed-optimization).
+
+Two compressors, both with EF (error-feedback) accumulators so the
+quantization error is re-injected next step (Karimireddy et al.,
+arXiv:1901.09847 — EF-SGD; 1-bit Adam lineage):
+
+* ``int8``  — per-tensor symmetric int8 quantization (32→8 bits on the
+  wire: 4× reduce-scatter volume);
+* ``topk``  — magnitude top-k sparsification (k fraction kept).
+
+The compress/decompress pair is applied *around the collective*: in a
+real deployment the int8 payload is what crosses ICI/DCN.  In this
+repo's single-process runs the arithmetic (and its effect on training)
+is exercised end-to-end; tests assert convergence parity within
+tolerance and exact EF bookkeeping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionConfig", "init_ef_state", "compress_grads",
+           "wire_bytes"]
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    method: str = "none"        # none | int8 | topk
+    topk_fraction: float = 0.01
+    error_feedback: bool = True
+
+
+def init_ef_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                        params)
+
+
+def _int8_roundtrip(g: jnp.ndarray) -> jnp.ndarray:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_roundtrip(g: jnp.ndarray, frac: float) -> jnp.ndarray:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def compress_grads(grads, ef_state, cfg: CompressionConfig):
+    """Returns (decompressed grads as seen post-collective, new EF state)."""
+    if cfg.method == "none":
+        return grads, ef_state
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32)
+        target = g32 + (e if cfg.error_feedback else 0.0)
+        if cfg.method == "int8":
+            sent = _int8_roundtrip(target)
+        elif cfg.method == "topk":
+            sent = _topk_roundtrip(target, cfg.topk_fraction)
+        else:
+            raise ValueError(cfg.method)
+        new_e = target - sent if cfg.error_feedback else e
+        return sent.astype(g.dtype), new_e
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_flatten(ef_state)[0]
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        sg, se = one(g, e)
+        out_g.append(sg)
+        out_e.append(se)
+    return (jax.tree_util.tree_unflatten(treedef, out_g),
+            jax.tree_util.tree_unflatten(treedef, out_e))
+
+
+def wire_bytes(params, cfg: CompressionConfig) -> int:
+    """Bytes a gradient all-reduce would move per step under cfg."""
+    n = sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+    if cfg.method == "int8":
+        return n            # 1 byte/elem
+    if cfg.method == "topk":
+        keep = int(n * cfg.topk_fraction)
+        return keep * 8     # value fp32 + index int32
+    return n * 4

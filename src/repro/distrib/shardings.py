@@ -1,0 +1,148 @@
+"""Logical-axis sharding rules with divisibility pruning.
+
+MaxText-style: every parameter/activation dim carries a *logical* axis
+name; a rule table maps logical axes to mesh axes.  One rule set must
+compile **all 10 architectures × 4 shapes × 2 meshes**, so the engine
+prunes infeasible assignments instead of failing:
+
+* a mesh axis is used at most once per array (PartitionSpec constraint);
+  first dim (in rule priority order) wins, later dims fall back;
+* if a dim is not divisible by its mesh-axis product, trailing mesh axes
+  are dropped until it divides (e.g. 40 attention heads on a 16-way
+  model axis ⇒ heads replicated, TP falls back to the d_ff dim);
+* unknown logical axes replicate.
+
+This is what turns "qwen3 has 40 heads" from a crash into a recorded
+sharding decision the roofline analysis can then criticise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.common import ParamSpec, logical_axes_tree
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "spec_for", "tree_shardings",
+           "batch_axes", "describe_tree_shardings"]
+
+
+#: rule table: logical axis -> tuple of mesh axes (joint sharding).
+#: tuple order = preference; trailing axes pruned on indivisibility.
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    # LM params
+    "vocab": ("model",),
+    "d_ff": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "moe_groups": ("data",),
+    "moe_capacity": ("model",),   # fallback TP when experts indivisible
+    "d_model": ("data",),          # FSDP / ZeRO-3 style in-dim shard
+    "d_model_out": ("data",),
+    # activations
+    "batch": ("pod", "data"),      # "pod" silently skipped on 2D meshes
+    "seq": (),
+    "kv_seq": ("model",),          # split-K decode
+    # recsys
+    "table_rows": ("data", "model"),
+    "table_dim": (),
+    "mlp_in": ("data",),
+    "mlp_out": ("model",),
+    # gnn
+    "gnn_in": (),
+    "gnn_out": (),
+    "nodes": ("data", "model"),
+    "edges": ("data", "model"),
+    # never sharded
+    "layers": (),
+    "norm": (),
+    "head_dim": (),
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: Dict[str, Tuple[str, ...]] = field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+
+    def override(self, **kv: Tuple[str, ...]) -> "ShardingRules":
+        new = dict(self.rules)
+        new.update(kv)
+        return ShardingRules(new)
+
+    # -- core resolution ---------------------------------------------------
+    def spec_for(self, shape: Sequence[int],
+                 logical_axes: Sequence[Optional[str]],
+                 mesh: Mesh) -> P:
+        mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        used: set = set()
+        parts: List[Any] = []
+        for dim, lax in zip(shape, logical_axes):
+            if lax is None:
+                parts.append(None)
+                continue
+            cand = [a for a in self.rules.get(lax, ())
+                    if a in mesh_sizes and a not in used]
+            # divisibility pruning: drop trailing axes until dim divides
+            while cand and dim % int(np.prod([mesh_sizes[a] for a in cand])):
+                cand.pop()
+            if not cand:
+                parts.append(None)
+            else:
+                used.update(cand)
+                parts.append(tuple(cand) if len(cand) > 1 else cand[0])
+        # strip trailing Nones for a tidy spec
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding_for(self, spec_or_shape, logical_axes=None,
+                     mesh: Optional[Mesh] = None) -> NamedSharding:
+        if isinstance(spec_or_shape, ParamSpec):
+            shape, axes = spec_or_shape.shape, spec_or_shape.logical_axes
+        else:
+            shape, axes = spec_or_shape, logical_axes
+        return NamedSharding(mesh, self.spec_for(shape, axes, mesh))
+
+    def tree_shardings(self, specs, mesh: Mesh):
+        """pytree[ParamSpec] -> pytree[NamedSharding]."""
+        return jax.tree.map(
+            lambda s: self.sharding_for(s, mesh=mesh), specs,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_for(shape, logical_axes, mesh, rules: Optional[ShardingRules] = None):
+    return (rules or ShardingRules()).spec_for(shape, logical_axes, mesh)
+
+
+def tree_shardings(specs, mesh, rules: Optional[ShardingRules] = None):
+    return (rules or ShardingRules()).tree_shardings(specs, mesh)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that jointly shard the global batch."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def describe_tree_shardings(specs, mesh,
+                            rules: Optional[ShardingRules] = None
+                            ) -> List[str]:
+    """Human-readable sharding table (DESIGN/EXPERIMENTS reporting)."""
+    rules = rules or ShardingRules()
+    lines = []
+
+    def visit(path, s):
+        spec = rules.spec_for(s.shape, s.logical_axes, mesh)
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        lines.append(f"{name:40s} {str(s.shape):24s} {spec}")
+
+    leaves = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))[0]
+    for path, s in leaves:
+        visit(path, s)
+    return lines

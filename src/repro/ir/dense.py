@@ -1,0 +1,148 @@
+"""Dense (neural) first-stage retrieval as a pipeline stage (Q → R).
+
+The paper's RetrieverCache wraps *any* retriever; this is the neural
+one: encode the corpus once (offline, cacheable via IndexerCache),
+encode queries online, brute-force top-k over the embedding matrix —
+exactly the `retrieval_cand` pattern of the two-tower arch, surfaced as
+an IR pipeline transformer.
+
+Embeddings come from the shared cross-encoder tower in single-text mode
+(mean-pooled), so the whole stack — tokenizer, encoder, jit — reuses
+the framework substrate.  Scoring is one jitted matmul per query batch;
+on TPU the embedding matrix is row-sharded like a recsys table.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..caching.compile_cache import default_compile_cache
+from ..core.frame import ColFrame
+from ..core.pipeline import Transformer
+from ..models.common import init_params, rms_norm
+
+# NOTE: cross_encoder is imported lazily inside DenseEncoder.__init__ —
+# cross_encoder itself imports repro.ir.tokenizer, so a module-level
+# import here would close an import cycle through repro.ir.__init__.
+
+__all__ = ["DenseEncoder", "DenseIndex", "DenseRetriever"]
+
+EncoderConfig = Any   # type alias; see lazy-import note above
+
+
+class DenseEncoder:
+    """Text -> embedding via the shared encoder backbone (mean pool)."""
+
+    def __init__(self, cfg, seed: int = 7):
+        from ..models.cross_encoder import encoder_param_specs
+        from .tokenizer import HashTokenizer
+        self.cfg = cfg
+        self.seed = seed
+        self.params = init_params(encoder_param_specs(cfg),
+                                  jax.random.key(seed))
+        self.tokenizer = HashTokenizer(cfg.vocab_size)
+
+    def _embed_fn(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        p, cfg = self.params, self.cfg
+        mask = (tokens != 0)
+        x = jnp.take(p["embed"], tokens, axis=0, mode="clip")
+        x = x + p["pos"][None, :tokens.shape[1]]
+
+        def layer_body(x, layer):
+            h = rms_norm(x, layer["ln1"])
+            q = jnp.einsum("bsd,dnh->bsnh", h, layer["wq"])
+            k = jnp.einsum("bsd,dnh->bsnh", h, layer["wk"])
+            v = jnp.einsum("bsd,dnh->bsnh", h, layer["wv"])
+            s = jnp.einsum("bqnh,bsnh->bnqs", q, k).astype(jnp.float32)
+            bias = jnp.where(mask, 0.0, -1e30)[:, None, None, :]
+            pr = jax.nn.softmax(s / np.sqrt(cfg.head_dim) + bias,
+                                axis=-1).astype(x.dtype)
+            a = jnp.einsum("bnqs,bsnh->bqnh", pr, v)
+            x = x + jnp.einsum("bqnh,nhd->bqd", a, layer["wo"])
+            h2 = rms_norm(x, layer["ln2"])
+            ff = jnp.einsum("bsf,fd->bsd",
+                            jax.nn.gelu(jnp.einsum("bsd,df->bsf", h2,
+                                                   layer["w1"])),
+                            layer["w2"])
+            return x + ff, None
+
+        x, _ = jax.lax.scan(layer_body, x, p["layers"])
+        x = rms_norm(x, p["ln_f"])
+        m = mask[..., None].astype(x.dtype)
+        pooled = (x * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+        return pooled / jnp.maximum(
+            jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-6)
+
+    def encode(self, texts: Sequence[str], batch: int = 256) -> np.ndarray:
+        outs = []
+        for lo in range(0, len(texts), batch):
+            chunk = texts[lo:lo + batch]
+            toks = self.tokenizer.encode_batch(chunk, self.cfg.max_len)
+            pad = (-len(chunk)) % 8
+            if pad:
+                toks = np.concatenate([toks, np.zeros((pad,
+                                                       self.cfg.max_len),
+                                                      np.int32)])
+            emb = default_compile_cache.call(
+                f"dense_encode:{self.cfg.name}", self._embed_fn,
+                jnp.asarray(toks))
+            outs.append(np.asarray(emb)[:len(chunk)])
+        return np.concatenate(outs) if outs else \
+            np.zeros((0, self.cfg.d_model), np.float32)
+
+
+class DenseIndex:
+    """Corpus embedding matrix + docno map (brute-force top-k)."""
+
+    def __init__(self, encoder: DenseEncoder):
+        self.encoder = encoder
+        self.docnos: list = []
+        self.matrix: Optional[np.ndarray] = None
+
+    def index(self, corpus_iter) -> "DenseIndex":
+        rows = list(corpus_iter)
+        self.docnos = [str(r["docno"]) for r in rows]
+        self.matrix = self.encoder.encode([r["text"] for r in rows])
+        return self
+
+    def retriever(self, num_results: int = 100) -> "DenseRetriever":
+        return DenseRetriever(self, num_results=num_results)
+
+
+class DenseRetriever(Transformer):
+    """Q → R over a DenseIndex (one batched matmul per query batch)."""
+
+    input_columns = frozenset({"qid", "query"})
+    output_columns = frozenset({"qid", "query", "docno", "score", "rank"})
+    key_columns = ("qid", "query")
+    one_to_many = True
+
+    def __init__(self, index: DenseIndex, num_results: int = 100):
+        self.index = index
+        self.num_results = int(num_results)
+
+    def signature(self):
+        return ("DenseRetriever", self.index.encoder.cfg.name,
+                self.index.encoder.seed, len(self.index.docnos),
+                self.num_results)
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        if len(inp) == 0 or self.index.matrix is None:
+            return ColFrame()
+        q_emb = self.index.encoder.encode(
+            [str(q) for q in inp["query"].tolist()])
+        scores = q_emb @ self.index.matrix.T          # [Q, N]
+        k = min(self.num_results, scores.shape[1])
+        rows = []
+        for i, (qid, query) in enumerate(zip(inp["qid"].tolist(),
+                                             inp["query"].tolist())):
+            top = np.argpartition(-scores[i], k - 1)[:k]
+            top = top[np.argsort(-scores[i][top], kind="stable")]
+            for r, j in enumerate(top):
+                rows.append({"qid": qid, "query": query,
+                             "docno": self.index.docnos[j],
+                             "score": float(scores[i, j]), "rank": r})
+        return ColFrame.from_dicts(rows)

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the perf-critical compute layers, each with a
+# pure-jnp oracle (ref.py) and a jitted wrapper (ops.py).  Validated in
+# interpret mode on CPU; TPU is the compilation target.
+from . import flash_attention, embedding_bag, cachekey_hash, bm25_block
+
+__all__ = ["flash_attention", "embedding_bag", "cachekey_hash",
+           "bm25_block"]

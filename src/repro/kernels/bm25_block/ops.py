@@ -1,0 +1,26 @@
+"""Jitted wrapper for bm25_block (padding to tile multiples)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import bm25_block
+
+__all__ = ["bm25_block_op"]
+
+
+@functools.partial(jax.jit, static_argnames=("k1", "b", "avg_dl",
+                                             "interpret"))
+def bm25_block_op(tf, idf, doc_len, *, k1: float = 1.2, b: float = 0.75,
+                  avg_dl: float = 1.0, interpret: bool = True):
+    T, D = tf.shape
+    pad_t = (-T) % 8
+    pad_d = (-D) % 128
+    tfp = jnp.pad(tf, ((0, pad_t), (0, pad_d)))
+    idfp = jnp.pad(idf, (0, pad_t))
+    dlp = jnp.pad(doc_len, (0, pad_d), constant_values=1.0)
+    out = bm25_block(tfp, idfp, dlp, k1=k1, b=b, avg_dl=avg_dl,
+                     interpret=interpret)
+    return out[:D]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the bm25_block kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["bm25_block_ref"]
+
+
+def bm25_block_ref(tf: jnp.ndarray, idf: jnp.ndarray, doc_len: jnp.ndarray,
+                   *, k1: float = 1.2, b: float = 0.75,
+                   avg_dl: float = 1.0) -> jnp.ndarray:
+    """tf [T, D] term-frequency tile; idf [T]; doc_len [D] -> scores [D].
+
+    score(d) = Σ_t idf[t] · tf·(k1+1) / (tf + k1·(1-b+b·dl/avgdl))
+    """
+    dl_norm = k1 * (1.0 - b + b * doc_len / avg_dl)       # [D]
+    sat = tf * (k1 + 1.0) / (tf + dl_norm[None, :])
+    sat = jnp.where(tf > 0, sat, 0.0)
+    return jnp.einsum("t,td->d", idf, sat)

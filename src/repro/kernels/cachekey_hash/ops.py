@@ -1,0 +1,33 @@
+"""Jitted wrapper for cachekey_hash (padding + host-compatible digest)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import cachekey_hash
+from .ref import FNV_OFFSET, FNV_PRIME, LANE2_OFFSET
+
+__all__ = ["cachekey_hash_op", "host_cachekey"]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cachekey_hash_op(tokens, *, interpret: bool = True):
+    N, L = tokens.shape
+    bn = 256 if N >= 256 else max(8, N)
+    pad = (-N) % bn
+    tp = jnp.pad(tokens, ((0, pad), (0, 0)))
+    return cachekey_hash(tp, block_n=bn, interpret=interpret)[:N]
+
+
+def host_cachekey(token_row: np.ndarray) -> bytes:
+    """Host-side digest identical to the kernel (shared cache entries)."""
+    h0 = int(FNV_OFFSET)
+    h1 = int(LANE2_OFFSET)
+    prime = int(FNV_PRIME)
+    for b in np.asarray(token_row, dtype=np.uint32).tobytes():
+        h0 = ((h0 ^ b) * prime) & 0xFFFFFFFF
+        h1 = ((h1 ^ b) * prime) & 0xFFFFFFFF
+    return h0.to_bytes(4, "little") + h1.to_bytes(4, "little")

@@ -1,0 +1,37 @@
+"""Pure-jnp/numpy oracle for the cachekey_hash kernel.
+
+Dual-lane 32-bit FNV-1a over int32 token rows.  Lane 0 uses the
+standard FNV offset/prime; lane 1 uses an independent offset (decimal
+digits of pi) with the same prime — together they form an effectively
+64-bit cache key with a host-verifiable reference.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FNV_OFFSET", "FNV_PRIME", "LANE2_OFFSET", "cachekey_hash_ref"]
+
+FNV_OFFSET = np.uint32(0x811C9DC5)
+FNV_PRIME = np.uint32(0x01000193)
+LANE2_OFFSET = np.uint32(0x31415927)
+
+
+def cachekey_hash_ref(tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens [N, L] int32 -> [N, 2] uint32 (two FNV-1a lanes).
+
+    Each int32 token is mixed as 4 little-endian bytes, matching a host
+    hashing the raw token buffer.
+    """
+    t = jnp.asarray(tokens).astype(jnp.uint32)
+    N, L = t.shape
+    prime = jnp.uint32(FNV_PRIME)
+    h0 = jnp.full((N,), jnp.uint32(FNV_OFFSET))
+    h1 = jnp.full((N,), jnp.uint32(LANE2_OFFSET))
+    for i in range(L):
+        word = t[:, i]
+        for shift in (0, 8, 16, 24):
+            byte = (word >> shift) & jnp.uint32(0xFF)
+            h0 = (h0 ^ byte) * prime
+            h1 = (h1 ^ byte) * prime
+    return jnp.stack([h0, h1], axis=1)

@@ -1,0 +1,69 @@
+"""EmbeddingBag as a Pallas TPU kernel.
+
+JAX has no native EmbeddingBag (taxonomy §B.6); the jnp path is
+gather + masked sum, materializing [B, L, d].  The TPU-native version
+never materializes the gathered bag:
+
+* the bag ids are a **scalar-prefetch** operand
+  (``PrefetchScalarGridSpec``) — on TPU they land in SMEM before the
+  grid starts, and the *table* BlockSpec's index_map reads them to pick
+  which table row block to DMA next: the gather happens in the
+  **index stream**, not in compute;
+* grid ``(B, L)`` with L innermost: the output block for bag ``b`` stays
+  resident in VMEM across the L steps and accumulates
+  ``weight[b,l] × table[ids[b,l]]``; it is zero-initialized at l==0;
+* rows are streamed as ``[1, d]`` blocks (d padded to a lane multiple of
+  128 by ops.py).
+
+This is the classic TPU embedding pattern (sparsecore-less variant).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["embedding_bag"]
+
+
+def _kernel(ids_ref, w_ref, table_ref, out_ref, *, L: int):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[0, 0].astype(jnp.float32)
+    out_ref[...] += table_ref[...].astype(jnp.float32) * w
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  weights: jnp.ndarray | None = None, *,
+                  interpret: bool = True) -> jnp.ndarray:
+    """table [V,d]; ids [B,L]; weights [B,L] -> [B,d] (sum combiner)."""
+    V, d = table.shape
+    B, L = ids.shape
+    if weights is None:
+        weights = jnp.ones((B, L), table.dtype)
+    weights = weights.astype(table.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,            # ids -> SMEM
+        grid=(B, L),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, l, ids: (b, l)),      # weights
+            # the gather: table block row chosen by the prefetched ids
+            pl.BlockSpec((1, d), lambda b, l, ids: (ids[b, l], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, l, ids: (b, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, L=L),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),  # f32 accum
+        interpret=interpret,
+    )(ids, weights, table)
+    return out.astype(table.dtype)

@@ -1,0 +1,26 @@
+"""Jitted public wrapper for the embedding_bag kernel (padding + mean)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import embedding_bag
+
+__all__ = ["embedding_bag_op"]
+
+
+@functools.partial(jax.jit, static_argnames=("combiner", "interpret"))
+def embedding_bag_op(table, ids, weights=None, *, combiner: str = "sum",
+                     interpret: bool = True):
+    V, d = table.shape
+    B, L = ids.shape
+    pad_d = (-d) % 128                     # lane alignment for the MXU/VPU
+    tp = jnp.pad(table, ((0, 0), (0, pad_d)))
+    out = embedding_bag(tp, ids, weights, interpret=interpret)[:, :d]
+    if combiner == "mean":
+        denom = (weights.sum(axis=1, keepdims=True) if weights is not None
+                 else jnp.full((1, 1), float(L)))
+        out = out / jnp.maximum(denom.astype(out.dtype), 1e-9)
+    return out

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the embedding_bag kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["embedding_bag_ref"]
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray,
+                      weights: jnp.ndarray | None = None,
+                      combiner: str = "sum") -> jnp.ndarray:
+    """table [V,d]; ids [B,L] int32; weights [B,L] (None = all ones).
+
+    Returns [B,d]: per-bag weighted sum (or mean) of table rows.
+    """
+    emb = jnp.take(table, ids, axis=0, mode="clip")     # [B,L,d]
+    if weights is not None:
+        emb = emb * weights[..., None].astype(emb.dtype)
+    out = emb.sum(axis=1)
+    if combiner == "mean":
+        denom = (weights.sum(axis=1, keepdims=True) if weights is not None
+                 else jnp.full((1, 1), float(ids.shape[1])))
+        out = out / jnp.maximum(denom.astype(out.dtype), 1e-9)
+    return out

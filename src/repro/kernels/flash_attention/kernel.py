@@ -1,0 +1,134 @@
+"""Flash attention as a Pallas TPU kernel (forward).
+
+TPU-native adaptation of the FlashAttention schedule (arXiv:2205.14135):
+
+* grid ``(B, H, Sq/bq, Sk/bk)`` — the KV axis is innermost so the
+  (m, l, acc) online-softmax state lives in VMEM scratch across KV steps
+  and the output block is written once on the last step;
+* BlockSpecs stream 128-aligned ``[bq, hd]`` / ``[bk, hd]`` tiles
+  HBM→VMEM; the MXU sees ``[bq, bk]`` and ``[bq, hd]`` matmuls
+  (bq/bk multiples of 128 keep the systolic array full);
+* GQA without materializing repeated KV heads: the K/V BlockSpec
+  index_map divides the head index (``h // group``) — indirection in the
+  *index map*, not the data;
+* causal masking via block-level iota comparison (fully-masked blocks
+  short-circuit to a no-op through ``@pl.when``).
+
+Validated in interpret mode against ``ref.attention_ref`` (the container
+is CPU-only; TPU is the compile target).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, bq: int, bk: int, n_kv: int,
+            q_offset: int, sk_valid: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal block skip: this KV block starts after the last query row
+    q_last = (qi + 1) * bq - 1 + q_offset        # global kv-pos of last q
+    k_first = ki * bk
+    run = jnp.logical_or(jnp.logical_not(causal), k_first <= q_last)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)              # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                     # [bq, bk]
+        kpos = ki * bk + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 1)
+        valid = kpos < sk_valid                    # mask padded KV rows
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0) + q_offset
+            valid = jnp.logical_and(valid, kpos <= qpos)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]                               # [bq, 1]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                            # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)                   # [bq, 1]
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    sk_valid: int | None = None, q_offset: int | None = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q [B,H,Sq,hd]; k/v [B,K,Sk,hd]. Returns [B,H,Sq,hd].
+
+    Sq/Sk must be multiples of block_q/block_k (ops.py pads;
+    ``sk_valid`` marks the unpadded KV length — padded rows are masked
+    in-kernel).  ``interpret=True`` runs the kernel body in Python on
+    CPU — the container has no TPU; flip to False on real hardware.
+    """
+    B, H, Sq, hd = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    assert H % K == 0, "GQA requires H % K == 0"
+    group = H // K
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    n_q, n_kv = Sq // block_q, Sk // block_k
+
+    sk_valid = Sk if sk_valid is None else sk_valid
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, bq=block_q, bk=block_k,
+        n_kv=n_kv, q_offset=(sk_valid - Sq if q_offset is None
+                             else q_offset),
+        sk_valid=sk_valid)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

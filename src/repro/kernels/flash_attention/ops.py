@@ -1,0 +1,35 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+Handles sequence padding to block multiples and exposes the same
+signature as the oracle ``ref.attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+
+__all__ = ["flash_attention_op"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True, block_q: int = 128,
+                       block_k: int = 128, interpret: bool = True):
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Sk))
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention(qp, kp, vp, causal=causal, block_q=bq, block_k=bk,
+                          sk_valid=Sk, q_offset=Sk - Sq,
+                          interpret=interpret)
+    return out[:, :, :Sq]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool = True,
+                  scale: float | None = None) -> jnp.ndarray:
+    """q [B,H,Sq,hd]; k/v [B,K,Sk,hd]; H % K == 0. Returns [B,H,Sq,hd]."""
+    B, H, Sq, hd = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, K, G, Sq, hd)
+    scores = jnp.einsum("bkgqh,bksh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores * scale
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None] + (Sk - Sq)
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", probs, v)
+    return out.reshape(B, H, Sq, hd)

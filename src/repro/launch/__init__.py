@@ -1,0 +1,5 @@
+# Launch layer. NOTE: do not import .dryrun here — it sets XLA_FLAGS for
+# 512 placeholder devices and must only run as __main__.
+from .mesh import make_production_mesh, make_mesh, mesh_info
+
+__all__ = ["make_production_mesh", "make_mesh", "mesh_info"]

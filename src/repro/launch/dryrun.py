@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: JAX locks the device count on first
+init, and the production meshes below need 512 placeholder host devices.
+(Do NOT import this module from tests/benchmarks — they must see 1
+device; the flag is process-local by design.)
+
+Usage:
+    python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+    python -m repro.launch.dryrun --all --multi-pod both \
+        --out results/dryrun.jsonl
+
+For every cell this prints ``compiled.memory_analysis()`` (fits?) and
+``compiled.cost_analysis()`` (FLOPs/bytes → §Roofline), parses
+per-device collective bytes from the partitioned HLO, and emits one
+JSON record per (cell × mesh).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             rules=None, verbose: bool = True, layer_correct: bool = True,
+             cfg_overrides=None, opt_cfg=None, mesh_shape=None):
+    from ..configs import get_arch
+    from ..configs.base import lm_layer_probe
+    from ..distrib.shardings import ShardingRules
+    from .mesh import make_mesh, make_production_mesh, mesh_info
+    from .roofline import (analyze_compiled, apply_layer_correction,
+                           model_flops_for)
+
+    arch = get_arch(arch_name)
+    kw = {}
+    if cfg_overrides and arch.family == "lm":
+        kw["cfg_overrides"] = cfg_overrides
+    if opt_cfg is not None and arch.family == "lm":
+        kw["opt_cfg"] = opt_cfg
+    cell = arch.cell(shape_name, **kw)
+    if mesh_shape is not None:
+        # elastic factorization, e.g. (4, 8, 16) or (8, 32)
+        axes = ("pod", "data", "model")[-len(mesh_shape):]
+        mesh = make_mesh(tuple(mesh_shape), axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    rules = rules or ShardingRules()
+
+    t0 = time.perf_counter()
+    lowered = cell.lower(mesh, rules)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    if verbose:
+        print(f"--- {arch_name} × {shape_name} on {mesh_name} "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+        print(compiled.memory_analysis())      # proves it fits
+        ca = compiled.cost_analysis()
+        print({k: ca[k] for k in ("flops", "bytes accessed")
+               if k in ca})                    # FLOPs/bytes for §Roofline
+
+    rep = analyze_compiled(
+        compiled, arch=arch_name, shape=shape_name, mesh_name=mesh_name,
+        n_devices=mesh.devices.size, kind=cell.kind,
+        model_flops_global=model_flops_for(arch, shape_name),
+        compile_s=t_lower + t_compile, notes=cell.notes)
+
+    # LM models scan over layers; correct while-body-once cost accounting
+    # with a single-layer probe compile at identical shapes/shardings.
+    if layer_correct and arch.family == "lm" and arch.config.scan_layers:
+        t0 = time.perf_counter()
+        probe_cell = lm_layer_probe(arch, shape_name,
+                                    cfg_overrides=cfg_overrides)
+        probe = probe_cell.lower(mesh, rules).compile()
+        probe_rep = analyze_compiled(
+            probe, arch=arch_name, shape=shape_name, mesh_name=mesh_name,
+            n_devices=mesh.devices.size, kind=probe_cell.kind,
+            model_flops_global=0.0)
+        rep = apply_layer_correction(rep, probe_rep, arch.config.n_layers)
+        rep.compile_s += time.perf_counter() - t0
+    if verbose:
+        print(rep.summary())
+    return rep
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch × shape) cell")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"],
+                    default="off")
+    ap.add_argument("--mesh", default=None,
+                    help="elastic mesh factorization, e.g. 4x8x16 "
+                         "(pods x data x model); overrides --multi-pod")
+    ap.add_argument("--out", default=None, help="JSONL output path")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    from ..configs import all_cells
+
+    if args.all:
+        cells = all_cells()
+    elif args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    elif args.arch:
+        from ..configs import get_arch
+        cells = [(args.arch, s) for s in get_arch(args.arch).shape_names()]
+    else:
+        ap.error("need --arch [--shape] or --all")
+
+    pods = {"off": [False], "on": [True], "both": [False, True]}[
+        args.multi_pod]
+
+    out_f = open(args.out, "a") if args.out else None
+    failures = []
+    for arch_name, shape_name in cells:
+        for mp in pods:
+            try:
+                mesh_shape = tuple(int(x) for x in args.mesh.split("x")) \
+                    if args.mesh else None
+                rep = run_cell(arch_name, shape_name, mp,
+                               verbose=not args.quiet,
+                               mesh_shape=mesh_shape)
+                if out_f:
+                    out_f.write(json.dumps(rep.to_dict()) + "\n")
+                    out_f.flush()
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((arch_name, shape_name, mp, repr(e)))
+    if out_f:
+        out_f.close()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print(f"\nall {len(cells) * len(pods)} cells compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

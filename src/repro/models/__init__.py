@@ -1,0 +1,8 @@
+# Model zoo: LM family (dense+MoE), cross-encoders, GCN, recsys.
+from . import common, lm, gcn, recsys, cross_encoder
+from .common import (ParamSpec, init_params, abstract_params,
+                     logical_axes_tree, count_params)
+
+__all__ = ["common", "lm", "gcn", "recsys", "cross_encoder", "ParamSpec",
+           "init_params", "abstract_params", "logical_axes_tree",
+           "count_params"]

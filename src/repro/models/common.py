@@ -1,0 +1,165 @@
+"""Shared model machinery: parameter specs with logical sharding axes.
+
+Every model defines ``param_specs(cfg) -> pytree[ParamSpec]``.  A spec
+records shape, dtype, *logical axes* (mapped to mesh axes by
+``repro.distrib.shardings``) and an initializer.  From specs we derive:
+
+* ``init_params``      — materialized params (smoke tests / real training)
+* ``abstract_params``  — ShapeDtypeStructs (dry-run lowering, no memory)
+* sharding trees       — via the logical-axis rule engine
+
+Pure JAX (no flax): params are nested dicts of arrays.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "logical_axes_tree",
+           "rms_norm", "rope", "count_params", "he_init", "lecun_init",
+           "embed_init", "zeros_init", "ones_init"]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "lecun"          # lecun | he | embed | zeros | ones | normal
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), \
+            f"{self.shape} vs {self.logical_axes}"
+
+
+def _initializer(spec: ParamSpec) -> Callable:
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    if spec.init == "zeros":
+        return lambda k: jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return lambda k: jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        std = spec.init_scale
+        return lambda k: (jax.random.normal(k, spec.shape, jnp.float32)
+                          * std).astype(spec.dtype)
+    if spec.init == "normal":
+        return lambda k: (jax.random.normal(k, spec.shape, jnp.float32)
+                          * spec.init_scale).astype(spec.dtype)
+    if spec.init == "he":
+        std = spec.init_scale * math.sqrt(2.0 / fan_in)
+    else:  # lecun
+        std = spec.init_scale * math.sqrt(1.0 / fan_in)
+    return lambda k: (jax.random.normal(k, spec.shape, jnp.float32)
+                      * std).astype(spec.dtype)
+
+
+he_init = partial(ParamSpec, init="he")
+lecun_init = partial(ParamSpec, init="lecun")
+embed_init = partial(ParamSpec, init="embed")
+zeros_init = partial(ParamSpec, init="zeros")
+ones_init = partial(ParamSpec, init="ones")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key) -> Dict:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_initializer(s)(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs) -> Dict:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=_is_spec)
+
+
+def logical_axes_tree(specs) -> Dict:
+    return jax.tree.map(lambda s: s.logical_axes, specs, is_leaf=_is_spec)
+
+
+def count_params(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (GSPMD guidance, MaxText-style)
+# ---------------------------------------------------------------------------
+# Model code calls ``shard_act(x, ("batch", "seq", "d_ff"))`` at layer
+# boundaries; outside a context this is the identity, inside
+# ``activation_sharding(mesh, spec_fn)`` it pins the activation to the
+# rule-resolved NamedSharding.  Without these constraints GSPMD's
+# propagation can drop the batch sharding across chunked-attention
+# backward passes (observed: per-device dots at global batch).
+
+import contextlib
+import threading
+
+_ACT_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, spec_fn):
+    """spec_fn(shape, logical_axes, mesh) -> PartitionSpec."""
+    prev = getattr(_ACT_CTX, "value", None)
+    _ACT_CTX.value = (mesh, spec_fn)
+    try:
+        yield
+    finally:
+        _ACT_CTX.value = prev
+
+
+def shard_act(x, logical_axes: Sequence[Optional[str]]):
+    ctx = getattr(_ACT_CTX, "value", None)
+    if ctx is None:
+        return x
+    mesh, spec_fn = ctx
+    from jax.sharding import NamedSharding
+    spec = spec_fn(tuple(x.shape), tuple(logical_axes), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# numerics shared across models
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with fp32 *accumulation* but no materialized fp32 copy.
+
+    ``jnp.mean(..., dtype=f32)`` reduces in fp32 while the [B,S,D]
+    tensor itself stays bf16 — the earlier ``x.astype(f32)`` round-trip
+    dominated the HLO byte traffic (measured in §Perf: 387 GB of
+    ``convert`` results per qwen110 layer)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True,
+                   dtype=jnp.float32)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         base: float = 10000.0) -> jnp.ndarray:
+    """Rotary position embedding. x: [..., seq, heads, d_head].
+
+    cos/sin are computed in fp32 (tiny [S, d/2] tables) then applied in
+    the activation dtype — no full-tensor fp32 intermediates."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = (1.0 / base) ** (jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freq  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)   # broadcast heads
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)

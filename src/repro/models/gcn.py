@@ -1,0 +1,205 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907) with all four shape regimes.
+
+Message passing is built on ``jax.ops.segment_sum`` over an edge-index →
+node scatter (JAX has no CSR SpMM; this IS the system, per the
+assignment note):
+
+* ``full_graph``  — symmetric-normalized Ã·X·W over the whole graph
+  (cora 2.7k nodes / ogbn-products 2.45M nodes);
+* ``minibatch``   — GraphSAGE-style fixed-fanout neighbor sampling
+  (a *real* numpy sampler over CSR) + per-hop dense gathers;
+* ``molecule``    — batched small graphs, flattened with edge offsets.
+
+Nodes/edges are padded to mesh-friendly multiples; padding rows carry
+zero features and a degree of 1 so they are numerically inert.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ParamSpec
+
+__all__ = ["GCNConfig", "gcn_param_specs", "gcn_full_graph_logits",
+           "gcn_full_graph_loss", "gcn_sampled_loss", "gcn_molecule_loss",
+           "NeighborSampler", "pad_graph"]
+
+
+@dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn-cora"
+    n_layers: int = 2
+    d_feat: int = 1433
+    d_hidden: int = 16
+    n_classes: int = 7
+    aggregator: str = "mean"     # mean (sym-normalized)
+    dtype: Any = jnp.float32
+    # minibatch regime
+    fanouts: Tuple[int, ...] = (15, 10)
+
+
+def gcn_param_specs(cfg: GCNConfig) -> Dict:
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    layers = {}
+    for i in range(cfg.n_layers):
+        layers[f"w{i}"] = ParamSpec((dims[i], dims[i + 1]),
+                                    ("gnn_in", "gnn_out"), cfg.dtype,
+                                    init="he")
+        layers[f"b{i}"] = ParamSpec((dims[i + 1],), ("gnn_out",), cfg.dtype,
+                                    init="zeros")
+    return layers
+
+
+def pad_graph(n: int, multiple: int = 512) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# full-graph regime
+# ---------------------------------------------------------------------------
+
+def _sym_norm_agg(x: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                  deg: jnp.ndarray) -> jnp.ndarray:
+    """Ã X with Ã = D^-1/2 (A+I) D^-1/2; edges (src→dst) + self loops.
+
+    x [N,F]; src/dst [E] int32; deg [N] (including self loop).
+    """
+    inv_sqrt = jax.lax.rsqrt(jnp.maximum(deg.astype(jnp.float32), 1.0))
+    msg = x[src] * (inv_sqrt[src] * inv_sqrt[dst])[:, None].astype(x.dtype)
+    agg = jax.ops.segment_sum(msg, dst, num_segments=x.shape[0])
+    agg = agg + x * (inv_sqrt * inv_sqrt)[:, None].astype(x.dtype)  # self loop
+    return agg
+
+
+def gcn_full_graph_logits(params: Dict, feats: jnp.ndarray,
+                          src: jnp.ndarray, dst: jnp.ndarray,
+                          deg: jnp.ndarray, cfg: GCNConfig) -> jnp.ndarray:
+    x = feats
+    for i in range(cfg.n_layers):
+        # aggregate-then-transform when fan-in > fan-out is cheaper the
+        # other way round; GCN canonical order: X W then Ã (X W)
+        x = jnp.einsum("nf,fo->no", x, params[f"w{i}"]) + params[f"b{i}"]
+        x = _sym_norm_agg(x, src, dst, deg)
+        if i < cfg.n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def gcn_full_graph_loss(params: Dict, batch: Dict, cfg: GCNConfig):
+    logits = gcn_full_graph_logits(params, batch["feats"], batch["src"],
+                                   batch["dst"], batch["deg"], cfg)
+    labels, mask = batch["labels"], batch["label_mask"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[:, None],
+                               axis=-1)[:, 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# sampled-minibatch regime (GraphSAGE-style fanout sampling)
+# ---------------------------------------------------------------------------
+
+class NeighborSampler:
+    """Uniform fixed-fanout neighbor sampler over a CSR adjacency.
+
+    Real sampling (numpy), deterministic given the step seed — the data
+    pipeline contract required for fault-tolerant resume.
+    """
+
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray):
+        self.indptr = np.asarray(indptr, dtype=np.int64)
+        self.indices = np.asarray(indices, dtype=np.int32)
+
+    @classmethod
+    def from_edges(cls, n_nodes: int, src: np.ndarray, dst: np.ndarray):
+        order = np.argsort(dst, kind="stable")
+        src_sorted = src[order]
+        counts = np.bincount(dst, minlength=n_nodes)
+        indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return cls(indptr, src_sorted)
+
+    def sample(self, seeds: np.ndarray, fanouts: Tuple[int, ...],
+               seed: int) -> Dict[str, np.ndarray]:
+        """Returns hop-wise neighbor id matrices.
+
+        out["hop0"] = seeds [B]; out[f"hop{i+1}"] = [B, f1*…*fi] node ids
+        (self-padded where degree < fanout).
+        """
+        rng = np.random.default_rng(seed)
+        out = {"hop0": seeds.astype(np.int32)}
+        frontier = seeds
+        width = 1
+        for h, f in enumerate(fanouts):
+            lo = self.indptr[frontier]
+            hi = self.indptr[frontier + 1]
+            deg = (hi - lo)
+            # uniform with replacement; degree-0 nodes self-loop
+            r = rng.random((len(frontier), f))
+            pick = lo[:, None] + np.floor(r * np.maximum(deg, 1)[:, None]
+                                          ).astype(np.int64)
+            neigh = self.indices[np.minimum(pick, len(self.indices) - 1)]
+            neigh = np.where(deg[:, None] > 0, neigh,
+                             frontier[:, None].astype(np.int32))
+            width *= f
+            out[f"hop{h + 1}"] = neigh.reshape(len(seeds), width) \
+                if h else neigh
+            frontier = neigh.reshape(-1)
+        return out
+
+
+def gcn_sampled_loss(params: Dict, batch: Dict, cfg: GCNConfig):
+    """2-hop sampled GCN step (fanouts f1, f2).
+
+    batch: feats_hop0 [B,F], feats_hop1 [B,f1,F], feats_hop2 [B,f1,f2,F],
+    labels [B].  Mean aggregation per hop (sampled-GCN estimator).
+    """
+    f0, f1, f2 = batch["feats_hop0"], batch["feats_hop1"], batch["feats_hop2"]
+    w0, b0 = params["w0"], params["b0"]
+    w1, b1 = params["w1"], params["b1"]
+    # layer 1 applied at hop-1 nodes: agg over their sampled neighbors
+    h1_in = jnp.einsum("bkmf,fo->bkmo", f2, w0) + b0
+    h1 = jax.nn.relu(jnp.einsum("bkf,fo->bko", f1, w0) + b0
+                     + h1_in.mean(axis=2))
+    # layer 2 at seeds: agg over hop-1
+    h0_self = jnp.einsum("bf,fo->bo", f0, w0) + b0
+    h0 = jax.nn.relu(h0_self + (jnp.einsum("bkf,fo->bko", f1, w0)
+                                + b0).mean(axis=1))
+    logits = (jnp.einsum("bo,oc->bc", h0, w1) + b1
+              + jnp.einsum("bko,oc->bkc", h1, w1).mean(axis=1))
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return (logz - gold).mean()
+
+
+# ---------------------------------------------------------------------------
+# batched-small-graphs regime (molecules)
+# ---------------------------------------------------------------------------
+
+def gcn_molecule_loss(params: Dict, batch: Dict, cfg: GCNConfig):
+    """batch: feats [G,N,F], src/dst [G,E], deg [G,N], labels [G]."""
+    G, N, F = batch["feats"].shape
+    E = batch["src"].shape[1]
+    # flatten graphs with node offsets so one segment_sum serves all
+    offs = (jnp.arange(G) * N)[:, None]
+    src = (batch["src"] + offs).reshape(-1)
+    dst = (batch["dst"] + offs).reshape(-1)
+    feats = batch["feats"].reshape(G * N, F)
+    deg = batch["deg"].reshape(G * N)
+    x = feats
+    for i in range(cfg.n_layers):
+        x = jnp.einsum("nf,fo->no", x, params[f"w{i}"]) + params[f"b{i}"]
+        x = _sym_norm_agg(x, src, dst, deg)
+        if i < cfg.n_layers - 1:
+            x = jax.nn.relu(x)
+    pooled = x.reshape(G, N, -1).mean(axis=1)       # mean readout
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(pooled, axis=-1)
+    gold = jnp.take_along_axis(pooled, labels[:, None], axis=-1)[:, 0]
+    return (logz - gold).mean()

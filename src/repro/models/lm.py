@@ -1,0 +1,733 @@
+"""Decoder-only transformer LM family (dense + MoE), pure JAX.
+
+Covers the five assigned LM architectures (granite-MoE, phi-3.5-MoE,
+qwen3-14b, smollm-360m, qwen1.5-110b): GQA with optional qk-norm and
+QKV bias, RoPE, SwiGLU FFN or top-k routed MoE, stacked-layer params
+scanned with optional remat.
+
+Three step functions (all pjit-compatible, global-shape semantics):
+
+* ``train_step``    — causal-LM loss + AdamW update (via repro.train)
+* ``prefill_step``  — forward-only; builds the KV cache; uses *chunked*
+  (online-softmax) attention so 32k×32k score matrices are never
+  materialized — the XLA formulation of the flash-attention schedule
+  (the Pallas kernel in ``repro.kernels.flash_attention`` is the
+  TPU-native version of the same algorithm);
+* ``decode_step``   — one token per sequence against a sharded KV cache
+  (cache sequence axis sharded over the model axis = split-K decode).
+
+MoE uses sort-based capacity dispatch (GShard-style dropping,
+MegaBlocks-style grouped-GEMM shape): tokens sort by expert, pack to
+``[E, C, D]``, run batched einsums, and combine back.  Two dispatch
+modes: the flat/global form (paper-faithful GShard baseline) and the
+grouped **gather-only** form (``dispatch_groups>0``) where packing and
+combining are pure gathers through the inverse sort permutation —
+scatters replicate their operands under GSPMD (measured in
+EXPERIMENTS.md §Perf: −90% collective bytes).  FLOPs scale with active
+experts (×capacity factor), not total experts.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ParamSpec, rms_norm, rope, shard_act
+
+__all__ = ["LMConfig", "param_specs", "forward", "causal_lm_loss",
+           "prefill", "decode_one", "init_cache_specs", "num_params"]
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: Optional[int] = None
+    # MoE (0 experts = dense)
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # arch flags
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_base: float = 10000.0
+    tie_embeddings: bool = False
+    # execution
+    dtype: Any = jnp.bfloat16
+    vocab_pad_multiple: int = 256
+    attn_window: Optional[int] = None        # sliding window (long-context)
+    attn_chunk: int = 512                    # q-block for chunked attention
+    chunked_attn_threshold: int = 2048       # use chunked attn when S >=
+    remat: str = "full"                      # none | full | dots
+    fuse_qkv: bool = False                   # fused [D, H+2K, hd] projection
+    #: express GQA by materializing KV to all H heads. When H divides
+    #: the model axis but K does not (qwen110: H=64, K=8 on 16-way TP),
+    #: the (K,G)-factored attention einsums force GSPMD to replicate the
+    #: fp32 score chain (the [8,8] reshape of a 16-way-sharded 64 is
+    #: inexpressible); repeated-KV attention keeps every score tensor
+    #: H-sharded. KV repeat itself is free: K<16 means KV was already
+    #: replicated. Found in §Perf hillclimbing.
+    gqa_repeat_kv: bool = False
+    #: MoE dispatch groups (0 = flat/global GShard-style sort). With
+    #: G == data-axis size, dispatch (sort, cumsum, scatter) is LOCAL to
+    #: each data shard and only the packed [G,E,C,D] tensor crosses the
+    #: mesh (all-to-all), not the raw token stream — the MoE collective
+    #: schedule real deployments use. Found in §Perf hillclimbing.
+    dispatch_groups: int = 0
+    #: scan over layers (compact HLO, fast compiles) vs python-unrolled
+    #: (×L HLO). The dry-run unrolls: XLA cost_analysis counts a while
+    #: body ONCE regardless of trip count, so scanned-layer FLOPs/bytes
+    #: would under-report by ×L in the roofline.
+    scan_layers: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else \
+            self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: LMConfig) -> Dict:
+    L, D, H, K = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd, F, Vp = cfg.head_dim, cfg.d_ff, cfg.padded_vocab
+    dt = cfg.dtype
+    lyr: Dict[str, ParamSpec] = {
+        "ln1": ParamSpec((L, D), ("layers", "norm"), dt, init="ones"),
+        "ln2": ParamSpec((L, D), ("layers", "norm"), dt, init="ones"),
+    }
+    if cfg.fuse_qkv:
+        lyr["wqkv"] = ParamSpec((L, D, H + 2 * K, hd),
+                                ("layers", "d_model", "heads", "head_dim"), dt)
+    else:
+        lyr["wq"] = ParamSpec((L, D, H, hd),
+                              ("layers", "d_model", "heads", "head_dim"), dt)
+        lyr["wk"] = ParamSpec((L, D, K, hd),
+                              ("layers", "d_model", "kv_heads", "head_dim"), dt)
+        lyr["wv"] = ParamSpec((L, D, K, hd),
+                              ("layers", "d_model", "kv_heads", "head_dim"), dt)
+    lyr["wo"] = ParamSpec((L, H, hd, D),
+                          ("layers", "heads", "head_dim", "d_model_out"), dt)
+    if cfg.qkv_bias:
+        lyr["bq"] = ParamSpec((L, H, hd), ("layers", "heads", "head_dim"),
+                              dt, init="zeros")
+        lyr["bk"] = ParamSpec((L, K, hd), ("layers", "kv_heads", "head_dim"),
+                              dt, init="zeros")
+        lyr["bv"] = ParamSpec((L, K, hd), ("layers", "kv_heads", "head_dim"),
+                              dt, init="zeros")
+    if cfg.qk_norm:
+        lyr["q_norm"] = ParamSpec((L, hd), ("layers", "norm"), dt, init="ones")
+        lyr["k_norm"] = ParamSpec((L, hd), ("layers", "norm"), dt, init="ones")
+    if cfg.is_moe:
+        E = cfg.n_experts
+        lyr["router"] = ParamSpec((L, D, E), ("layers", "d_model", "experts"),
+                                  jnp.float32)
+        lyr["w1"] = ParamSpec((L, E, D, F),
+                              ("layers", "experts", "d_model", "d_ff"), dt)
+        lyr["w3"] = ParamSpec((L, E, D, F),
+                              ("layers", "experts", "d_model", "d_ff"), dt)
+        lyr["w2"] = ParamSpec((L, E, F, D),
+                              ("layers", "experts", "d_ff", "d_model_out"), dt)
+    else:
+        lyr["w1"] = ParamSpec((L, D, F), ("layers", "d_model", "d_ff"), dt)
+        lyr["w3"] = ParamSpec((L, D, F), ("layers", "d_model", "d_ff"), dt)
+        lyr["w2"] = ParamSpec((L, F, D), ("layers", "d_ff", "d_model_out"), dt)
+    specs = {
+        "embed": ParamSpec((Vp, D), ("vocab", "d_model"), dt, init="embed",
+                           init_scale=0.02),
+        "ln_f": ParamSpec((D,), ("norm",), dt, init="ones"),
+        "layers": lyr,
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((D, Vp), ("d_model", "vocab"), dt)
+    return specs
+
+
+def num_params(cfg: LMConfig) -> int:
+    from .common import count_params
+    return count_params(param_specs(cfg))
+
+
+def active_params(cfg: LMConfig) -> int:
+    """Params touched per token (dense = all; MoE = top_k of E experts)."""
+    total = num_params(cfg)
+    if not cfg.is_moe:
+        return total
+    L, E, D, F = cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.d_ff
+    expert_params = L * E * 3 * D * F
+    active_expert = L * cfg.top_k * 3 * D * F
+    return total - expert_params + active_expert
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _qkv(x, p, li, cfg: LMConfig):
+    """x: [B,S,D] -> q [B,S,H,hd], k/v [B,S,K,hd] (rope NOT yet applied)."""
+    if cfg.fuse_qkv:
+        w = p["wqkv"][li]
+        qkv = jnp.einsum("bsd,dnh->bsnh", x, w)
+        q = qkv[..., :cfg.n_heads, :]
+        k = qkv[..., cfg.n_heads:cfg.n_heads + cfg.n_kv_heads, :]
+        v = qkv[..., cfg.n_heads + cfg.n_kv_heads:, :]
+    else:
+        q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"][li])
+        k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"][li])
+        v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"][li])
+    if cfg.qkv_bias:
+        q = q + p["bq"][li]
+        k = k + p["bk"][li]
+        v = v + p["bv"][li]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"][li])
+        k = rms_norm(k, p["k_norm"][li])
+    q = shard_act(q, ("batch", None, "heads", None))
+    k = shard_act(k, ("batch", None, "kv_heads", None))
+    v = shard_act(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _attn_scores_mask(S_q: int, S_k: int, q_offset,
+                      window: Optional[int]) -> jnp.ndarray:
+    """Causal (+ optional sliding window) mask [S_q, S_k]; True=keep."""
+    qpos = jnp.arange(S_q) + q_offset
+    kpos = jnp.arange(S_k)
+    mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    return mask
+
+
+def _expand_kv(k, H):
+    """[B,S,K,hd] -> [B,S,H,hd] (repeat each KV head H/K times) with an
+    H-sharded constraint — see LMConfig.gqa_repeat_kv."""
+    B, S, K, hd = k.shape
+    G = H // K
+    out = jnp.broadcast_to(k[:, :, :, None, :], (B, S, K, G, hd)) \
+        .reshape(B, S, H, hd)
+    return shard_act(out, ("batch", None, "heads", None))
+
+
+def _plain_attention(q, k, v, cfg: LMConfig, q_offset=0):
+    """q: [B,Sq,H,hd], k/v: [B,Sk,K,hd] -> [B,Sq,H,hd]."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    mask = _attn_scores_mask(Sq, Sk, q_offset, cfg.attn_window)
+    if cfg.gqa_repeat_kv:
+        k, v = _expand_kv(k, H), _expand_kv(v, H)
+        scores = jnp.einsum("bqnh,bsnh->bnqs", q,
+                            k).astype(jnp.float32) * scale
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bnqs,bsnh->bqnh", probs, v)
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _chunked_attention(q, k, v, cfg: LMConfig, q_offset=0):
+    """Online-softmax attention scanning q-chunks (no [Sq,Sk] alloc).
+
+    The XLA expression of the flash-attention schedule: for each query
+    block, stream over keys in full, carrying (m, l, acc).  Forward-only
+    use (prefill); memory per step is O(chunk × Sk / devices).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    C = min(cfg.attn_chunk, Sq)
+    n_chunks = (Sq + C - 1) // C
+    pad = n_chunks * C - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = 1.0 / math.sqrt(hd)
+    kpos = jnp.arange(Sk)
+    repeat_kv = cfg.gqa_repeat_kv
+    if repeat_kv:
+        k, v = _expand_kv(k, H), _expand_kv(v, H)
+        qg = q.reshape(B, n_chunks, C, H, hd).transpose(1, 0, 2, 3, 4)
+    else:
+        qg = q.reshape(B, n_chunks, C, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    def chunk_body(carry, inp):
+        qc, ci = inp            # [B,C,H,hd] or [B,C,K,G,hd]
+        if repeat_kv:
+            scores = jnp.einsum("bqnh,bsnh->bnqs", qc,
+                                k).astype(jnp.float32)
+        else:
+            scores = jnp.einsum("bqkgh,bskh->bkgqs", qc,
+                                k).astype(jnp.float32)
+        scores = scores * scale
+        qpos = ci * C + jnp.arange(C) + q_offset
+        mask = kpos[None, :] <= qpos[:, None]
+        if cfg.attn_window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - cfg.attn_window
+        nb = (None,) if repeat_kv else (None, None)
+        scores = jnp.where(mask[(None,) + nb], scores, -1e30)
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        p = jnp.exp(scores - m)
+        l = jnp.sum(p, axis=-1)
+        if repeat_kv:
+            o = jnp.einsum("bnqs,bsnh->bnqh", p.astype(qc.dtype), v)
+            out = o / jnp.maximum(l, 1e-30)[..., None].astype(qc.dtype)
+            return carry, out.transpose(0, 2, 1, 3)      # [B,C,H,hd]
+        o = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(qc.dtype), v)
+        out = o / jnp.maximum(l, 1e-30)[..., None].astype(qc.dtype)
+        return carry, out.transpose(0, 3, 1, 2, 4)   # [B,C,K,G,hd]
+
+    # remat the chunk body: the [C, Sk] score block is recomputed in the
+    # backward pass instead of being saved per chunk (flash-attn schedule)
+    chunk_body = jax.checkpoint(
+        chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        _, outs = jax.lax.scan(chunk_body, None,
+                               (qg, jnp.arange(n_chunks)))
+    else:   # unrolled for honest while-free cost_analysis (see scan_layers)
+        outs = jnp.stack([chunk_body(None, (qg[i], jnp.int32(i)))[1]
+                          for i in range(n_chunks)])
+    if repeat_kv:
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * C, H, hd)
+    else:
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, n_chunks * C, H,
+                                                       hd)
+    return out[:, :Sq]
+
+
+def _attention(q, k, v, cfg: LMConfig, q_offset=0):
+    if q.shape[1] >= cfg.chunked_attn_threshold:
+        return _chunked_attention(q, k, v, cfg, q_offset)
+    return _plain_attention(q, k, v, cfg, q_offset)
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense SwiGLU / MoE)
+# ---------------------------------------------------------------------------
+
+def _dense_ffn(x, p, li):
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"][li])
+    g = jnp.einsum("bsd,df->bsf", x, p["w3"][li])
+    a = shard_act(jax.nn.silu(h) * g, ("batch", None, "d_ff"))
+    return jnp.einsum("bsf,fd->bsd", a, p["w2"][li])
+
+
+def moe_capacity(cfg: LMConfig, n_tokens: int) -> int:
+    c = int(math.ceil(cfg.top_k * n_tokens * cfg.capacity_factor
+                      / cfg.n_experts))
+    return max(8, ((c + 7) // 8) * 8)   # pad to lane multiple
+
+
+def _moe_ffn_grouped(x, p, li, cfg: LMConfig):
+    """Hierarchical MoE dispatch: sort/pack per data-shard group.
+
+    The flat dispatch sorts ALL T·k assignments globally — under GSPMD
+    the sort, cumsum and scatter become cross-shard collectives over the
+    full token stream.  Here tokens are split into G groups aligned with
+    the data axis; each group sorts/packs only its own T/G tokens into
+    [E, C/G, D] (all local), and only the packed expert tensor moves
+    across the mesh for the expert-parallel einsum.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = cfg.dispatch_groups
+    Tg = T // G
+    Cg = moe_capacity(cfg, Tg)
+    xt = x.reshape(G, Tg, D)
+    xt = shard_act(xt, ("moe_groups", None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"][li])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, k)                # [G,Tg,k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = experts.reshape(G, Tg * k)
+    flat_t = jnp.broadcast_to(jnp.repeat(jnp.arange(Tg), k)[None],
+                              (G, Tg * k))
+    flat_g = gates.reshape(G, Tg * k)
+
+    order = jnp.argsort(flat_e, axis=1)                     # per-group sort
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = jnp.take_along_axis(flat_t, order, axis=1)
+    # group-local start offsets per expert via searchsorted on sorted se
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E)))(se)
+
+    # GATHER-ONLY packing (no scatter!): expert slot j=(e,c) PULLS sorted
+    # position starts[e]+c.  GSPMD partitions gathers along the output
+    # dim, so the packed [G,E,Cg,D] stays (data, model/experts)-sharded;
+    # a scatter here forces GSPMD to replicate the packed operand
+    # (measured: 114.8s -> 64.4s memory term was still scatter-bound).
+    j = jnp.arange(E * Cg)
+    slot_e = j // Cg                                        # [E*Cg]
+    slot_c = j % Cg
+    src_pos = starts[:, slot_e] + slot_c[None, :]           # [G, E*Cg]
+    ends = jnp.concatenate([starts[:, 1:],
+                            jnp.full((G, 1), Tg * k)], axis=1)
+    slot_valid = src_pos < ends[:, slot_e]
+    src_pos = jnp.minimum(src_pos, Tg * k - 1)
+    slot_token = jnp.take_along_axis(st, src_pos, axis=1)   # [G, E*Cg]
+    xd = jnp.take_along_axis(xt, slot_token[..., None], axis=1) \
+        * slot_valid[..., None].astype(xt.dtype)
+    xd = xd.reshape(G, E, Cg, D)
+    xd = shard_act(xd, ("moe_groups", "experts", "moe_capacity", None))
+
+    h = jnp.einsum("gecd,edf->gecf", xd, p["w1"][li])
+    g2 = jnp.einsum("gecd,edf->gecf", xd, p["w3"][li])
+    a = jax.nn.silu(h) * g2
+    a = shard_act(a, ("moe_groups", "experts", "moe_capacity", "d_ff"))
+    ye = jnp.einsum("gecf,efd->gecd", a, p["w2"][li])
+    ye = ye.reshape(G, E * Cg, D)
+
+    # GATHER-ONLY combine: assignment i pulls its slot's output row.
+    inv_order = jnp.argsort(order, axis=1)                  # flat -> sorted
+    pos_in_e = inv_order - jnp.take_along_axis(starts, flat_e, axis=1)
+    keep = pos_in_e < Cg
+    slot_of = jnp.minimum(flat_e * Cg + pos_in_e, E * Cg - 1)
+    pulled = jnp.take_along_axis(ye, slot_of[..., None], axis=1) \
+        * (flat_g * keep).astype(ye.dtype)[..., None]
+    y = pulled.reshape(G, Tg, k, D).sum(axis=2)
+    y = shard_act(y, ("moe_groups", None, None))
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(experts[..., 0], E), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, D), aux
+
+
+def _moe_ffn(x, p, li, cfg: LMConfig):
+    """Sort-based capacity dispatch -> grouped einsum -> combine."""
+    if cfg.dispatch_groups:
+        return _moe_ffn_grouped(x, p, li, cfg)
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = moe_capacity(cfg, T)
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"][li])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, k)                 # [T,k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = experts.reshape(-1)                             # [T*k]
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_g = gates.reshape(-1)
+
+    order = jnp.argsort(flat_e)                              # stable
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[se]
+    keep = pos < C
+    dest = jnp.where(keep, se * C + pos, E * C)              # E*C = drop slot
+
+    gathered = xt[st] * keep[:, None].astype(xt.dtype)
+    xd = jnp.zeros((E * C + 1, D), xt.dtype).at[dest].set(gathered)
+    xd = shard_act(xd[:E * C].reshape(E, C, D), ("experts", None, None))
+
+    h = jnp.einsum("ecd,edf->ecf", xd, p["w1"][li])
+    g = jnp.einsum("ecd,edf->ecf", xd, p["w3"][li])
+    a = jax.nn.silu(h) * g
+    a = shard_act(a, ("experts", None, "d_ff"))
+    ye = jnp.einsum("ecf,efd->ecd", a, p["w2"][li]).reshape(E * C, D)
+
+    safe_dest = jnp.minimum(dest, E * C - 1)
+    contrib = ye[safe_dest] * (sg * keep).astype(ye.dtype)[:, None]
+    y = jnp.zeros((T, D), x.dtype).at[st].add(contrib)
+
+    # router z-loss + load-balance aux (Switch) for training health
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(experts[:, 0], E), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+def layer_forward(x, layer, cfg: LMConfig, *, collect_kv: bool = False):
+    """One transformer block on a per-layer param slice.
+
+    x [B,S,D] -> (x', aux, (k, v) or None).  Used by forward / prefill
+    scan bodies AND by the dry-run's single-layer probe (the probe
+    corrects XLA's while-body-once cost accounting; see launch/dryrun).
+    """
+    S = x.shape[1]
+    h = rms_norm(x, layer["ln1"])
+    q, k, v = _qkv_sliced(h, layer, cfg)
+    q = rope(q, jnp.arange(S)[None, :], cfg.rope_base)
+    k = rope(k, jnp.arange(S)[None, :], cfg.rope_base)
+    attn = shard_act(_attention(q, k, v, cfg),
+                     ("batch", None, "heads", None))
+    x = x + jnp.einsum("bqnh,nhd->bqd", attn, layer["wo"])
+    x = shard_act(x, ("batch", "seq", None))
+    h2 = rms_norm(x, layer["ln2"])
+    if cfg.is_moe:
+        ff, aux = _moe_ffn_sliced(h2, layer, cfg)
+    else:
+        ff = _dense_ffn_sliced(h2, layer)
+        aux = jnp.zeros((), jnp.float32)
+    out = shard_act(x + ff, ("batch", "seq", None))
+    return out, aux, ((k, v) if collect_kv else None)
+
+
+def layer_decode(x, layer, k_cache, v_cache, pos, cfg: LMConfig):
+    """One decode step through one layer.
+
+    x [B,D]; k_cache/v_cache [B,S,K,hd]; pos scalar.
+    Returns (x', k_cache', v_cache').
+    """
+    B = x.shape[0]
+    S = k_cache.shape[1]
+    K, H = cfg.n_kv_heads, cfg.n_heads
+    G = H // K
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    kpos = jnp.arange(S)
+    h = rms_norm(x[:, None], layer["ln1"])
+    q, k, v = _qkv_sliced(h, layer, cfg)            # q [B,1,H,hd]
+    q = rope(q, pos[None, None], cfg.rope_base)
+    k = rope(k, pos[None, None], cfg.rope_base)
+    k_cache = shard_act(jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0)),
+        ("batch", "kv_seq", "kv_heads", None))
+    v_cache = shard_act(jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0)),
+        ("batch", "kv_seq", "kv_heads", None))
+    valid = kpos <= pos
+    if cfg.attn_window is not None:
+        valid &= kpos > pos - cfg.attn_window
+    if cfg.gqa_repeat_kv:
+        ke = _expand_kv(k_cache, H)
+        ve = _expand_kv(v_cache, H)
+        scores = shard_act(
+            jnp.einsum("bnh,bsnh->bns", q[:, 0],
+                       ke).astype(jnp.float32) * scale,
+            ("batch", "heads", "kv_seq"))
+        scores = jnp.where(valid[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        attn = jnp.einsum("bns,bsnh->bnh", probs, ve)[:, None]
+    else:
+        qg = q[:, 0].reshape(B, K, G, cfg.head_dim)
+        scores = shard_act(
+            jnp.einsum("bkgh,bskh->bkgs", qg,
+                       k_cache).astype(jnp.float32) * scale,
+            ("batch", "kv_heads", None, "kv_seq"))
+        scores = jnp.where(valid[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        attn = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache)
+        attn = attn.reshape(B, 1, H, cfg.head_dim)
+    x = x + jnp.einsum("bqnh,nhd->bqd", attn, layer["wo"])[:, 0]
+    h2 = rms_norm(x[:, None], layer["ln2"])
+    if cfg.is_moe:
+        ff, _ = _moe_ffn_sliced(h2, layer, cfg)
+    else:
+        ff = _dense_ffn_sliced(h2, layer)
+    return x + ff[:, 0], k_cache, v_cache
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg: LMConfig,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B,S] -> (logits [B,S,V], aux_loss scalar)."""
+    B, S = tokens.shape
+    x = shard_act(jnp.take(params["embed"], tokens, axis=0, mode="clip"),
+                  ("batch", "seq", None))
+    lp = params["layers"]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def layer_body(carry, layer):
+        x, aux = carry
+        x, a, _ = layer_forward(x, layer, cfg)
+        return (x, aux + a), None
+
+    body = _apply_remat(layer_body, cfg)
+    if cfg.scan_layers:
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), lp)
+    else:
+        carry = (x, aux_total)
+        for li in range(cfg.n_layers):
+            carry, _ = body(carry, jax.tree.map(lambda a: a[li], lp))
+        x, aux_total = carry
+    x = rms_norm(x, params["ln_f"])
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = shard_act(jnp.einsum("bsd,dv->bsv", x, unembed),
+                       ("batch", None, "vocab"))
+    return logits, aux_total / cfg.n_layers
+
+
+def _apply_remat(body, cfg: LMConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return body
+
+
+# per-layer-slice variants (layer dict has leading L removed by scan)
+def _qkv_sliced(x, layer, cfg: LMConfig):
+    p = {k2: v[None] for k2, v in layer.items()}   # reuse _qkv with li=0
+    return _qkv(x, p, 0, cfg)
+
+
+def _dense_ffn_sliced(x, layer):
+    return _dense_ffn(x, {k: v[None] for k, v in layer.items()}, 0)
+
+
+def _moe_ffn_sliced(x, layer, cfg: LMConfig):
+    return _moe_ffn(x, {k: v[None] for k, v in layer.items()}, 0, cfg)
+
+
+def causal_lm_loss(params: Dict, batch: Dict, cfg: LMConfig) -> jnp.ndarray:
+    """Causal-LM cross entropy, written shard-friendly.
+
+    The vocab axis of ``logits`` is model-sharded; a ``take_along_axis``
+    (gather) on that axis would force GSPMD to replicate the full fp32
+    [B,S,V] tensor on every device.  Instead both the padding mask and
+    the gold-logit selection are *elementwise* in V followed by a
+    reduction, which partitions cleanly (partial reduce + all-reduce).
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    logits, aux = forward(params, tokens, cfg)
+    logits = logits.astype(jnp.float32)
+    V = cfg.padded_vocab
+    vocab_iota = jax.lax.iota(jnp.int32, V)
+    if V != cfg.vocab_size:
+        # mask padded vocab entries out of the softmax (elementwise)
+        logits = logits + jnp.where(vocab_iota >= cfg.vocab_size,
+                                    -1e30, 0.0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = vocab_iota[None, None, :] == labels[..., None]
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# inference: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache_specs(cfg: LMConfig, batch: int, max_len: int) -> Dict:
+    """ShapeDtypeStruct/ParamSpec tree for the KV cache."""
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": ParamSpec((L, batch, max_len, K, hd),
+                       ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                       cfg.dtype, init="zeros"),
+        "v": ParamSpec((L, batch, max_len, K, hd),
+                       ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                       cfg.dtype, init="zeros"),
+    }
+
+
+def prefill(params: Dict, tokens: jnp.ndarray, cfg: LMConfig,
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Forward-only pass building the KV cache.
+
+    Returns (last-position logits [B,V], cache {k,v: [L,B,S,K,hd]}).
+    """
+    B, S = tokens.shape
+    x = shard_act(jnp.take(params["embed"], tokens, axis=0, mode="clip"),
+                  ("batch", "seq", None))
+    lp = params["layers"]
+
+    def layer_body(x, layer):
+        x, _, kv = layer_forward(x, layer, cfg, collect_kv=True)
+        return x, kv
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(layer_body, x, lp)
+    else:
+        ks_list, vs_list = [], []
+        for li in range(cfg.n_layers):
+            x, (k, v) = layer_body(x, jax.tree.map(lambda a: a[li], lp))
+            ks_list.append(k)
+            vs_list.append(v)
+        ks, vs = jnp.stack(ks_list), jnp.stack(vs_list)
+    x = rms_norm(x[:, -1], params["ln_f"])
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bd,dv->bv", x, unembed)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_one(params: Dict, cache: Dict, tokens: jnp.ndarray,
+               pos: jnp.ndarray, cfg: LMConfig,
+               ) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step.
+
+    tokens [B] int32, pos scalar int32 (current length; same for all
+    sequences — continuous batching padding is handled upstream).
+    Returns (logits [B,V], updated cache).
+
+    The cache sequence axis is sharded over the *model* mesh axis
+    (split-K decode): scores and the softmax reduce across shards via
+    GSPMD collectives — the TPU analogue of flash-decoding.
+    """
+    B = tokens.shape[0]
+    S = cache["k"].shape[2]
+    x = jnp.take(params["embed"], tokens, axis=0, mode="clip")   # [B,D]
+    lp = params["layers"]
+    kpos = jnp.arange(S)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    K, H = cfg.n_kv_heads, cfg.n_heads
+    G = H // K
+
+    def layer_body(carry, inp):
+        x, = carry
+        layer, k_cache, v_cache = inp
+        x, k_cache, v_cache = layer_decode(x, layer, k_cache, v_cache,
+                                           pos, cfg)
+        return (x,), (k_cache, v_cache)
+
+    if cfg.scan_layers:
+        (x,), (ks, vs) = jax.lax.scan(layer_body, (x,),
+                                      (lp, cache["k"], cache["v"]))
+    else:
+        ks_list, vs_list = [], []
+        for li in range(cfg.n_layers):
+            (x,), (k_c, v_c) = layer_body(
+                (x,), (jax.tree.map(lambda a: a[li], lp),
+                       cache["k"][li], cache["v"][li]))
+            ks_list.append(k_c)
+            vs_list.append(v_c)
+        ks, vs = jnp.stack(ks_list), jnp.stack(vs_list)
+    x = rms_norm(x, params["ln_f"])
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bd,dv->bv", x, unembed)
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,313 @@
+"""RecSys model family: DLRM, DCN-v2, MIND, two-tower retrieval.
+
+The hot path is the sparse embedding lookup.  JAX has no native
+EmbeddingBag or CSR sparse, so the lookup substrate here is built from
+``jnp.take`` + ``jax.ops.segment_sum`` (one-hot fields) and masked
+gather-sum (multi-hot bags) — with a Pallas TPU kernel
+(``repro.kernels.embedding_bag``) as the accelerated path for bags.
+
+Embedding tables are row-sharded over the combined (data, model) mesh
+axes; per-field vocabularies are padded to a 512 multiple so every mesh
+divides them (lookup ids never reach the padding rows).
+
+Shapes follow the assignment: train_batch=65536, serve_p99=512,
+serve_bulk=262144, retrieval_cand = 1 query × 1M candidates.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ParamSpec
+
+__all__ = ["CRITEO_VOCABS", "RecsysConfig", "recsys_param_specs",
+           "embedding_bag", "dlrm_forward", "dcn_forward", "mind_forward",
+           "two_tower_embed", "recsys_train_loss", "recsys_serve",
+           "two_tower_retrieval_scores"]
+
+#: Criteo-Kaggle per-field categorical cardinalities (public DLRM config)
+CRITEO_VOCABS: Tuple[int, ...] = (
+    1460, 583, 10131227, 2202608, 305, 24, 12517, 633, 3, 93145, 5683,
+    8351593, 3194, 27, 14992, 5461306, 10, 5652, 2173, 4, 7046547, 18, 15,
+    286181, 105, 142572)
+
+
+def _pad512(v: int) -> int:
+    return ((v + 511) // 512) * 512
+
+
+@dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str                      # dlrm | dcn | mind | two_tower
+    embed_dim: int
+    n_dense: int = 0
+    vocab_sizes: Tuple[int, ...] = ()
+    bot_mlp: Tuple[int, ...] = ()
+    top_mlp: Tuple[int, ...] = ()
+    n_cross_layers: int = 0
+    deep_mlp: Tuple[int, ...] = ()
+    tower_mlp: Tuple[int, ...] = ()
+    n_interests: int = 0
+    capsule_iters: int = 3
+    hist_len: int = 50
+    item_vocab: int = 1_000_000
+    user_vocab: int = 2_000_000
+    dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def _mlp_specs(dims: Sequence[int], prefix: str, dt) -> Dict[str, ParamSpec]:
+    out = {}
+    for i in range(len(dims) - 1):
+        out[f"{prefix}_w{i}"] = ParamSpec(
+            (dims[i], dims[i + 1]), ("mlp_in", "mlp_out"), dt, init="he")
+        out[f"{prefix}_b{i}"] = ParamSpec(
+            (dims[i + 1],), ("mlp_out",), dt, init="zeros")
+    return out
+
+
+def _mlp(x, params, prefix: str, n: int, final_act: bool = False):
+    for i in range(n):
+        x = jnp.einsum("...i,io->...o", x, params[f"{prefix}_w{i}"]) \
+            + params[f"{prefix}_b{i}"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def recsys_param_specs(cfg: RecsysConfig) -> Dict:
+    dt = cfg.dtype
+    d = cfg.embed_dim
+    specs: Dict[str, Any] = {}
+    if cfg.kind in ("dlrm", "dcn"):
+        specs["tables"] = {
+            f"t{i}": ParamSpec((_pad512(v), d), ("table_rows", "table_dim"),
+                               dt, init="embed", init_scale=1.0 / math.sqrt(d))
+            for i, v in enumerate(cfg.vocab_sizes)}
+    if cfg.kind == "dlrm":
+        bot = (cfg.n_dense,) + cfg.bot_mlp
+        n_int = cfg.n_sparse + 1
+        d_inter = n_int * (n_int - 1) // 2 + cfg.bot_mlp[-1]
+        top = (d_inter,) + cfg.top_mlp
+        specs.update(_mlp_specs(bot, "bot", dt))
+        specs.update(_mlp_specs(top, "top", dt))
+    elif cfg.kind == "dcn":
+        d0 = cfg.n_dense + cfg.n_sparse * d
+        for i in range(cfg.n_cross_layers):
+            specs[f"cross_w{i}"] = ParamSpec((d0, d0), ("mlp_in", "mlp_out"),
+                                             dt, init="lecun")
+            specs[f"cross_b{i}"] = ParamSpec((d0,), ("mlp_out",), dt,
+                                             init="zeros")
+        specs.update(_mlp_specs((d0,) + cfg.deep_mlp, "deep", dt))
+        specs["logit_w"] = ParamSpec((d0 + cfg.deep_mlp[-1], 1),
+                                     ("mlp_in", None), dt)
+    elif cfg.kind == "mind":
+        specs["item_embed"] = ParamSpec(
+            (_pad512(cfg.item_vocab), d), ("table_rows", "table_dim"), dt,
+            init="embed", init_scale=1.0 / math.sqrt(d))
+        specs["S"] = ParamSpec((d, d), ("mlp_in", "mlp_out"), dt)
+        specs.update(_mlp_specs((d, d * 2, d), "interest", dt))
+    elif cfg.kind == "two_tower":
+        specs["user_embed"] = ParamSpec(
+            (_pad512(cfg.user_vocab), d), ("table_rows", "table_dim"), dt,
+            init="embed", init_scale=1.0 / math.sqrt(d))
+        specs["item_embed"] = ParamSpec(
+            (_pad512(cfg.item_vocab), d), ("table_rows", "table_dim"), dt,
+            init="embed", init_scale=1.0 / math.sqrt(d))
+        specs.update(_mlp_specs((d,) + cfg.tower_mlp, "user_tower", dt))
+        specs.update(_mlp_specs((d,) + cfg.tower_mlp, "item_tower", dt))
+    else:
+        raise ValueError(cfg.kind)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# embedding substrate
+# ---------------------------------------------------------------------------
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None,
+                  combiner: str = "sum") -> jnp.ndarray:
+    """EmbeddingBag: ids [B, L] -> [B, dim] (sum/mean over the bag).
+
+    The pure-JAX reference for the Pallas embedding_bag kernel.
+    """
+    emb = jnp.take(table, ids, axis=0, mode="clip")
+    if mask is not None:
+        emb = emb * mask[..., None].astype(emb.dtype)
+    out = emb.sum(axis=1)
+    if combiner == "mean":
+        denom = (mask.sum(axis=1, keepdims=True) if mask is not None
+                 else jnp.full((1, 1), ids.shape[1]))
+        out = out / jnp.maximum(denom.astype(out.dtype), 1.0)
+    return out
+
+
+def _field_embeds(tables: Dict[str, jnp.ndarray],
+                  sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    """sparse_ids [B, n_fields] (one id per field) -> [B, n_fields, d]."""
+    cols = [jnp.take(tables[f"t{i}"], sparse_ids[:, i], axis=0,
+                     mode="clip")
+            for i in range(sparse_ids.shape[1])]
+    return jnp.stack(cols, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# DLRM (arXiv:1906.00091) — dot interaction
+# ---------------------------------------------------------------------------
+
+def dlrm_forward(params: Dict, batch: Dict, cfg: RecsysConfig) -> jnp.ndarray:
+    dense, sparse = batch["dense"], batch["sparse"]     # [B,13], [B,26] int32
+    bot = _mlp(dense, params, "bot", len(cfg.bot_mlp), final_act=True)
+    emb = _field_embeds(params["tables"], sparse)       # [B, 26, d]
+    z = jnp.concatenate([bot[:, None, :], emb], axis=1)  # [B, 27, d]
+    inter = jnp.einsum("bnd,bmd->bnm", z, z)
+    n = z.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    flat = inter[:, iu, ju]                              # [B, n(n-1)/2]
+    x = jnp.concatenate([bot, flat], axis=1)
+    logit = _mlp(x, params, "top", len(cfg.top_mlp))
+    return logit[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2 (arXiv:2008.13535) — full-matrix cross layers ∥ deep MLP
+# ---------------------------------------------------------------------------
+
+def dcn_forward(params: Dict, batch: Dict, cfg: RecsysConfig) -> jnp.ndarray:
+    dense, sparse = batch["dense"], batch["sparse"]
+    emb = _field_embeds(params["tables"], sparse)       # [B, 26, d]
+    x0 = jnp.concatenate([dense, emb.reshape(emb.shape[0], -1)], axis=1)
+    x = x0
+    for i in range(cfg.n_cross_layers):
+        xw = jnp.einsum("bi,io->bo", x, params[f"cross_w{i}"]) \
+            + params[f"cross_b{i}"]
+        x = x0 * xw + x
+    deep = _mlp(x0, params, "deep", len(cfg.deep_mlp), final_act=True)
+    both = jnp.concatenate([x, deep], axis=1)
+    return jnp.einsum("bi,io->bo", both, params["logit_w"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# MIND (arXiv:1904.08030) — multi-interest capsule routing
+# ---------------------------------------------------------------------------
+
+def mind_interests(params: Dict, hist_ids: jnp.ndarray,
+                   hist_mask: jnp.ndarray, cfg: RecsysConfig) -> jnp.ndarray:
+    """B2I dynamic routing: history [B,L] -> K interest capsules [B,K,d]."""
+    d, K = cfg.embed_dim, cfg.n_interests
+    e = jnp.take(params["item_embed"], hist_ids, axis=0,
+                 mode="clip")               # [B,L,d]
+    e = e * hist_mask[..., None].astype(e.dtype)
+    eS = jnp.einsum("bld,de->ble", e, params["S"])       # shared bilinear map
+    B, L = hist_ids.shape
+    # fixed random routing-logit init (paper §B2I): breaks the capsule
+    # symmetry that all-zeros init would never escape
+    b_init = jax.random.normal(jax.random.key(17), (1, K, L),
+                               jnp.float32)
+    b_logit = jnp.broadcast_to(b_init, (B, K, L))
+    neg = jnp.where(hist_mask > 0, 0.0, -1e30)[:, None, :]
+    u = jnp.zeros((B, K, d), e.dtype)
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b_logit + neg, axis=1)        # over capsules
+        z = jnp.einsum("bkl,ble->bke", w.astype(eS.dtype), eS)
+        sq = jnp.sum(jnp.square(z.astype(jnp.float32)), -1, keepdims=True)
+        u = (z.astype(jnp.float32) * (sq / (1.0 + sq))
+             * jax.lax.rsqrt(sq + 1e-9)).astype(e.dtype)  # squash
+        b_logit = b_logit + jnp.einsum("bke,ble->bkl", u, eS
+                                       ).astype(jnp.float32)
+    # per-capsule MLP head (H-layer in the paper)
+    return _mlp(u, params, "interest", 2)
+
+
+def mind_forward(params: Dict, batch: Dict, cfg: RecsysConfig) -> jnp.ndarray:
+    """In-batch sampled-softmax training logits [B, B]."""
+    u = mind_interests(params, batch["hist_ids"], batch["hist_mask"], cfg)
+    t = jnp.take(params["item_embed"], batch["target_ids"], axis=0,
+                 mode="clip")               # [B,d]
+    # label-aware attention ≈ max over interests (pow→∞ limit)
+    scores = jnp.einsum("bkd,cd->bkc", u, t)             # [B,K,B]
+    return scores.max(axis=1)                            # [B,B]
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval (YouTube RecSys'19) — in-batch sampled softmax
+# ---------------------------------------------------------------------------
+
+def two_tower_embed(params: Dict, ids: jnp.ndarray, tower: str,
+                    cfg: RecsysConfig) -> jnp.ndarray:
+    table = params["user_embed" if tower == "user" else "item_embed"]
+    e = jnp.take(table, ids, axis=0, mode="clip")
+    out = _mlp(e, params, f"{tower}_tower", len(cfg.tower_mlp))
+    return out / jnp.maximum(
+        jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6)
+
+
+def two_tower_retrieval_scores(params: Dict, batch: Dict,
+                               cfg: RecsysConfig) -> jnp.ndarray:
+    """1 query vs n_candidates: batched dot, not a loop."""
+    u = two_tower_embed(params, batch["user_ids"], "user", cfg)     # [1,d']
+    c = two_tower_embed(params, batch["cand_ids"], "item", cfg)     # [N,d']
+    return jnp.einsum("qd,nd->qn", u, c)
+
+
+# ---------------------------------------------------------------------------
+# unified train/serve entry points
+# ---------------------------------------------------------------------------
+
+def recsys_train_loss(params: Dict, batch: Dict,
+                      cfg: RecsysConfig) -> jnp.ndarray:
+    if cfg.kind == "dlrm":
+        logit = dlrm_forward(params, batch, cfg)
+        y = batch["labels"].astype(jnp.float32)
+        z = logit.astype(jnp.float32)
+        return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+    if cfg.kind == "dcn":
+        logit = dcn_forward(params, batch, cfg)
+        y = batch["labels"].astype(jnp.float32)
+        z = logit.astype(jnp.float32)
+        return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+    if cfg.kind == "mind":
+        logits = mind_forward(params, batch, cfg).astype(jnp.float32)
+        labels = jnp.arange(logits.shape[0])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return (logz - gold).mean()
+    if cfg.kind == "two_tower":
+        u = two_tower_embed(params, batch["user_ids"], "user", cfg)
+        i = two_tower_embed(params, batch["item_ids"], "item", cfg)
+        logits = jnp.einsum("bd,cd->bc", u, i).astype(jnp.float32) * 10.0
+        # logQ correction for in-batch sampling (uniform proposal)
+        labels = jnp.arange(logits.shape[0])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return (logz - gold).mean()
+    raise ValueError(cfg.kind)
+
+
+def recsys_serve(params: Dict, batch: Dict, cfg: RecsysConfig) -> jnp.ndarray:
+    if cfg.kind == "dlrm":
+        return jax.nn.sigmoid(dlrm_forward(params, batch, cfg))
+    if cfg.kind == "dcn":
+        return jax.nn.sigmoid(dcn_forward(params, batch, cfg))
+    if cfg.kind == "mind":
+        u = mind_interests(params, batch["hist_ids"], batch["hist_mask"], cfg)
+        t = jnp.take(params["item_embed"], batch["target_ids"], axis=0,
+                     mode="clip")
+        return jnp.einsum("bkd,bd->bk", u, t).max(axis=1)
+    if cfg.kind == "two_tower":
+        return two_tower_retrieval_scores(params, batch, cfg)
+    raise ValueError(cfg.kind)

@@ -1,0 +1,3 @@
+from .service import ScoringService, ServiceStats
+
+__all__ = ["ScoringService", "ServiceStats"]

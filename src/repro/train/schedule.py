@@ -1,0 +1,20 @@
+"""LR schedules (pure functions of step, usable inside jit)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["linear_warmup_cosine", "constant"]
+
+
+def constant(step, *, value: float = 1.0):
+    return jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup_cosine(step, *, warmup: int = 100, total: int = 10000,
+                         floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    progress = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return warm * (floor + (1.0 - floor) * cos)

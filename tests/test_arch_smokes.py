@@ -1,0 +1,74 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family
+runs one forward/train step on CPU with finite outputs + right shapes.
+The FULL configs are exercised only via the dry-run (abstract lowering).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, all_cells
+
+
+def test_registry_has_all_ten_archs_and_40_cells():
+    assert len(ARCHS) == 10
+    cells = all_cells()
+    assert len(cells) == 40
+    fams = {a.family for a in ARCHS.values()}
+    assert fams == {"lm", "gnn", "recsys"}
+
+
+@pytest.mark.parametrize("arch_name", sorted(ARCHS))
+def test_arch_smoke(arch_name):
+    arch = ARCHS[arch_name]
+    small, run = arch.smoke()
+    out = run()
+    for k, v in out.items():
+        arr = jnp.asarray(v)
+        assert not bool(jnp.isnan(arr).any()), f"{arch_name}/{k} has NaN"
+        assert not bool(jnp.isinf(arr).any()), f"{arch_name}/{k} has Inf"
+    if arch.family == "lm":
+        assert out["logits"].ndim == 3
+        assert out["logits"].shape[-1] == small.padded_vocab
+        assert float(out["loss"]) > 0
+    elif arch.family == "gnn":
+        assert out["logits"].shape[-1] == small.n_classes
+    else:
+        assert float(out["loss"]) > 0
+
+
+@pytest.mark.parametrize("arch_name", sorted(ARCHS))
+def test_cells_constructible(arch_name):
+    """Every (arch × shape) builds a Cell with consistent abstract args
+    (no lowering here — that's the dry-run's job)."""
+    arch = ARCHS[arch_name]
+    for shape in arch.shape_names():
+        cell = arch.cell(shape)
+        assert len(cell.abstract_args) == len(cell.arg_spec_trees)
+        leaves = jax.tree.leaves(cell.abstract_args)
+        assert all(hasattr(l, "shape") for l in leaves)
+
+
+def test_exact_published_configs():
+    g = ARCHS["granite-moe-3b-a800m"].config
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff,
+            g.vocab_size, g.n_experts, g.top_k) == \
+        (32, 1536, 24, 8, 512, 49155, 40, 8)
+    p = ARCHS["phi3.5-moe-42b-a6.6b"].config
+    assert (p.n_layers, p.d_model, p.n_experts, p.top_k) == (32, 4096, 16, 2)
+    q3 = ARCHS["qwen3-14b"].config
+    assert q3.qk_norm and q3.head_dim == 128 and q3.vocab_size == 151936
+    s = ARCHS["smollm-360m"].config
+    assert (s.n_heads, s.n_kv_heads, s.d_ff) == (15, 5, 2560)
+    q1 = ARCHS["qwen1.5-110b"].config
+    assert q1.qkv_bias and q1.n_layers == 80 and q1.d_ff == 49152
+    gc = ARCHS["gcn-cora"].config
+    assert gc.n_layers == 2 and gc.d_hidden == 16
+    d = ARCHS["dlrm-rm2"].config
+    assert d.embed_dim == 64 and len(d.vocab_sizes) == 26
+    assert d.bot_mlp == (512, 256, 64) and d.top_mlp == (512, 512, 256, 1)
+    dc = ARCHS["dcn-v2"].config
+    assert dc.embed_dim == 16 and dc.n_cross_layers == 3
+    m = ARCHS["mind"].config
+    assert m.n_interests == 4 and m.capsule_iters == 3
+    tt = ARCHS["two-tower-retrieval"].config
+    assert tt.embed_dim == 256 and tt.tower_mlp == (1024, 512, 256)

@@ -1,0 +1,63 @@
+"""auto_cache + typecheck_pipeline (paper §6 future work, implemented)."""
+import pytest
+
+from repro.caching import (KeyValueCache, RetrieverCache, ScorerCache,
+                           UncacheableError, auto_cache, typecheck_pipeline)
+from repro.core import ColFrame, GenericTransformer
+from repro.ir import InvertedIndex, QueryExpander, msmarco_like
+from repro.models.cross_encoder import DuoScorer, EncoderConfig, MonoScorer
+
+CORPUS = msmarco_like(1, scale=0.03)
+INDEX = InvertedIndex.build(CORPUS.get_corpus_iter())
+CE = EncoderConfig(n_layers=1, d_model=32, n_heads=2, d_ff=64,
+                   vocab_size=2048, max_len=16)
+
+
+def test_auto_cache_picks_retriever_cache():
+    c = auto_cache(INDEX.bm25())
+    assert isinstance(c, RetrieverCache)
+    c.close()
+
+
+def test_auto_cache_picks_scorer_cache():
+    c = auto_cache(MonoScorer(CE))
+    assert isinstance(c, ScorerCache)
+    c.close()
+
+
+def test_auto_cache_picks_kv_cache():
+    c = auto_cache(QueryExpander(2))
+    assert isinstance(c, KeyValueCache)
+    c.close()
+
+
+def test_auto_cache_refuses_pairwise_scorer():
+    """The paper-§5 DuoT5 caveat, enforced by metadata."""
+    with pytest.raises(UncacheableError, match="cacheable=False"):
+        auto_cache(DuoScorer(CE))
+
+
+def test_auto_cache_refuses_nondeterministic():
+    t = GenericTransformer(lambda x: x, "rng", deterministic=False,
+                           key_columns=("qid",), value_columns=("query",))
+    with pytest.raises(UncacheableError, match="deterministic"):
+        auto_cache(t)
+
+
+def test_auto_cache_refuses_missing_metadata():
+    t = GenericTransformer(lambda x: x, "opaque")
+    with pytest.raises(UncacheableError, match="key/value"):
+        auto_cache(t)
+
+
+def test_typecheck_pipeline_catches_missing_text():
+    """MonoScorer needs a text column; raw BM25 output provides it via
+    its query/docno/text contract only after a TextLoader."""
+    bm25 = INDEX.bm25()
+    scorer = MonoScorer(CE)
+    bad = bm25 >> scorer
+    errors = typecheck_pipeline(bad)
+    assert errors and "text" in errors[0][1]
+    from repro.ir import TextLoader
+    good = bm25 >> TextLoader(CORPUS.text_map()) >> scorer
+    assert typecheck_pipeline(good) == []

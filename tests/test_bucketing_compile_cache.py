@@ -1,0 +1,69 @@
+"""TPU adaptations: bucketed miss execution + CompileCache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.caching import BucketedRunner, CompileCache, bucket_size, \
+    pad_batch
+
+
+def test_bucket_size_powers_of_two():
+    assert bucket_size(1) == 8
+    assert bucket_size(8) == 8
+    assert bucket_size(9) == 16
+    assert bucket_size(1000) == 1024
+
+
+@given(st.integers(1, 5000))
+@settings(max_examples=100, deadline=None)
+def test_property_bucket_bounds(n):
+    b = bucket_size(n)
+    assert b >= min(n, 8)
+    assert b & (b - 1) == 0          # power of two
+    assert b < 2 * max(n, 8)
+
+
+def test_pad_batch_repeats_row0():
+    a = np.arange(6).reshape(3, 2)
+    p = pad_batch(a, 5)
+    assert p.shape == (5, 2)
+    assert (p[3:] == a[0]).all()
+
+
+def test_bucketed_runner_bounded_shapes_and_exact_results():
+    compiled_shapes = []
+    @jax.jit
+    def fn(x):
+        compiled_shapes.append(x.shape)
+        return x.sum(axis=1)
+    runner = BucketedRunner(lambda x: fn(jnp.asarray(x)), floor=8,
+                            max_bucket=64)
+    rng = np.random.default_rng(0)
+    sizes = [3, 7, 9, 17, 33, 63, 64, 65, 129, 5, 31]
+    for n in sizes:
+        x = rng.normal(size=(n, 4)).astype(np.float32)
+        out = runner(x)
+        assert out.shape == (n,)
+        np.testing.assert_allclose(out, x.sum(1), rtol=1e-5)
+    # O(log max_bucket) distinct compiled shapes
+    assert len(set(runner.shapes_issued)) <= 5
+
+
+def test_compile_cache_reuses_executables():
+    cc = CompileCache()
+    def f(x):
+        return x * 2 + 1
+    x = jnp.ones((16, 8))
+    y1 = cc.call("f", f, x)
+    y2 = cc.call("f", f, x)
+    assert cc.stats.compile_misses == 1
+    assert cc.stats.compile_hits == 1
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+    # different shape -> new compile
+    cc.call("f", f, jnp.ones((32, 8)))
+    assert cc.stats.compile_misses == 2
+    # same shapes under a different name -> separate entry
+    cc.call("g", f, x)
+    assert cc.stats.compile_misses == 3

@@ -1,0 +1,244 @@
+"""Explicit caches (paper §4): transparency invariant, hit/miss
+accounting, persistence, temporary-mode cleanup, miss→raise, Lazy,
+Artifact sharing, determinism verification."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.caching import (CacheMissError, DenseScorerCache, IndexerCache,
+                           KeyValueCache, Lazy, RetrieverCache, ScorerCache,
+                           from_hub, to_hub)
+from repro.core import ColFrame, GenericTransformer, add_ranks
+from repro.ir import InvertedIndex, QueryExpander, msmarco_like
+
+CORPUS = msmarco_like(1, scale=0.04)
+INDEX = InvertedIndex.build(CORPUS.get_corpus_iter())
+TOPICS = CORPUS.get_topics()
+
+
+class CountingScorer(GenericTransformer):
+    def __init__(self):
+        self.calls = 0
+        def fn(inp):
+            self.calls += len(inp)
+            s = np.array([float(len(str(d)) % 7) + float(str(q)[-1] == "1")
+                          for q, d in zip(inp["query"].tolist(),
+                                          inp["docno"].tolist())])
+            return inp.assign(score=s)
+        super().__init__(fn, "counting_scorer",
+                         key_columns=("query", "docno"),
+                         value_columns=("score",))
+
+
+@pytest.fixture
+def results():
+    return INDEX.bm25(num_results=20)(TOPICS)
+
+
+# -- KeyValueCache -----------------------------------------------------------
+
+def test_kv_cache_hot_cold_and_transparency():
+    qe = QueryExpander(2)
+    with KeyValueCache(None, qe, key=("qid", "query"),
+                       value=("query",)) as kv:
+        cold = kv(TOPICS)
+        assert kv.stats.misses == len(TOPICS)
+        hot = kv(TOPICS)
+        assert kv.stats.hits == len(TOPICS)
+        direct = qe(TOPICS)
+        assert cold.equals(direct) and hot.equals(direct)
+
+
+def test_kv_cache_persists_across_instances(tmp_path):
+    qe = QueryExpander(2)
+    p = str(tmp_path / "kv")
+    with KeyValueCache(p, qe, key=("qid", "query"), value=("query",)) as kv:
+        kv(TOPICS)
+    with KeyValueCache(p, qe, key=("qid", "query"), value=("query",)) as kv2:
+        kv2(TOPICS)
+        assert kv2.stats.hits == len(TOPICS)
+        assert kv2.stats.misses == 0
+
+
+def test_kv_cache_rejects_non_rowwise():
+    bad = GenericTransformer(lambda inp: inp.head(1), "bad")
+    with KeyValueCache(None, bad, key=("qid",), value=("query",)) as kv:
+        with pytest.raises(ValueError, match="row-wise"):
+            kv(TOPICS)
+
+
+def test_temporary_cache_cleanup():
+    qe = QueryExpander(2)
+    kv = KeyValueCache(None, qe, key=("qid",), value=("query",))
+    path = kv.path
+    assert os.path.isdir(path)
+    kv.close()
+    assert not os.path.isdir(path)
+
+
+# -- ScorerCache -------------------------------------------------------------
+
+def test_scorer_cache_shares_across_retrievers(results):
+    """Paper §4.2: 'Will only compute scores for docnos that were not
+    returned by bm25' — the second pipeline reuses overlapping pairs."""
+    scorer = CountingScorer()
+    with ScorerCache(None, scorer) as sc:
+        out1 = sc(results)
+        calls_after_first = scorer.calls
+        sc(results)                          # fully cached
+        assert scorer.calls == calls_after_first
+        # overlapping but different candidate set
+        shallow = INDEX.bm25(num_results=10)(TOPICS)
+        sc(shallow)
+        assert scorer.calls == calls_after_first   # subset => no new work
+        assert "rank" in out1.columns
+        direct = add_ranks(scorer(results))
+        assert out1.equals(direct, cols=["qid", "docno", "score", "rank"])
+
+
+def test_scorer_cache_reassigns_ranks(results):
+    scorer = CountingScorer()
+    with ScorerCache(None, scorer) as sc:
+        out = sc(results)
+        for (_,), idx in out.group_indices(["qid"]).items():
+            ranks = sorted(out["rank"][idx].tolist())
+            assert ranks == list(range(len(idx)))
+
+
+def test_dense_scorer_cache_matches_sqlite(results):
+    s1, s2 = CountingScorer(), CountingScorer()
+    with ScorerCache(None, s1) as sc, \
+         DenseScorerCache(None, s2,
+                          docnos=CORPUS.docs["docno"].tolist()) as dc:
+        a = sc(results)
+        b = dc(results)
+        assert a.equals(b, cols=["qid", "docno", "score", "rank"])
+        b2 = dc(results)
+        assert s2.calls == len(results)       # second pass fully cached
+        assert b2.equals(b)
+
+
+def test_dense_scorer_cache_grows_rows(results):
+    s = CountingScorer()
+    with DenseScorerCache(None, s, docnos=CORPUS.docs["docno"].tolist()) \
+            as dc:
+        dc.GROW = 2
+        dc(results)        # > 2 distinct queries forces growth
+        assert len(dc._query_rows) == len(set(TOPICS["qid"].tolist()))
+
+
+# -- RetrieverCache ----------------------------------------------------------
+
+def test_retriever_cache_round_trip():
+    bm25 = INDEX.bm25(num_results=15)
+    with RetrieverCache(None, bm25) as rc:
+        cold = rc(TOPICS)
+        hot = rc(TOPICS)
+        assert rc.stats.hits == len(TOPICS)
+        direct = bm25(TOPICS)
+        assert cold.equals(direct, cols=["qid", "docno", "score", "rank"])
+        assert hot.equals(direct, cols=["qid", "docno", "score", "rank"])
+
+
+def test_retriever_cache_partial_hits():
+    bm25 = INDEX.bm25(num_results=5)
+    with RetrieverCache(None, bm25) as rc:
+        rc(TOPICS.head(3))
+        rc(TOPICS)
+        assert rc.stats.hits == 3
+        assert rc.stats.misses == len(TOPICS) + 0
+
+
+# -- IndexerCache ------------------------------------------------------------
+
+def test_indexer_cache_preserves_order_and_forward_index():
+    with IndexerCache(None) as ic:
+        ic.index(CORPUS.get_corpus_iter())
+        replay = list(ic)
+        orig = list(CORPUS.get_corpus_iter())
+        assert [r["docno"] for r in replay] == [r["docno"] for r in orig]
+        some = orig[7]
+        assert ic.get(some["docno"])["text"] == some["text"]
+        # build a real index from the cached stream (paper §4.4 usage)
+        idx2 = InvertedIndex.build(ic)
+        assert idx2.n_docs == len(orig)
+
+
+def test_indexer_cache_as_text_loader():
+    with IndexerCache(None) as ic:
+        ic.index(CORPUS.get_corpus_iter())
+        frame = ColFrame({"qid": ["q"], "docno":
+                          [CORPUS.docs["docno"][0]]})
+        out = ic(frame)
+        assert out["text"][0] == CORPUS.docs["text"][0]
+
+
+# -- miss -> raise, Lazy ------------------------------------------------------
+
+def test_cache_miss_error_without_transformer(results):
+    with ScorerCache(None) as sc:
+        with pytest.raises(CacheMissError):
+            sc(results)
+
+
+def test_lazy_constructs_once_and_only_when_needed(results):
+    built = []
+    def factory():
+        built.append(1)
+        return CountingScorer()
+    lazy = Lazy(factory, name="lazy_scorer")
+    with ScorerCache(None, lazy) as sc:
+        assert not lazy.constructed
+        sc(results)
+        assert lazy.constructed and len(built) == 1
+        sc(results)
+        assert len(built) == 1
+
+
+def test_lazy_never_constructed_on_full_hit(results):
+    scorer = CountingScorer()
+    with ScorerCache(None, scorer) as warm:
+        warm(results)
+        path = warm.path
+        warm._temporary = False      # keep dir for the second instance
+    built = []
+    lazy = Lazy(lambda: (built.append(1), CountingScorer())[1])
+    with ScorerCache(path, lazy) as sc:
+        sc(results)
+        assert built == []           # hot cache -> model never built
+    import shutil
+    shutil.rmtree(path, ignore_errors=True)
+
+
+# -- determinism verification (beyond paper §6) -------------------------------
+
+def test_verify_mode_catches_nondeterminism(results):
+    calls = {"n": 0}
+    def fn(inp):
+        calls["n"] += 1
+        s = np.arange(len(inp), dtype=np.float64) + calls["n"] * 100
+        return inp.assign(score=s)
+    flaky = GenericTransformer(fn, "flaky", key_columns=("query", "docno"),
+                               value_columns=("score",))
+    with ScorerCache(None, flaky, verify_fraction=1.0) as sc:
+        sc(results)
+        with pytest.raises(AssertionError, match="determinism"):
+            sc(results)
+
+
+# -- Artifact API --------------------------------------------------------------
+
+def test_artifact_hub_roundtrip(tmp_path, results, monkeypatch):
+    monkeypatch.setenv("REPRO_HUB", str(tmp_path / "hub"))
+    scorer = CountingScorer()
+    with ScorerCache(None, scorer) as sc:
+        sc(results)
+        sc.to_hf("grp/scores")
+    local = from_hub("grp/scores")
+    fresh = CountingScorer()
+    with ScorerCache(local, fresh) as sc2:
+        sc2(results)
+        assert fresh.calls == 0            # fully served from the artifact
+        assert sc2.stats.hit_rate == 1.0

@@ -1,0 +1,66 @@
+"""pipeline.compile() rewriting (paper §3's conceptual->logical map)."""
+import pytest
+
+from repro.core import ColFrame, Identity, RankCutoff, stages_of
+from repro.core.compile_opt import compile_pipeline
+from repro.ir import InvertedIndex, msmarco_like
+
+CORPUS = msmarco_like(1, scale=0.04)
+INDEX = InvertedIndex.build(CORPUS.get_corpus_iter())
+TOPICS = CORPUS.get_topics()
+
+
+def test_cutoff_pushdown_into_retriever():
+    bm25 = INDEX.bm25(num_results=1000)
+    compiled = compile_pipeline(bm25 % 10)
+    stages = stages_of(compiled)
+    assert len(stages) == 1
+    assert stages[0].num_results == 10
+    # semantics preserved
+    a = (bm25 % 10)(TOPICS)
+    b = compiled(TOPICS)
+    assert a.equals(b, cols=["qid", "docno", "score", "rank"])
+    # the original object is untouched (clone, not mutation)
+    assert bm25.num_results == 1000
+
+
+def test_cutoff_fusion_and_identity_elision():
+    bm25 = INDEX.bm25(num_results=100)
+    p = bm25 >> Identity() % 20 % 5        # -> bm25 % 20 % 5 w/ identity
+    compiled = compile_pipeline(p)
+    # identity dropped, cutoffs fused, then pushed into the retriever
+    stages = stages_of(compiled)
+    assert len(stages) == 1 and stages[0].num_results == 5
+    a = p(TOPICS)
+    b = compiled(TOPICS)
+    assert a.equals(b, cols=["qid", "docno", "score", "rank"])
+
+
+def test_no_pushdown_across_score_changing_stage():
+    from repro.core import GenericTransformer, add_ranks
+    bm25 = INDEX.bm25(num_results=50)
+    boost = GenericTransformer(
+        lambda r: add_ranks(r.assign(score=-r["score"])), "negate")
+    p = bm25 >> boost % 5
+    compiled = compile_pipeline(p)
+    # cutoff must stay AFTER the score change
+    assert len(stages_of(compiled)) == 3
+    a = p(TOPICS)
+    b = compiled(TOPICS)
+    assert a.equals(b, cols=["qid", "docno", "score", "rank"])
+
+
+def test_pushdown_larger_cutoff_noop():
+    bm25 = INDEX.bm25(num_results=10)
+    compiled = compile_pipeline(bm25 % 100)   # cutoff beyond num_results
+    assert len(stages_of(compiled)) == 2      # kept as-is (no-op anyway)
+
+
+def test_compile_composes_with_precompute():
+    """compile each pipeline first, then share the (compiled) prefix."""
+    from repro.core import longest_common_prefix
+    bm25 = INDEX.bm25(num_results=100)
+    pipes = [compile_pipeline(bm25 % 20 >> Identity()),
+             compile_pipeline(bm25 % 20)]
+    # both compile to the same single pushed-down retriever
+    assert len(longest_common_prefix(pipes)) == 1

@@ -1,0 +1,97 @@
+"""DenseRetriever (neural first-stage + RetrieverCache) and the
+step-keyed data pipeline contracts."""
+import numpy as np
+import pytest
+
+from repro.caching import RetrieverCache
+from repro.data.pipeline import (StepKeyedDataset, gcn_sampled,
+                                 lm_synthetic, recsys_synthetic)
+from repro.ir import msmarco_like
+from repro.ir.dense import DenseEncoder, DenseIndex
+from repro.models.cross_encoder import EncoderConfig
+
+CORPUS = msmarco_like(1, scale=0.02)
+CE = EncoderConfig(name="dense-ce", n_layers=1, d_model=32, n_heads=2,
+                   d_ff=64, vocab_size=2048, max_len=16)
+
+
+@pytest.fixture(scope="module")
+def dense_index():
+    return DenseIndex(DenseEncoder(CE)).index(CORPUS.get_corpus_iter())
+
+
+def test_dense_retriever_shapes_and_ranks(dense_index):
+    retr = dense_index.retriever(num_results=10)
+    out = retr(CORPUS.get_topics())
+    assert len(out) == 10 * len(CORPUS.get_topics())
+    for (_,), idx in out.group_indices(["qid"]).items():
+        scores = out["score"][idx][np.argsort(out["rank"][idx])]
+        assert all(scores[i] >= scores[i + 1] - 1e-6
+                   for i in range(len(scores) - 1))
+
+
+def test_dense_retriever_deterministic_and_cacheable(dense_index):
+    """The paper §4.3 flow with a NEURAL retriever: cache round-trips."""
+    retr = dense_index.retriever(num_results=5)
+    a = retr(CORPUS.get_topics())
+    with RetrieverCache(None, retr) as rc:
+        cold = rc(CORPUS.get_topics())
+        hot = rc(CORPUS.get_topics())
+        assert rc.stats.hits == len(CORPUS.get_topics())
+        assert cold.equals(a, cols=["qid", "docno", "rank"])
+        assert hot.equals(a, cols=["qid", "docno", "rank"])
+
+
+def test_dense_embeddings_normalized(dense_index):
+    norms = np.linalg.norm(dense_index.matrix, axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+
+
+# -- data pipeline ------------------------------------------------------------
+
+def test_step_keyed_random_access_determinism():
+    ds = StepKeyedDataset(lm_synthetic(1000, 32), global_batch=16, seed=3)
+    b1, b2 = ds.batch(7), ds.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(ds.batch(8)["tokens"], b1["tokens"])
+
+
+def test_sharded_slices_compose_to_global():
+    ds = StepKeyedDataset(lm_synthetic(1000, 16), global_batch=32, seed=0)
+    full = ds.batch(5)
+    parts = [ds.shard(i, 4).batch(5)["tokens"] for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full["tokens"])
+
+
+def test_recsys_generator_schemas():
+    from repro.configs import ARCHS
+    for name in ("dlrm-rm2", "mind", "two-tower-retrieval"):
+        cfg = ARCHS[name].config
+        gen = recsys_synthetic(cfg)
+        ds = StepKeyedDataset(gen, global_batch=8, seed=1)
+        b = ds.batch(0)
+        if cfg.kind in ("dlrm", "dcn"):
+            assert b["sparse"].shape == (8, cfg.n_sparse)
+            assert (b["sparse"].max(axis=0)
+                    < np.array(cfg.vocab_sizes)).all()
+        elif cfg.kind == "mind":
+            assert b["hist_ids"].shape == (8, cfg.hist_len)
+        else:
+            assert b["user_ids"].shape == (8,)
+
+
+def test_gcn_sampled_generator():
+    from repro.models.gcn import NeighborSampler
+    rng = np.random.default_rng(0)
+    N, E = 100, 500
+    src = rng.integers(0, N, E).astype(np.int32)
+    dst = rng.integers(0, N, E).astype(np.int32)
+    sampler = NeighborSampler.from_edges(N, src, dst)
+    feats = rng.normal(size=(N, 8)).astype(np.float32)
+    labels = rng.integers(0, 4, N).astype(np.int32)
+    gen = gcn_sampled(sampler, feats, labels, (5, 3))
+    ds = StepKeyedDataset(gen, global_batch=8, seed=0)
+    b = ds.batch(0)
+    assert b["feats_hop2"].shape == (8, 5, 3, 8)
+    b2 = ds.batch(0)
+    np.testing.assert_array_equal(b["feats_hop1"], b2["feats_hop1"])

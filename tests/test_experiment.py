@@ -1,0 +1,89 @@
+"""Declarative experiments (paper §2.2) + §3 precompute integration."""
+import numpy as np
+import pytest
+
+from repro.core import ColFrame, Experiment, GenericTransformer, add_ranks
+from repro.ir import InvertedIndex, msmarco_like
+
+CORPUS = msmarco_like(1, scale=0.04)
+INDEX = InvertedIndex.build(CORPUS.get_corpus_iter())
+BM25 = INDEX.bm25(num_results=50)
+
+
+def test_experiment_basic_table():
+    res = Experiment([BM25 % 10, BM25 % 30],
+                     CORPUS.get_topics(), CORPUS.get_qrels(),
+                     ["nDCG@10", "MAP", "R@30"])
+    assert len(res.names) == 2
+    for n in res.names:
+        assert 0 <= res.means[n]["nDCG@10"] <= 1
+    # deeper cutoff can only improve recall
+    assert res.means[res.names[1]]["R@30"] >= \
+        res.means[res.names[0]]["R@30"] - 1e-12
+
+
+def test_experiment_precompute_matches_naive():
+    systems = [BM25 % k for k in (5, 10, 20)]
+    naive = Experiment(systems, CORPUS.get_topics(), CORPUS.get_qrels(),
+                       ["nDCG@10", "MAP"])
+    pre = Experiment(systems, CORPUS.get_topics(), CORPUS.get_qrels(),
+                     ["nDCG@10", "MAP"], precompute_prefix=True)
+    trie = Experiment(systems, CORPUS.get_topics(), CORPUS.get_qrels(),
+                      ["nDCG@10", "MAP"], precompute_prefix=True,
+                      precompute_mode="trie")
+    for n1, n2, n3 in zip(naive.names, pre.names, trie.names):
+        for m in ("nDCG@10", "MAP"):
+            assert naive.means[n1][m] == pytest.approx(pre.means[n2][m])
+            assert naive.means[n1][m] == pytest.approx(trie.means[n3][m])
+    assert pre.precompute.prefix_len == 1
+    assert pre.precompute.stage_invocations_saved == 2
+
+
+def test_significance_machinery():
+    topics, qrels = CORPUS.get_topics(), CORPUS.get_qrels()
+    res = Experiment([BM25 % 10, BM25 % 10, BM25 % 2],
+                     topics, qrels, ["nDCG@10"], baseline=0,
+                     names=["base", "same", "worse"], correction="holm")
+    # identical system vs itself: p == 1
+    assert res.pvalues["same"]["nDCG@10"] == pytest.approx(1.0)
+    assert 0.0 <= res.pvalues["worse"]["nDCG@10"] <= 1.0
+    # corrected p >= raw p
+    assert res.corrected_pvalues["worse"]["nDCG@10"] >= \
+        res.pvalues["worse"]["nDCG@10"] - 1e-12
+
+
+def test_batch_size_does_not_change_results():
+    sys_ = [BM25 % 10]
+    full = Experiment(sys_, CORPUS.get_topics(), CORPUS.get_qrels(),
+                      ["MAP"])
+    batched = Experiment(sys_, CORPUS.get_topics(), CORPUS.get_qrels(),
+                         ["MAP"], batch_size=7)
+    assert full.means[full.names[0]]["MAP"] == \
+        pytest.approx(batched.means[batched.names[0]]["MAP"])
+
+
+def test_ttest_against_scipy():
+    from repro.core.experiment import _paired_ttest, _betainc
+    from scipy import stats
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        a = rng.normal(size=20)
+        b = a + rng.normal(scale=0.3, size=20) + 0.1
+        ours = _paired_ttest(a, b)
+        ref = stats.ttest_rel(a, b).pvalue
+        assert ours == pytest.approx(ref, rel=1e-6)
+    # the stdlib fallback agrees with scipy's betainc
+    from scipy import special
+    for (aa, bb, xx) in [(5, 0.5, 0.3), (9.5, 0.5, 0.8), (2, 2, 0.5)]:
+        assert _betainc(aa, bb, xx) == pytest.approx(
+            special.betainc(aa, bb, xx), rel=1e-6)
+
+
+def test_correction_methods():
+    from repro.core.experiment import _correct
+    ps = [0.01, 0.04, 0.03]
+    bonf = _correct(ps, "bonferroni")
+    assert bonf == pytest.approx([0.03, 0.12, 0.09])
+    holm = _correct(ps, "holm")
+    assert holm[0] == pytest.approx(0.03)
+    assert all(h <= b + 1e-12 for h, b in zip(holm, bonf))

@@ -1,0 +1,85 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ColFrame, relation_of
+
+
+def test_construction_and_basic_ops():
+    f = ColFrame({"qid": ["q1", "q2", "q1"], "score": [3.0, 1.0, 2.0]})
+    assert len(f) == 3
+    assert set(f.columns) == {"qid", "score"}
+    assert f["score"].dtype == np.float64
+    head = f.head(2)
+    assert len(head) == 2
+    masked = f.mask(f["score"] > 1.5)
+    assert len(masked) == 2
+
+
+def test_from_dicts_roundtrip():
+    rows = [{"a": 1, "b": "x"}, {"a": 2, "b": "y"}]
+    f = ColFrame.from_dicts(rows)
+    assert f.to_dicts() == rows
+
+
+def test_relation_of():
+    assert relation_of(ColFrame({"qid": ["1"], "query": ["a"]})) == "Q"
+    assert relation_of(ColFrame({"docno": ["1"], "text": ["a"]})) == "D"
+    assert relation_of(ColFrame({"qid": ["1"], "docno": ["d"],
+                                 "score": [1.0], "rank": [0]})) == "R"
+    assert relation_of(ColFrame({"qid": ["1"], "docno": ["d"],
+                                 "label": [1]})) == "RA"
+
+
+def test_sort_group_dedup():
+    f = ColFrame({"qid": ["b", "a", "a"], "score": [1.0, 3.0, 2.0]})
+    s = f.sort_values(["qid", "score"], ascending=[True, False])
+    assert s["qid"].tolist() == ["a", "a", "b"]
+    assert s["score"].tolist() == [3.0, 2.0, 1.0]
+    groups = f.group_indices(["qid"])
+    assert set(groups.keys()) == {("a",), ("b",)}
+    assert len(groups[("a",)]) == 2
+    d = f.dedup(["qid"])
+    assert len(d) == 2
+
+
+def test_merge_inner_and_left():
+    a = ColFrame({"k": ["x", "y", "z"], "va": [1, 2, 3]})
+    b = ColFrame({"k": ["y", "z"], "vb": [20, 30]})
+    inner = a.merge(b, on=["k"])
+    assert inner["k"].tolist() == ["y", "z"]
+    assert inner["vb"].tolist() == [20, 30]
+    left = a.merge(b, on=["k"], how="left")
+    assert len(left) == 3
+    assert left["vb"].tolist()[0] is None
+
+
+def test_concat_preserves_common_columns():
+    a = ColFrame({"x": [1], "y": ["p"]})
+    b = ColFrame({"x": [2], "y": ["q"], "z": [9]})
+    c = ColFrame.concat([a, b])
+    assert set(c.columns) == {"x", "y"}
+    assert c["x"].tolist() == [1, 2]
+
+
+@given(st.lists(st.tuples(st.integers(0, 5), st.floats(-100, 100)),
+                min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_property_sort_is_ordered(rows):
+    f = ColFrame({"k": [r[0] for r in rows],
+                  "v": [r[1] for r in rows]})
+    s = f.sort_values(["v"])
+    vals = s["v"].tolist()
+    assert all(vals[i] <= vals[i + 1] for i in range(len(vals) - 1))
+
+
+@given(st.lists(st.text(alphabet="abc", min_size=1, max_size=3),
+                min_size=1, max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_property_dedup_keeps_first_occurrence(keys):
+    f = ColFrame({"k": keys, "i": list(range(len(keys)))})
+    d = f.dedup(["k"])
+    seen = {}
+    for k, i in zip(keys, range(len(keys))):
+        seen.setdefault(k, i)
+    assert sorted(d["i"].tolist()) == sorted(seen.values())

@@ -1,0 +1,164 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (the container is CPU-only; TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bm25_block import bm25_block_op, bm25_block_ref
+from repro.kernels.cachekey_hash import cachekey_hash_op, cachekey_hash_ref
+from repro.kernels.cachekey_hash.ops import host_cachekey
+from repro.kernels.embedding_bag import embedding_bag_op, embedding_bag_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention_op
+
+
+
+# -- flash attention -----------------------------------------------------------
+
+FLASH_SWEEP = [
+    # B, H, K, Sq, Sk, hd, causal, dtype
+    (1, 2, 2, 64, 64, 32, True, jnp.float32),
+    (2, 4, 2, 128, 128, 64, True, jnp.float32),
+    (1, 8, 1, 128, 128, 64, True, jnp.float32),     # MQA
+    (2, 4, 4, 96, 96, 32, True, jnp.float32),       # unaligned -> pad
+    (1, 2, 2, 64, 256, 64, True, jnp.float32),      # cross Sq != Sk
+    (1, 4, 2, 128, 128, 64, False, jnp.float32),
+    (1, 2, 2, 128, 128, 128, True, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,H,K,Sq,Sk,hd,causal,dtype", FLASH_SWEEP)
+def test_flash_attention_sweep(B, H, K, Sq, Sk, hd, causal, dtype):
+    RNG = np.random.default_rng(B * 1000 + Sq)
+    q = jnp.array(RNG.normal(size=(B, H, Sq, hd)), dtype)
+    k = jnp.array(RNG.normal(size=(B, K, Sk, hd)), dtype)
+    v = jnp.array(RNG.normal(size=(B, K, Sk, hd)), dtype)
+    out = flash_attention_op(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_attention_block_shape_invariance():
+    RNG = np.random.default_rng(1)
+    q = jnp.array(RNG.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.array(RNG.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.array(RNG.normal(size=(1, 2, 256, 64)), jnp.float32)
+    outs = [flash_attention_op(q, k, v, block_q=bq, block_k=bk)
+            for bq, bk in [(64, 64), (128, 128), (128, 64), (64, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=2e-5)
+
+
+@given(st.integers(1, 3), st.sampled_from([1, 2, 4]),
+       st.sampled_from([64, 128]), st.sampled_from([32, 64]))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_property(B, K, S, hd):
+    RNG = np.random.default_rng(B * 7919 + K * 131 + S + hd)
+    H = K * 2
+    q = jnp.array(RNG.normal(size=(B, H, S, hd)), jnp.float32)
+    k = jnp.array(RNG.normal(size=(B, K, S, hd)), jnp.float32)
+    v = jnp.array(RNG.normal(size=(B, K, S, hd)), jnp.float32)
+    out = flash_attention_op(q, k, v, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+# -- embedding bag -------------------------------------------------------------
+
+EB_SWEEP = [
+    # V, d, B, L, weighted, combiner, dtype
+    (64, 32, 4, 5, True, "sum", jnp.float32),
+    (128, 48, 8, 3, False, "sum", jnp.float32),
+    (1000, 64, 16, 10, True, "mean", jnp.float32),
+    (64, 128, 2, 7, True, "sum", jnp.bfloat16),
+    (32, 16, 1, 1, False, "mean", jnp.float32),
+]
+
+
+@pytest.mark.parametrize("V,d,B,L,weighted,combiner,dtype", EB_SWEEP)
+def test_embedding_bag_sweep(V, d, B, L, weighted, combiner, dtype):
+    RNG = np.random.default_rng(V + d * 3 + B + L)
+    tab = jnp.array(RNG.normal(size=(V, d)), dtype)
+    ids = jnp.array(RNG.integers(0, V, (B, L)), jnp.int32)
+    w = jnp.array(RNG.random((B, L)), dtype) if weighted else None
+    out = embedding_bag_op(tab, ids, w, combiner=combiner)
+    ref = embedding_bag_ref(tab, ids, w, combiner=combiner)
+    tol = 1e-5 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_embedding_bag_duplicate_ids_accumulate():
+    tab = jnp.eye(8, dtype=jnp.float32)
+    ids = jnp.array([[3, 3, 3]], jnp.int32)
+    out = embedding_bag_op(tab, ids)
+    assert float(out[0, 3]) == pytest.approx(3.0)
+
+
+# -- cachekey hash --------------------------------------------------------------
+
+@pytest.mark.parametrize("N,L", [(1, 1), (10, 7), (256, 16), (300, 64)])
+def test_cachekey_hash_sweep(N, L):
+    RNG = np.random.default_rng(N * 100 + L)
+    toks = jnp.array(RNG.integers(0, 2 ** 31 - 1, (N, L)), jnp.int32)
+    out = cachekey_hash_op(toks)
+    ref = cachekey_hash_ref(toks)
+    assert bool((out == ref).all())
+
+
+def test_cachekey_hash_host_device_digest_identical():
+    RNG = np.random.default_rng(3)
+    toks = jnp.array(RNG.integers(0, 2 ** 31 - 1, (5, 9)), jnp.int32)
+    out = np.asarray(cachekey_hash_op(toks))
+    for i in range(5):
+        host = host_cachekey(np.asarray(toks[i]))
+        dev = (int(out[i, 0]).to_bytes(4, "little")
+               + int(out[i, 1]).to_bytes(4, "little"))
+        assert host == dev
+
+
+def test_cachekey_hash_sensitivity():
+    """One-token change flips the digest (avalanche sanity)."""
+    RNG = np.random.default_rng(4)
+    toks = jnp.array(RNG.integers(0, 1000, (1, 12)), jnp.int32)
+    a = np.asarray(cachekey_hash_op(toks))
+    b = np.asarray(cachekey_hash_op(toks.at[0, 5].add(1)))
+    assert (a != b).any()
+
+
+# -- bm25 block -------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,D", [(8, 128), (20, 150), (64, 512), (5, 40)])
+def test_bm25_block_sweep(T, D):
+    RNG = np.random.default_rng(T * 31 + D)
+    tf = jnp.array(RNG.poisson(0.3, (T, D)), jnp.float32)
+    idf = jnp.array(RNG.random(T) * 5, jnp.float32)
+    dl = jnp.array(RNG.integers(20, 100, D), jnp.float32)
+    out = bm25_block_op(tf, idf, dl, avg_dl=55.0)
+    ref = bm25_block_ref(tf, idf, dl, avg_dl=55.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_bm25_block_matches_inverted_index():
+    """The kernel reproduces the host BM25 scores on a real query."""
+    from repro.ir import InvertedIndex, msmarco_like
+    corpus = msmarco_like(1, scale=0.02)
+    idx = InvertedIndex.build(corpus.get_corpus_iter())
+    bm25 = idx.bm25(num_results=30)
+    query = corpus.topics["query"][0]
+    terms = [t for t in idx.tokenizer.tokenize(query) if t in idx.postings]
+    D = idx.n_docs
+    tf = np.zeros((len(terms), D), np.float32)
+    idf = np.array([idx.idf(t) for t in terms], np.float32)
+    for ti, t in enumerate(terms):
+        ids, tfs = idx.postings[t]
+        tf[ti, ids] = tfs
+    kernel_scores = np.asarray(bm25_block_op(
+        jnp.array(tf), jnp.array(idf), jnp.array(idx.doc_len),
+        k1=bm25.k1, b=bm25.b, avg_dl=idx.avg_dl))
+    ids, scores = bm25.score_query(query)
+    np.testing.assert_allclose(kernel_scores[ids], scores, rtol=1e-4)

@@ -1,0 +1,76 @@
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ColFrame, evaluate, parse_measure
+
+
+QRELS = ColFrame({"qid": ["q1", "q1", "q2"],
+                  "docno": ["d1", "d2", "d9"],
+                  "label": [2, 1, 1]})
+
+
+def results(rows):
+    return ColFrame.from_dicts(
+        [{"qid": q, "docno": d, "score": s, "rank": r}
+         for q, d, s, r in rows])
+
+
+def test_parse_measure():
+    m = parse_measure("nDCG@10")
+    assert m.k == 10 and m.name == "nDCG@10"
+    assert parse_measure("MAP").k is None
+    with pytest.raises(ValueError):
+        parse_measure("XYZ@3")
+
+
+def test_perfect_ranking_scores_one():
+    res = results([("q1", "d1", 3.0, 0), ("q1", "d2", 2.0, 1),
+                   ("q2", "d9", 1.0, 0)])
+    pq = evaluate(res, QRELS, ["nDCG@10", "MAP", "MRR", "P@1", "R@10"])
+    assert pq["nDCG@10"]["q1"] == pytest.approx(1.0)
+    assert pq["MAP"]["q1"] == pytest.approx(1.0)
+    assert pq["MRR"]["q2"] == pytest.approx(1.0)
+    assert pq["P@1"]["q1"] == pytest.approx(1.0)
+    assert pq["R@10"]["q2"] == pytest.approx(1.0)
+
+
+def test_known_ndcg_value():
+    # relevant doc (label 2) at rank 1 (0-based), nothing else
+    res = results([("q1", "dX", 2.0, 0), ("q1", "d1", 1.0, 1)])
+    pq = evaluate(res, QRELS, ["nDCG@10"])
+    dcg = (2 ** 2 - 1) / math.log2(3)
+    idcg = (2 ** 2 - 1) / math.log2(2) + (2 ** 1 - 1) / math.log2(3)
+    assert pq["nDCG@10"]["q1"] == pytest.approx(dcg / idcg)
+
+
+def test_unretrieved_query_scores_zero():
+    res = results([("q1", "d1", 1.0, 0)])
+    pq = evaluate(res, QRELS, ["MAP", "nDCG@10"])
+    assert pq["MAP"]["q2"] == 0.0
+    assert "q2" in pq["nDCG@10"]
+
+
+def test_rr_position():
+    res = results([("q2", "dA", 3.0, 0), ("q2", "dB", 2.0, 1),
+                   ("q2", "d9", 1.0, 2)])
+    pq = evaluate(res, QRELS, ["MRR"])
+    assert pq["MRR"]["q2"] == pytest.approx(1.0 / 3.0)
+
+
+@given(st.permutations(["d1", "d2", "dA", "dB", "dC"]))
+@settings(max_examples=40, deadline=None)
+def test_property_measures_bounded_and_monotone(perm):
+    res = results([("q1", d, float(10 - i), i) for i, d in enumerate(perm)])
+    pq = evaluate(res, QRELS, ["nDCG@5", "MAP", "MRR", "P@5", "R@5"])
+    for m, per_q in pq.items():
+        for v in per_q.values():
+            assert 0.0 <= v <= 1.0
+    # putting d1 (the best doc) first can never hurt nDCG vs this perm
+    best_first = ["d1"] + [d for d in perm if d != "d1"]
+    res2 = results([("q1", d, float(10 - i), i)
+                    for i, d in enumerate(best_first)])
+    pq2 = evaluate(res2, QRELS, ["nDCG@5"])
+    assert pq2["nDCG@5"]["q1"] >= pq["nDCG@5"]["q1"] - 1e-12

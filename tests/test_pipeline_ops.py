@@ -1,0 +1,94 @@
+import numpy as np
+import pytest
+
+from repro.core import (ColFrame, Compose, GenericTransformer, Identity,
+                        RankCutoff, add_ranks, longest_common_prefix,
+                        pipeline_hash, stages_of)
+
+
+def make_retriever(name, n=10, base=100.0):
+    def fn(q):
+        rows = []
+        for qid in q["qid"].tolist():
+            for i in range(n):
+                rows.append({"qid": qid, "docno": f"{name}_d{i}",
+                             "score": base - i})
+        return add_ranks(ColFrame.from_dicts(rows))
+    return GenericTransformer(fn, name, one_to_many=True, params=(n,))
+
+
+QUERIES = ColFrame({"qid": ["q1", "q2"], "query": ["a b", "c d"]})
+
+
+def test_compose_flattens_and_equality():
+    A, B = make_retriever("A"), make_retriever("B")
+    p1 = A >> B >> Identity()
+    assert len(stages_of(p1)) == 3
+    p2 = A >> (B >> Identity())
+    assert p1 == p2
+    assert pipeline_hash(p1) == pipeline_hash(p2)
+    assert (A % 5).signature() == (A % 5).signature()
+    assert (A % 5) != (A % 6)
+
+
+def test_rank_cutoff():
+    A = make_retriever("A", n=10)
+    res = (A % 3)(QUERIES)
+    assert len(res) == 6
+    assert res["rank"].max() == 2
+
+
+def test_linear_combine_and_scalar_product():
+    A, B = make_retriever("A", 5), make_retriever("A", 5, base=10.0)
+    combined = (A + B)(QUERIES)
+    # same docnos -> scores sum
+    a, b = A(QUERIES), B(QUERIES)
+    expect = a["score"][0] + b["score"][0]
+    top = combined.sort_values(["qid", "rank"])
+    assert top["score"][0] == expect
+    scaled = (A * 2.0)(QUERIES)
+    assert scaled["score"].max() == a["score"].max() * 2.0
+
+
+def test_set_union_intersection():
+    A, B = make_retriever("A", 5), make_retriever("B", 5)
+    uni = (A | B)(QUERIES)
+    assert len(uni) == 20       # disjoint docnos, 10 per query
+    inter = (A & B)(QUERIES)
+    assert len(inter) == 0
+    same = (A & A)(QUERIES)
+    assert len(same) == 10
+
+
+def test_concatenate_puts_right_below_left():
+    A, B = make_retriever("A", 3), make_retriever("B", 3)
+    both = (A ^ B)(QUERIES)
+    ranked = both.sort_values(["qid", "rank"])
+    per_q = ranked.group_indices(["qid"])
+    for _, idx in per_q.items():
+        docs = [str(d) for d in ranked["docno"][idx]]
+        assert all(d.startswith("A") for d in docs[:3])
+        assert all(d.startswith("B") for d in docs[3:])
+
+
+def test_feature_union():
+    A, B = make_retriever("A", 4), make_retriever("A", 4, base=50.0)
+    feats = (A ** B)(QUERIES)
+    assert "features" in feats.columns
+    assert len(feats["features"][0]) == 2
+
+
+def test_add_ranks_stable_and_descending():
+    f = ColFrame({"qid": ["q"] * 4, "docno": list("abcd"),
+                  "score": [2.0, 3.0, 1.0, 3.0]})
+    r = add_ranks(f)
+    ranked = r.sort_values(["rank"])
+    assert ranked["score"].tolist() == [3.0, 3.0, 2.0, 1.0]
+    # tie broken by docno for determinism
+    assert ranked["docno"].tolist()[:2] == ["b", "d"]
+
+
+def test_input_type_checking():
+    cut = RankCutoff(5)
+    with pytest.raises(TypeError):
+        cut(ColFrame({"qid": ["q"], "query": ["text"]}))

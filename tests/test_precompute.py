@@ -1,0 +1,150 @@
+"""Prefix precomputation (paper §3): LCP Eq.2 + the cache-transparency
+invariant (precomputation changes time, never results), + the
+beyond-paper trie (resolves the §6 ablation limitation)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ColFrame, GenericTransformer, Identity, add_ranks,
+                        longest_common_prefix, run_with_precompute,
+                        run_with_trie, split_on_prefix, stages_of)
+
+
+class CountingStage(GenericTransformer):
+    """Transformer that counts invocations (for sharing assertions)."""
+
+    def __init__(self, name, fn=None, **kw):
+        self.calls = 0
+        def wrapped(inp, _fn=fn):
+            self.calls += 1
+            return _fn(inp) if _fn else inp
+        super().__init__(wrapped, name, **kw)
+
+
+def retr_fn(inp):
+    rows = []
+    for qid in inp["qid"].tolist():
+        for i in range(6):
+            rows.append({"qid": qid, "docno": f"d{i}", "score": 10.0 - i})
+    return add_ranks(ColFrame.from_dicts(rows))
+
+
+def boost_fn(inp):
+    return add_ranks(inp.assign(score=inp["score"] * 2.0))
+
+
+def shift_fn(inp):
+    return add_ranks(inp.assign(score=inp["score"] + 1.0))
+
+
+QUERIES = ColFrame({"qid": ["q1", "q2", "q3"],
+                    "query": ["alpha", "beta", "gamma"]})
+
+
+def test_lcp_matches_eq2():
+    A = GenericTransformer(retr_fn, "A")
+    B = GenericTransformer(boost_fn, "B")
+    C = GenericTransformer(shift_fn, "C")
+    assert len(longest_common_prefix([A >> B, A >> C])) == 1
+    assert len(longest_common_prefix([A >> B >> C, A >> B])) == 2
+    assert len(longest_common_prefix([A >> B, C >> B])) == 0
+    assert len(longest_common_prefix([A % 5, A % 3])) == 1   # shared A
+    assert longest_common_prefix([]) == ()
+
+
+def test_split_on_prefix():
+    A = GenericTransformer(retr_fn, "A")
+    B = GenericTransformer(boost_fn, "B")
+    p = A >> B
+    rest = split_on_prefix(p, 1)
+    assert stages_of(rest)[0] == B
+    ident = split_on_prefix(p, 2)
+    assert isinstance(ident, Identity)
+
+
+def test_precompute_transparency_invariant():
+    """Outputs with precomputation == outputs without (paper's implicit
+    contract; the whole point of §3)."""
+    A = CountingStage("A", retr_fn)
+    B = CountingStage("B", boost_fn)
+    C = CountingStage("C", shift_fn)
+    pipes = [A >> B, A >> C, A >> B >> C]
+    naive = [p(QUERIES) for p in pipes]
+    calls_naive = A.calls
+    outs, stats = run_with_precompute(pipes, QUERIES)
+    assert A.calls == calls_naive + 1          # A ran once more, not 3x
+    for got, want in zip(outs, naive):
+        assert got.equals(want, cols=["qid", "docno", "score", "rank"])
+    assert stats.prefix_len == 1
+    assert stats.stage_invocations_saved == 2
+
+
+def test_trie_dominates_lcp_on_ablation_case():
+    """Paper §6: A; A»B; A»B»C — LCP precomputes only A, the trie also
+    shares A»B."""
+    A = CountingStage("A", retr_fn)
+    B = CountingStage("B", boost_fn)
+    C = CountingStage("C", shift_fn)
+    pipes = [A, A >> B, A >> B >> C]
+    naive = [p(QUERIES) for p in pipes]
+    A.calls = B.calls = C.calls = 0
+    outs, stats = run_with_trie(pipes, QUERIES)
+    assert A.calls == 1
+    assert B.calls == 1           # LCP-only would call B twice
+    assert C.calls == 1
+    for got, want in zip(outs, naive):
+        assert got.equals(want, cols=["qid", "docno", "score", "rank"])
+    assert stats.nodes_executed == 3
+    assert stats.nodes_total == 6
+
+
+@given(st.lists(st.lists(st.sampled_from("ABCD"), min_size=1, max_size=4),
+                min_size=2, max_size=5))
+@settings(max_examples=40, deadline=None)
+def test_property_lcp_is_common_prefix(seqs):
+    stages = {c: GenericTransformer(lambda x: x, c) for c in "ABCD"}
+    pipes = []
+    for seq in seqs:
+        p = stages[seq[0]]
+        for c in seq[1:]:
+            p = p >> stages[c]
+        pipes.append(p)
+    prefix = longest_common_prefix(pipes)
+    k = len(prefix)
+    # prefix property: every pipeline starts with it
+    for seq in seqs:
+        assert len(seq) >= k
+        assert all(stages[seq[j]] == prefix[j] for j in range(k))
+    # maximality: no longer common prefix exists
+    if all(len(s) > k for s in seqs):
+        first = seqs[0][k]
+        assert any(s[k] != first for s in seqs[1:])
+
+
+@given(st.lists(st.lists(st.sampled_from("AB"), min_size=1, max_size=3),
+                min_size=1, max_size=4))
+@settings(max_examples=30, deadline=None)
+def test_property_trie_executes_each_distinct_prefix_once(seqs):
+    calls = []
+    def mk(c):
+        def fn(x, _c=c):
+            return x
+        t = GenericTransformer(fn, c)
+        orig = t.transform
+        def counting(inp, _t=t, _orig=orig):
+            calls.append(_t.name)
+            return _orig(inp)
+        t.transform = counting
+        return t
+    stages = {c: mk(c) for c in "AB"}
+    pipes = []
+    for seq in seqs:
+        p = stages[seq[0]]
+        for c in seq[1:]:
+            p = p >> stages[c]
+        pipes.append(p)
+    outs, stats = run_with_trie(pipes, QUERIES)
+    distinct_prefixes = {tuple(s[:i + 1]) for s in seqs
+                         for i in range(len(s))}
+    assert stats.nodes_executed == len(distinct_prefixes)
+    assert len(calls) == len(distinct_prefixes)

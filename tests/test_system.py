@@ -1,0 +1,115 @@
+"""End-to-end behaviour: the paper's §5 experiment at reduced scale.
+
+Settings: (1) no caching, (2) prefix precomputation, (3) cold
+ScorerCache on the Mono scorer, (4) hot ScorerCache.  The invariant the
+paper implies but never states: all four settings produce IDENTICAL
+evaluation tables; caching changes time, not results.  Work counters
+must be monotone non-increasing (1) >= (2) >= (3) >= (4).
+"""
+import numpy as np
+import pytest
+
+from repro.caching import ScorerCache
+from repro.core import ColFrame, Experiment
+from repro.ir import InvertedIndex, TextLoader, msmarco_like
+from repro.models.cross_encoder import DuoScorer, EncoderConfig, MonoScorer
+from repro.serve import ScoringService
+
+CORPUS = msmarco_like(1, scale=0.05)
+INDEX = InvertedIndex.build(CORPUS.get_corpus_iter())
+CE = EncoderConfig(n_layers=1, d_model=32, n_heads=2, d_ff=64,
+                   vocab_size=4096, max_len=32)
+CUTS = (3, 5, 8)
+MEASURES = ["nDCG@10", "MAP"]
+
+
+def build_pipelines(mono, duo):
+    bm25 = INDEX.bm25(num_results=20)
+    loader = TextLoader(CORPUS.text_map())
+    return [bm25 % k >> loader >> mono % 3 >> duo for k in CUTS]
+
+
+def run_setting(mono_wrapper=None, precompute=False):
+    mono = MonoScorer(CE)
+    duo = DuoScorer(CE, max_docs=3)
+    stage = mono_wrapper(mono) if mono_wrapper else mono
+    bm25 = INDEX.bm25(num_results=20)
+    loader = TextLoader(CORPUS.text_map())
+    systems = [bm25 % k >> loader >> stage % 3 >> duo for k in CUTS]
+    res = Experiment(systems, CORPUS.get_topics(), CORPUS.get_qrels(),
+                     MEASURES, precompute_prefix=precompute,
+                     names=[f"k={k}" for k in CUTS])
+    return res, mono, duo
+
+
+def test_table2_invariant_results_identical_and_work_monotone():
+    r1, mono1, _ = run_setting()                                # (1)
+    r2, mono2, _ = run_setting(precompute=True)                 # (2)
+    cache = ScorerCache(None)                                   # shared
+    def wrap(m):
+        cache._transformer_raw = m
+        return cache
+    r3, mono3, _ = run_setting(mono_wrapper=wrap,
+                               precompute=True)                 # (3) cold
+    r4, mono4, _ = run_setting(mono_wrapper=wrap,
+                               precompute=True)                 # (4) hot
+    cache.close()
+
+    # Invariant A: all settings give the same evaluation table
+    for name in r1.names:
+        for m in MEASURES:
+            v = r1.means[name][m]
+            assert r2.means[name][m] == pytest.approx(v, abs=1e-9)
+            assert r3.means[name][m] == pytest.approx(v, abs=1e-9)
+            assert r4.means[name][m] == pytest.approx(v, abs=1e-9)
+
+    # Invariant B: monotone non-increasing scorer work
+    assert mono2.invocations <= mono1.invocations
+    assert mono3.invocations <= mono2.invocations
+    assert mono4.invocations <= mono3.invocations
+    assert mono4.invocations == 0        # hot cache: zero re-scoring
+
+
+def test_indexing_pipeline_end_to_end():
+    """Paper §4.1 flow: expensive doc transform cached once, two indexes
+    built from the cache."""
+    from repro.caching import IndexerCache, KeyValueCache
+    from repro.ir import QueryExpander
+
+    calls = {"n": 0}
+    def expand(frame):
+        calls["n"] += len(frame)
+        texts = [t + " expanded" for t in frame["text"].tolist()]
+        return frame.assign(text=np.array(texts, dtype=object))
+    from repro.core import GenericTransformer
+    doc_rewriter = GenericTransformer(expand, "doc2query",
+                                      key_columns=("docno",),
+                                      value_columns=("text",))
+    with KeyValueCache(None, doc_rewriter, key="docno",
+                       value="text") as cache:
+        idx1 = InvertedIndex()
+        (cache >> idx1.indexer()).index(CORPUS.get_corpus_iter())
+        n_after_first = calls["n"]
+        idx2 = InvertedIndex()
+        (cache >> idx2.indexer()).index(CORPUS.get_corpus_iter())
+        assert calls["n"] == n_after_first      # second index = all hits
+        assert idx1.n_docs == idx2.n_docs == len(CORPUS.docs)
+        assert "expanded" in list(idx1.postings.keys())
+
+
+def test_scoring_service_with_cache():
+    mono = MonoScorer(CE)
+    svc = ScoringService(mono, max_batch=32)
+    docs = CORPUS.docs
+    for i in range(40):
+        svc.submit(f"q{i % 4}", f"query text {i % 4}",
+                   str(docs["docno"][i]), str(docs["text"][i]))
+    out1 = svc.flush()
+    assert len(out1) == 40
+    for i in range(40):      # identical requests: all hits now
+        svc.submit(f"q{i % 4}", f"query text {i % 4}",
+                   str(docs["docno"][i]), str(docs["text"][i]))
+    svc.flush()
+    s = svc.stats.summary()
+    assert s["hit_rate"] >= 0.5
+    svc.close()

@@ -1,0 +1,252 @@
+"""Train runtime + distribution: optimizer, microbatching, compression,
+checkpoint atomicity/elasticity, fault-tolerant restart, stragglers,
+sharding rules."""
+import os
+import tempfile
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distrib import (Checkpointer, CompressionConfig, Preemption,
+                           RestartableLoop, ShardingRules, StragglerPolicy,
+                           latest_step, restore_checkpoint, save_checkpoint,
+                           wire_bytes)
+from repro.train import (AdamWConfig, adamw_init, adamw_update,
+                         linear_warmup_cosine, make_train_step, train_loop)
+
+RNG = np.random.default_rng(0)
+
+
+# -- optimizer ---------------------------------------------------------------
+
+def _linreg_setup():
+    X = jnp.array(RNG.normal(size=(64, 4)), jnp.float32)
+    w_true = jnp.array([1.0, -2.0, 3.0, 0.5])
+    Y = X @ w_true[:, None]
+    loss = lambda p, b: jnp.mean((b["x"] @ p["w"][:, None] - b["y"]) ** 2)
+    return {"w": jnp.zeros(4, jnp.float32)}, {"x": X, "y": Y}, loss, w_true
+
+
+def test_adamw_converges_linreg():
+    params, batch, loss, w_true = _linreg_setup()
+    p, _, hist = train_loop(params, lambda s: batch, loss, n_steps=300,
+                            opt_cfg=AdamWConfig(lr=0.05, weight_decay=0.0))
+    np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(w_true),
+                               atol=0.05)
+
+
+def test_grad_clipping_bounds_update():
+    cfg = AdamWConfig(lr=1.0, grad_clip=1e-6, weight_decay=0.0)
+    params = {"w": jnp.ones(3)}
+    grads = {"w": jnp.full(3, 1e6)}
+    state = adamw_init(params)
+    new, _, m = adamw_update(params, grads, state, cfg)
+    assert float(m["grad_norm"]) > 1e5
+    assert float(jnp.abs(new["w"] - params["w"]).max()) < 1.1   # clipped
+
+
+def test_microbatch_equals_full_batch():
+    params, batch, loss, _ = _linreg_setup()
+    s1, init1 = make_train_step(loss, AdamWConfig(lr=0.01,
+                                                  weight_decay=0.0))
+    s4, init4 = make_train_step(loss, AdamWConfig(lr=0.01,
+                                                  weight_decay=0.0),
+                                microbatches=4)
+    p1, o1 = dict(params), init1(params)
+    p4, o4 = dict(params), init4(params)
+    for _ in range(5):
+        p1, o1, _ = jax.jit(s1)(p1, o1, batch)
+        p4, o4, _ = jax.jit(s4)(p4, o4, batch)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               atol=1e-5)
+
+
+def test_schedule_shape():
+    s0 = float(linear_warmup_cosine(0, warmup=10, total=100))
+    s10 = float(linear_warmup_cosine(10, warmup=10, total=100))
+    s100 = float(linear_warmup_cosine(100, warmup=10, total=100,
+                                      floor=0.1))
+    assert s0 == 0.0 and s10 == pytest.approx(1.0)
+    assert s100 == pytest.approx(0.1)
+
+
+# -- compression ----------------------------------------------------------------
+
+def test_int8_compression_with_ef_still_converges():
+    params, batch, loss, w_true = _linreg_setup()
+    step, init = make_train_step(
+        loss, AdamWConfig(lr=0.05, weight_decay=0.0),
+        compression=CompressionConfig(method="int8"))
+    p, o = params, init(params)
+    for _ in range(300):
+        p, o, _ = jax.jit(step)(p, o, batch)
+    np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(w_true),
+                               atol=0.1)
+
+
+def test_error_feedback_bookkeeping():
+    from repro.distrib import compress_grads, init_ef_state
+    g = {"w": jnp.array([1.0, -0.5, 0.25, 1e-4], jnp.float32)}
+    ef = init_ef_state(g)
+    cfg = CompressionConfig(method="int8", error_feedback=True)
+    sent, ef2 = compress_grads(g, ef, cfg)
+    # EF invariant: sent + error == target
+    np.testing.assert_allclose(
+        np.asarray(sent["w"] + ef2["w"]), np.asarray(g["w"]), rtol=1e-6)
+
+
+def test_wire_bytes_accounting():
+    params = {"a": jnp.zeros((100,)), "b": jnp.zeros((28,))}
+    assert wire_bytes(params, CompressionConfig("none")) == 128 * 4
+    assert wire_bytes(params, CompressionConfig("int8")) == 128
+    assert wire_bytes(params, CompressionConfig(
+        "topk", topk_fraction=0.25)) == 32 * 8
+
+
+def test_topk_compression_sparsity():
+    from repro.distrib import compress_grads, init_ef_state
+    g = {"w": jnp.array(RNG.normal(size=256), jnp.float32)}
+    cfg = CompressionConfig(method="topk", topk_fraction=0.1,
+                            error_feedback=False)
+    sent, _ = compress_grads(g, init_ef_state(g), cfg)
+    nz = int((sent["w"] != 0).sum())
+    assert nz <= 26 + 5        # ~top 10% (ties may add a few)
+
+
+# -- checkpointing ----------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 3, tree)
+    save_checkpoint(str(tmp_path), 7, jax.tree.map(lambda x: x * 2, tree))
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step = restore_checkpoint(str(tmp_path), like)
+    assert step == 7
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]) * 2)
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+    restored3, _ = restore_checkpoint(str(tmp_path), like, step=3)
+    np.testing.assert_allclose(np.asarray(restored3["a"]),
+                               np.asarray(tree["a"]))
+
+
+def test_checkpoint_commit_is_atomic(tmp_path):
+    # a stale .tmp dir from a "crashed" save must be invisible
+    os.makedirs(tmp_path / ".tmp-99-123")
+    tree = {"a": jnp.zeros(2)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_async_checkpointer_and_retention(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(4, dtype=jnp.float32)}
+    for s in (1, 2, 3, 4):
+        ck.save_async(s, jax.tree.map(lambda x: x + s, tree))
+    ck.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]
+    restored, step = ck.restore(tree)
+    assert step == 4
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]) + 4)
+
+
+def test_elastic_restore_reshards(tmp_path):
+    """Manifest is mesh-agnostic: restore onto a different sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    restored, _ = restore_checkpoint(str(tmp_path), tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_allclose(np.asarray(restored["w"]),
+                               np.asarray(tree["w"]))
+
+
+# -- fault tolerance -----------------------------------------------------------------
+
+def test_restart_reproduces_uninterrupted_run(tmp_path):
+    params, batch, loss, _ = _linreg_setup()
+    step, init = make_train_step(loss, AdamWConfig(lr=0.01,
+                                                   weight_decay=0.0))
+    def sfn(state, b):
+        p, o = state
+        p, o, m = jax.jit(step)(p, o, b)
+        return (p, o), m
+    batch_fn = lambda s: batch
+    ref = RestartableLoop(sfn, batch_fn,
+                          Checkpointer(str(tmp_path / "a"), keep=2),
+                          ckpt_every=4).run((params, init(params)), 17)
+    loop = RestartableLoop(sfn, batch_fn,
+                           Checkpointer(str(tmp_path / "b"), keep=2),
+                           ckpt_every=4)
+    out = loop.run((params, init(params)), 17,
+                   fail_at={6: 0, 13: 1, 16: 2})
+    assert loop.restarts == 3
+    assert bool(jnp.all(ref[0]["w"] == out[0]["w"]))     # bit-equal
+
+
+def test_straggler_policy_flags_and_evicts():
+    sp = StragglerPolicy(deadline_factor=2.0, evict_after=2)
+    assert sp.observe(0, 1.0) == "ok"
+    assert sp.observe(1, 1.05) == "ok"
+    assert sp.observe(2, 5.0) == "straggle"
+    assert sp.observe(3, 5.0) == "evict"
+    assert sp.evicted
+    # healthy steps don't poison the EWMA baseline
+    assert sp._ewma < 1.5
+
+
+# -- sharding rules -------------------------------------------------------------------
+
+def fake_mesh(shape, names):
+    return SimpleNamespace(axis_names=names,
+                           devices=SimpleNamespace(shape=shape))
+
+
+def test_rules_basic_mapping():
+    r = ShardingRules()
+    mesh = fake_mesh((16, 16), ("data", "model"))
+    assert str(r.spec_for((49408, 960), ("vocab", "d_model"), mesh)) == \
+        "PartitionSpec('model', 'data')"
+    # heads indivisible -> pruned, head_dim never sharded
+    spec = r.spec_for((32, 960, 15, 64),
+                      ("layers", "d_model", "heads", "head_dim"), mesh)
+    assert spec == jax.sharding.PartitionSpec(None, "data")
+
+
+def test_rules_axis_used_once():
+    r = ShardingRules()
+    mesh = fake_mesh((16, 16), ("data", "model"))
+    # MoE w1 [L, E, D, F]: E takes model, F must NOT reuse it
+    spec = r.spec_for((32, 16, 4096, 6400),
+                      ("layers", "experts", "d_model", "d_ff"), mesh)
+    parts = [p for p in spec if p is not None]
+    assert parts == ["model", "data"]
+
+
+def test_rules_joint_axes_and_pruning():
+    r = ShardingRules()
+    mesh = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    spec = r.spec_for((1024, 64), ("table_rows", "table_dim"), mesh)
+    assert spec[0] == ("data", "model")
+    # batch over (pod, data); indivisible batch drops trailing axes
+    spec = r.spec_for((256, 4096), ("batch", "seq"), mesh)
+    assert spec[0] == ("pod", "data")
+    spec = r.spec_for((2, 4096), ("batch", "seq"), mesh)
+    assert spec == jax.sharding.PartitionSpec("pod")
+
+
+def test_rules_override():
+    r = ShardingRules().override(d_ff=())
+    mesh = fake_mesh((16, 16), ("data", "model"))
+    spec = r.spec_for((960, 2560), ("d_model", "d_ff"), mesh)
+    assert spec == jax.sharding.PartitionSpec("data")
