@@ -13,13 +13,14 @@ from __future__ import annotations
 import sys
 import time
 
-from . import cache_micro, kernels_bench, precompute_bench, \
+from . import cache_micro, kernels_bench, plan_bench, precompute_bench, \
     table2_reproduction
 
 SUITES = {
     "table2": table2_reproduction.main,
     "cache": cache_micro.main,
     "precompute": precompute_bench.main,
+    "plan": plan_bench.main,
     "kernels": kernels_bench.main,
 }
 

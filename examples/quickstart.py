@@ -47,3 +47,14 @@ with ScorerCache(None, mono) as cached_mono:
 c = auto_cache(bm25)
 print("auto_cache(bm25) ->", type(c).__name__)
 c.close()
+
+# 7. the unified planner: lower a pipeline set into ONE shared DAG —
+#    sharing recurses into binary operators (a is executed once below,
+#    even though stages_of sees `a + b` and `a ** b` as opaque), and
+#    the planner inserts the §4 caches itself when given a cache_dir
+from repro.core import ExecutionPlan
+
+a, b = bm25 % 20, index.bm25(num_results=100, k1=2.0) % 20
+with ExecutionPlan([a + b, a ** b, a]) as plan:
+    outs, stats = plan.run(dataset.get_topics())
+    print("plan:", stats)

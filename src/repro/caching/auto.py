@@ -29,7 +29,8 @@ from .kv import KeyValueCache
 from .retriever import RetrieverCache
 from .scorer import ScorerCache
 
-__all__ = ["auto_cache", "typecheck_pipeline", "UncacheableError"]
+__all__ = ["auto_cache", "auto_cache_or_none", "typecheck_pipeline",
+           "UncacheableError"]
 
 
 class UncacheableError(TypeError):
@@ -65,6 +66,24 @@ def auto_cache(transformer: Transformer, path: Optional[str] = None,
             f"{transformer!r} does not declare key/value columns; cannot "
             f"infer a caching strategy (the paper-§6 situation)")
     return KeyValueCache(path, transformer, key=keys, value=vals, **kwargs)
+
+
+def auto_cache_or_none(transformer: Transformer, path: Optional[str] = None,
+                       **kwargs):
+    """``auto_cache`` as a *policy*: ``None`` instead of an exception.
+
+    This is the default ``memo_factory`` of ``core.plan.ExecutionPlan``
+    — nodes whose metadata admits a caching strategy get one inserted by
+    the planner; everything else (uncacheable, nondeterministic,
+    already-cached, undeclared) runs bare.
+    """
+    from .base import CacheTransformer
+    if isinstance(transformer, (Compose, CacheTransformer)):
+        return None
+    try:
+        return auto_cache(transformer, path, **kwargs)
+    except UncacheableError:
+        return None
 
 
 def typecheck_pipeline(pipeline: Transformer) -> List[Tuple[str, str]]:

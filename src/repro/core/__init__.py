@@ -10,6 +10,7 @@ from .pipeline import (Transformer, Indexer, Compose, RankCutoff,
 from .precompute import (longest_common_prefix, split_on_prefix,
                          run_with_precompute, PrefixTrie, run_with_trie,
                          PrecomputeStats)
+from .plan import ExecutionPlan, PlanNode, PlanStats, plan_size
 from .compile_opt import compile_pipeline
 from .measures import Measure, parse_measure, evaluate
 from .experiment import Experiment, ExperimentResult
@@ -22,6 +23,7 @@ __all__ = [
     "add_ranks", "stages_of", "pipeline_hash",
     "longest_common_prefix", "split_on_prefix", "run_with_precompute",
     "PrefixTrie", "run_with_trie", "PrecomputeStats",
+    "ExecutionPlan", "PlanNode", "PlanStats", "plan_size",
     "compile_pipeline", "Measure", "parse_measure", "evaluate",
     "Experiment", "ExperimentResult",
 ]

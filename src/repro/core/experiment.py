@@ -151,7 +151,8 @@ def Experiment(
     *,
     names: Optional[Sequence[str]] = None,
     precompute_prefix: bool = False,
-    precompute_mode: str = "lcp",          # "lcp" (paper §3) | "trie" (beyond)
+    precompute_mode: str = "lcp",          # "lcp" (§3) | "trie" | "plan"
+    cache_dir: Optional[str] = None,       # plan mode: auto-insert caches
     baseline: Optional[int] = None,
     correction: str = "holm",
     batch_size: Optional[int] = None,
@@ -164,6 +165,13 @@ def Experiment(
     (type Q), qrels (type RA), measures; plus ``precompute_prefix``
     (§3), significance testing wrt. ``baseline`` with multiple-testing
     ``correction`` (Fuhr/Sakai), and ``batch_size``.
+
+    ``precompute_mode`` selects the sharing strategy: ``"lcp"`` reports
+    the paper-§3 accounting, ``"trie"`` maximal prefix sharing, and
+    ``"plan"`` the full execution planner (``core/plan.py``) — which
+    additionally shares through binary operator nodes and, given a
+    ``cache_dir``, auto-inserts the §4 explicit caches per DAG node.
+    All three execute through the planner; results are identical.
     """
     topics = ColFrame.coerce(topics)
     qrels = ColFrame.coerce(qrels)
@@ -180,11 +188,18 @@ def Experiment(
     times: Dict[str, float] = {}
 
     if precompute_prefix and len(systems) > 1:
-        if precompute_mode == "trie":
+        if precompute_mode == "plan":
+            from .plan import ExecutionPlan
+            with ExecutionPlan(systems, cache_dir=cache_dir) as plan:
+                outs, stats = plan.run(topics, batch_size=batch_size)
+        elif precompute_mode == "trie":
             outs, stats = run_with_trie(systems, topics, batch_size=batch_size)
-        else:
+        elif precompute_mode == "lcp":
             outs, stats = run_with_precompute(systems, topics,
                                               batch_size=batch_size)
+        else:
+            raise ValueError(f"unknown precompute_mode {precompute_mode!r}; "
+                             f"expected 'lcp', 'trie' or 'plan'")
         # per-system times are not separable under sharing; record totals only
         for n in names:
             times[n] = float("nan")

@@ -36,17 +36,126 @@ __all__ = [
 ]
 
 
+def _factorize(col: np.ndarray) -> np.ndarray:
+    """Integer codes for a column.
+
+    Keys are compared by string form — the same semantics as
+    ``ColFrame.group_indices`` (``frame._row_codes``), so ``qid=1`` and
+    ``qid="1"`` are one key throughout the algebra.  Q/R/RA relations
+    in this codebase use string keys.
+    """
+    arr = np.asarray(col)
+    if arr.dtype == object or arr.dtype.kind in ("U", "S"):
+        arr = arr.astype(str)
+    _, inv = np.unique(arr, return_inverse=True)
+    return inv.astype(np.int64)
+
+
+def _score_sort_keys(scores: np.ndarray) -> np.ndarray:
+    """Unsigned-integer keys whose ascending order is descending score
+    (IEEE-754 total order trick) — integer sorts beat float sorts."""
+    ub = np.ascontiguousarray(scores).view(np.uint64)
+    asc = np.where(ub >> np.uint64(63) == np.uint64(1),
+                   ~ub, ub | np.uint64(1 << 63))
+    return ~asc
+
+
+def _repair_tied_group(res: ColFrame, ranks: np.ndarray,
+                       idx: np.ndarray) -> None:
+    """Re-rank one qid group with the full (docno, -score) tie-break."""
+    scores = res["score"][idx].astype(np.float64)
+    docnos = np.asarray(res["docno"][idx], dtype=object).astype(str)
+    order = np.lexsort((docnos, -scores))
+    ranks[idx[order]] = np.arange(len(idx))
+
+
 def add_ranks(res: ColFrame) -> ColFrame:
-    """(Re-)assign the rank column: descending score per qid, stable."""
+    """(Re-)assign the rank column: descending score per qid, stable
+    (ties broken by docno, then original position).
+
+    Vectorized (benchmarked in ``benchmarks/plan_bench.py``):
+
+    * results arriving qid-blocked (the overwhelmingly common layout a
+      retriever emits) are scattered into a padded (groups × depth)
+      matrix and ranked with one row-wise argsort;
+    * otherwise a global two-pass argsort on (integer score keys, qid
+      codes) is used;
+    * docno strings are only compared inside groups that actually
+      contain score ties, so the hot path never touches them.
+    """
     if len(res) == 0:
         return res.assign(rank=np.empty(0, dtype=np.int64)) if "rank" not in res \
             else res
-    ranks = np.zeros(len(res), dtype=np.int64)
-    for _, idx in res.group_indices(["qid"]).items():
-        scores = res["score"][idx].astype(np.float64)
-        docnos = res["docno"][idx]
-        order = np.lexsort((np.asarray(docnos, dtype=object).astype(str), -scores))
-        ranks[idx[order]] = np.arange(len(idx))
+    n = len(res)
+    scores = np.ascontiguousarray(res["score"].astype(np.float64, copy=False))
+    q = res["qid"]
+    pos = np.arange(n, dtype=np.int64)
+    change = np.empty(n, dtype=bool)
+    change[0] = True
+    change[1:] = q[1:] != q[:-1]
+    starts = np.nonzero(change)[0]
+    n_runs = len(starts)
+    reps = np.asarray(q[change])
+    if reps.dtype == object or reps.dtype.kind in ("U", "S"):
+        reps = reps.astype(str)
+    uniq, rinv = np.unique(reps, return_inverse=True)
+    lengths = np.diff(np.append(starts, n))
+    depth = int(lengths.max())
+
+    if len(uniq) == n_runs and n_runs * depth <= 4 * n + 1024:
+        # -- blocked fast path: every qid is one contiguous run ----------
+        uniform = depth == int(lengths.min())
+        if uniform:
+            # uniform fan-out (top-k results): a zero-copy reshape
+            mat = scores.reshape(n_runs, depth)
+        else:
+            run_id = np.repeat(np.arange(n_runs, dtype=np.int64), lengths)
+            col = pos - np.repeat(starts, lengths)
+            mat = np.full((n_runs, depth), np.nan)  # NaN pads sort last
+            mat[run_id, col] = scores
+        order2d = np.argsort(-mat, axis=1, kind="stable")
+        rr = np.empty((n_runs, depth), dtype=order2d.dtype)
+        np.put_along_axis(rr, order2d,
+                          np.broadcast_to(np.arange(depth), (n_runs, depth)),
+                          axis=1)
+        ranks = rr.ravel().astype(np.int64, copy=False) if uniform \
+            else rr[run_id, col].astype(np.int64, copy=False)
+        srt = np.take_along_axis(mat, order2d, axis=1)
+        tied_rows = np.nonzero((srt[:, 1:] == srt[:, :-1]).any(axis=1))[0]
+        if len(tied_rows):
+            ranks = np.ascontiguousarray(ranks)
+            for r0 in tied_rows:
+                idx = np.arange(starts[r0], starts[r0] + lengths[r0])
+                _repair_tied_group(res, ranks, idx)
+        return res.assign(rank=ranks)
+
+    # -- general path: interleaved or heavily skewed groups --------------
+    run_id = np.repeat(np.arange(n_runs, dtype=np.int64), lengths)
+    qcodes = rinv.astype(np.int64)[run_id]
+    o1 = np.argsort(_score_sort_keys(scores), kind="stable")
+    o2 = np.argsort(qcodes[o1], kind="stable")
+    order = o1[o2]
+    qs = qcodes[order]
+    ss = scores[order]
+    tie = np.zeros(n, dtype=bool)
+    tie[1:] = (qs[1:] == qs[:-1]) & (ss[1:] == ss[:-1])
+    if tie.any():
+        docnos = np.asarray(res["docno"], dtype=object)
+        bounds = np.nonzero(np.diff(
+            np.concatenate([[0], tie.view(np.int8), [0]])))[0]
+        for i in range(0, len(bounds), 2):
+            lo, hi = bounds[i] - 1, bounds[i + 1]
+            sub = order[lo:hi]
+            # (docno, original position): the explicit position key keeps
+            # +0.0/-0.0 score ties in row order like the seed's lexsort
+            order[lo:hi] = sub[np.lexsort((sub, docnos[sub].astype(str)))]
+        qs = qcodes[order]
+    new_block = np.empty(n, dtype=bool)
+    new_block[0] = True
+    new_block[1:] = qs[1:] != qs[:-1]
+    block_start = np.maximum.accumulate(np.where(new_block, pos, 0))
+    ranks = np.empty(n, dtype=np.int64)
+    ranks[order] = pos - block_start
     return res.assign(rank=ranks)
 
 
@@ -199,6 +308,14 @@ class RankCutoff(Transformer):
 
 
 class _Binary(Transformer):
+    """Binary operator node.
+
+    ``transform`` evaluates both children then delegates to
+    ``combine(a, b)``; the execution planner (``core/plan.py``) calls
+    ``combine`` directly on shared child results, so a retriever shared
+    under ``a + b`` and ``a ** c`` executes once.
+    """
+
     def __init__(self, left: Transformer, right: Transformer):
         self.left = left
         self.right = right
@@ -206,12 +323,17 @@ class _Binary(Transformer):
     def signature(self) -> Tuple:
         return (type(self).__name__, self.left.signature(), self.right.signature())
 
+    def transform(self, inp: ColFrame) -> ColFrame:
+        return self.combine(self.left(inp), self.right(inp))
+
+    def combine(self, a: ColFrame, b: ColFrame) -> ColFrame:
+        raise NotImplementedError
+
 
 class LinearCombine(_Binary):
     """``+`` — sum query-document scores of the two result lists."""
 
-    def transform(self, inp: ColFrame) -> ColFrame:
-        a, b = self.left(inp), self.right(inp)
+    def combine(self, a: ColFrame, b: ColFrame) -> ColFrame:
         return _combine_scores(a, b, lambda x, y: x + y)
 
 
@@ -223,7 +345,10 @@ class ScalarProduct(Transformer):
         self.scalar = scalar
 
     def transform(self, inp: ColFrame) -> ColFrame:
-        res = self.inner(inp)
+        return self.apply(self.inner(inp))
+
+    def apply(self, res: ColFrame) -> ColFrame:
+        """Post-child work (planner entry point, like _Binary.combine)."""
         return add_ranks(res.assign(score=res["score"] * self.scalar))
 
     def signature(self) -> Tuple:
@@ -233,31 +358,20 @@ class ScalarProduct(Transformer):
 class FeatureUnion(_Binary):
     """``**`` — combine the two result lists as a features column."""
 
-    def transform(self, inp: ColFrame) -> ColFrame:
-        a, b = self.left(inp), self.right(inp)
-        keys_a = a.key_tuples(["qid", "docno"])
-        keys_b = b.key_tuples(["qid", "docno"])
-        sb = dict(zip(keys_b, b["score"].tolist()))
-        sa = dict(zip(keys_a, a["score"].tolist()))
-        all_keys = list(dict.fromkeys(keys_a + keys_b))
-        feats = np.empty(len(all_keys), dtype=object)
-        for i, k in enumerate(all_keys):
-            feats[i] = np.array([sa.get(k, 0.0), sb.get(k, 0.0)], dtype=np.float64)
-        qids = np.empty(len(all_keys), dtype=object)
-        docnos = np.empty(len(all_keys), dtype=object)
-        qids[:] = [k[0] for k in all_keys]
-        docnos[:] = [k[1] for k in all_keys]
+    def combine(self, a: ColFrame, b: ColFrame) -> ColFrame:
+        qids, docnos, sa, sb = _aligned_scores(a, b)
+        feats = np.empty(len(qids), dtype=object)
+        if len(qids):
+            feats[:] = list(np.stack([sa, sb], axis=1))
         out = ColFrame({"qid": qids, "docno": docnos,
-                        "score": np.array([f[0] for f in feats]),
-                        "features": feats})
+                        "score": sa.copy(), "features": feats})
         return add_ranks(out)
 
 
 class SetUnion(_Binary):
     """``|`` — set union of documents (scores/ranks dropped)."""
 
-    def transform(self, inp: ColFrame) -> ColFrame:
-        a, b = self.left(inp), self.right(inp)
+    def combine(self, a: ColFrame, b: ColFrame) -> ColFrame:
         merged = ColFrame.concat([a, b])
         keep = [c for c in merged.columns if c not in ("score", "rank")]
         return merged.select(keep).dedup(["qid", "docno"])
@@ -266,11 +380,9 @@ class SetUnion(_Binary):
 class SetIntersection(_Binary):
     """``&`` — set intersection of documents (scores/ranks dropped)."""
 
-    def transform(self, inp: ColFrame) -> ColFrame:
-        a, b = self.left(inp), self.right(inp)
-        bk = set(b.key_tuples(["qid", "docno"]))
-        mask = np.array([k in bk for k in a.key_tuples(["qid", "docno"])],
-                        dtype=bool)
+    def combine(self, a: ColFrame, b: ColFrame) -> ColFrame:
+        mask = _key_membership(a, b) if len(a) and len(b) else \
+            np.zeros(len(a), dtype=bool)
         keep = [c for c in a.columns if c not in ("score", "rank")]
         return a.mask(mask).select(keep).dedup(["qid", "docno"])
 
@@ -278,25 +390,23 @@ class SetIntersection(_Binary):
 class Concatenate(_Binary):
     """``^`` — append right results below the left results per query."""
 
-    def transform(self, inp: ColFrame) -> ColFrame:
-        a, b = self.left(inp), self.right(inp)
+    def combine(self, a: ColFrame, b: ColFrame) -> ColFrame:
         if len(a) == 0:
             return add_ranks(b)
-        ak = set(a.key_tuples(["qid", "docno"]))
-        mask = np.array([k not in ak for k in b.key_tuples(["qid", "docno"])],
-                        dtype=bool)
+        mask = ~_key_membership(b, a) if len(b) else \
+            np.zeros(0, dtype=bool)
         b_new = b.mask(mask)
         # offset right scores so they sort strictly below the left block
         if len(b_new):
-            min_a = {}
-            for (qid,), idx in a.group_indices(["qid"]).items():
-                min_a[qid] = float(a["score"][idx].min())
-            max_b = {}
-            for (qid,), idx in b_new.group_indices(["qid"]).items():
-                max_b[qid] = float(b_new["score"][idx].max())
-            shift = np.array([
-                min_a.get(q, 0.0) - max_b.get(q, 0.0) - 1.0
-                for q in b_new["qid"].tolist()])
+            qcodes = _factorize(_obj_concat(a["qid"], b_new["qid"]))
+            qa, qb = qcodes[:len(a)], qcodes[len(a):]
+            n_codes = int(qcodes.max()) + 1
+            min_a = np.full(n_codes, np.inf)
+            np.minimum.at(min_a, qa, a["score"].astype(np.float64))
+            min_a[np.isinf(min_a)] = 0.0   # qids absent from a -> 0.0
+            max_b = np.full(n_codes, -np.inf)
+            np.maximum.at(max_b, qb, b_new["score"].astype(np.float64))
+            shift = min_a[qb] - max_b[qb] - 1.0
             b_new = b_new.assign(score=b_new["score"] + shift)
         common = [c for c in a.columns if c in b_new.columns] or list(a.columns)
         out = ColFrame.concat([a.select(common), b_new.select(common)]) \
@@ -354,17 +464,65 @@ class GenericTransformer(Transformer):
         return ("GenericTransformer", self.name) + self.params
 
 
+def _obj_concat(x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    out = np.empty(len(x) + len(y), dtype=object)
+    out[:len(x)] = x
+    out[len(x):] = y
+    return out
+
+
+def _merged_keys(a: ColFrame, b: ColFrame
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Concatenated (qid, docno) columns of a and b plus integer codes
+    identifying distinct key pairs across both frames."""
+    merged_q = _obj_concat(a["qid"], b["qid"])
+    merged_d = _obj_concat(a["docno"], b["docno"])
+    qcodes = _factorize(merged_q)
+    dcodes = _factorize(merged_d)
+    return merged_q, merged_d, \
+        qcodes * (int(dcodes.max(initial=0)) + 1) + dcodes
+
+
+def _key_membership(a: ColFrame, b: ColFrame) -> np.ndarray:
+    """Boolean mask: which rows of ``a`` have their (qid, docno) in ``b``."""
+    _, _, codes = _merged_keys(a, b)
+    return np.isin(codes[:len(a)], codes[len(a):])
+
+
+def _aligned_scores(a: ColFrame, b: ColFrame
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Row-align two result frames on (qid, docno), vectorized.
+
+    Returns ``(qids, docnos, scores_a, scores_b)`` over the union of
+    keys in first-occurrence order (a's rows, then b's new keys);
+    missing scores are 0.0 and duplicate keys within one frame keep the
+    last score — the exact semantics of the seed's dict-based loop,
+    without per-key Python work.
+    """
+    na, nb = len(a), len(b)
+    if na + nb == 0:
+        e = np.empty(0, dtype=object)
+        return e, e.copy(), np.empty(0), np.empty(0)
+    merged_q, merged_d, codes = _merged_keys(a, b)
+    uniq, first, inv = np.unique(codes, return_index=True, return_inverse=True)
+    perm = np.argsort(first, kind="stable")      # sorted-uniq -> output order
+    inv_perm = np.empty(len(perm), dtype=np.int64)
+    inv_perm[perm] = np.arange(len(perm))
+    slot = inv_perm[inv]                          # row -> output slot
+    k = len(uniq)
+    sa = np.zeros(k)
+    sb = np.zeros(k)
+    if na:
+        sa[slot[:na]] = a["score"].astype(np.float64)   # dup keys: last wins
+    if nb:
+        sb[slot[na:]] = b["score"].astype(np.float64)
+    rep = first[perm]                             # first occurrence per key
+    return merged_q[rep], merged_d[rep], sa, sb
+
+
 def _combine_scores(a: ColFrame, b: ColFrame, op) -> ColFrame:
-    keys_a = a.key_tuples(["qid", "docno"])
-    keys_b = b.key_tuples(["qid", "docno"])
-    sa = dict(zip(keys_a, a["score"].tolist()))
-    sb = dict(zip(keys_b, b["score"].tolist()))
-    all_keys = list(dict.fromkeys(keys_a + keys_b))
-    scores = np.array([op(sa.get(k, 0.0), sb.get(k, 0.0)) for k in all_keys])
-    qids = np.empty(len(all_keys), dtype=object)
-    docnos = np.empty(len(all_keys), dtype=object)
-    qids[:] = [k[0] for k in all_keys]
-    docnos[:] = [k[1] for k in all_keys]
+    qids, docnos, sa, sb = _aligned_scores(a, b)
+    scores = np.asarray(op(sa, sb), dtype=np.float64)
     return add_ranks(ColFrame({"qid": qids, "docno": docnos, "score": scores}))
 
 

@@ -1,0 +1,260 @@
+"""Unified experiment planner: pipelines lowered into one shared DAG.
+
+The paper develops two complementary directions: *implicit* prefix
+sharing inside ``Experiment`` (§3 — the LCP of Eq. 2, generalized to a
+prefix trie for the §6 ablation limitation) and *explicit* operation
+caches applied by hand (§4).  ``ExecutionPlan`` unifies both behind a
+single abstraction, following the "Trie-based Experiment Plans"
+follow-up (PAPERS.md): a set of pipelines is **lowered** into one DAG
+whose nodes are deduplicated by structural signature, then executed in
+dependency order with each node run exactly once.
+
+Improvements over the stage-list trie of ``precompute.py``:
+
+* **Sharing through operator nodes** (§6 limitation, resolved): the
+  planner recurses into binary operators (``LinearCombine``,
+  ``FeatureUnion``, ``SetUnion``, ``SetIntersection``, ``Concatenate``)
+  and ``ScalarProduct``, so a retriever shared under ``a + b`` and
+  ``a ** c`` executes once.  ``stages_of`` treats those nodes as opaque
+  and re-executes ``a`` per pipeline.
+* **Planner-inserted memoization** (§4 + §6 future work): with a
+  ``cache_dir``, every node whose transformer declares sufficient
+  ``auto_cache`` metadata gets the matching explicit cache family
+  (KeyValueCache / ScorerCache / RetrieverCache) wrapped around it by
+  the planner — researchers no longer hand-wrap stages (§4's usability
+  caveat).  A custom ``memo_factory`` makes the policy pluggable.
+* **Plan-level accounting**: ``PlanStats`` extends ``PrecomputeStats``
+  with planned/executed node counts, cache hit/miss totals and
+  per-node wall times, surfaced through ``Experiment`` results and
+  ``benchmarks/plan_bench.py``.
+
+``run_with_precompute``, ``run_with_trie`` and ``Experiment`` are thin
+wrappers over this module — the planner is the single execution path.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .frame import ColFrame
+from .pipeline import (Compose, ScalarProduct, Transformer, _Binary,
+                       pipeline_hash)
+from .precompute import (PrecomputeStats, _run_stage, longest_common_prefix)
+
+__all__ = ["ExecutionPlan", "PlanNode", "PlanStats", "plan_size"]
+
+
+@dataclass
+class PlanStats(PrecomputeStats):
+    """Per-run accounting of a plan execution."""
+    nodes_planned: int = 0               # unique DAG nodes (excl. source)
+    cache_hits: int = 0                  # memo hits across inserted caches
+    cache_misses: int = 0
+    node_times_s: Dict[str, float] = field(default_factory=dict)
+    wall_time_s: float = 0.0
+
+    def __str__(self) -> str:
+        return (f"PlanStats(planned={self.nodes_planned} "
+                f"executed={self.nodes_executed} "
+                f"naive={self.nodes_total} "
+                f"saved={self.stage_invocations_saved} "
+                f"cache_hits={self.cache_hits} "
+                f"wall={self.wall_time_s:.3f}s)")
+
+
+@dataclass
+class PlanNode:
+    """One deduplicated unit of work in the DAG."""
+    key: Tuple                           # canonical structural key
+    kind: str                            # "source" | "stage" | "combine" | "scale"
+    stage: Optional[Transformer]         # operator instance (None for source)
+    inputs: List["PlanNode"] = field(default_factory=list)
+    cache: Optional[Transformer] = None  # planner-inserted memo wrapper
+    label: str = ""                      # unique display label (see _label_nodes)
+
+
+def plan_size(expr: Transformer) -> int:
+    """Stage invocations of one *naive* execution of ``expr`` (binary
+    operators expand into 1 + both children, unlike ``stages_of``)."""
+    if isinstance(expr, Compose):
+        return sum(plan_size(s) for s in expr.stages)
+    if isinstance(expr, _Binary):
+        return 1 + plan_size(expr.left) + plan_size(expr.right)
+    if isinstance(expr, ScalarProduct):
+        return 1 + plan_size(expr.inner)
+    return 1
+
+
+class ExecutionPlan:
+    """Lower a pipeline set into a shared DAG and execute it.
+
+    Parameters
+    ----------
+    pipelines:
+        The systems of an experiment (operator-algebra expressions).
+    cache_dir:
+        When given, enables planner-inserted memoization: each eligible
+        node gets an explicit cache (selected by ``auto_cache`` from the
+        node's metadata) rooted under this directory, so repeated runs —
+        or overlapping plans pointed at the same directory — hit.
+    memo_factory:
+        Pluggable cache policy ``(transformer, path) -> wrapper | None``.
+        Defaults to ``repro.caching.auto.auto_cache`` with uncacheable
+        stages (per §5, e.g. DuoT5-style scorers) left bare.
+    """
+
+    def __init__(self, pipelines: Sequence[Transformer], *,
+                 cache_dir: Optional[str] = None,
+                 memo_factory: Optional[Callable[..., Any]] = None):
+        self.pipelines: List[Transformer] = list(pipelines)
+        self.cache_dir = cache_dir
+        self._memo_factory = memo_factory
+        self.source = PlanNode(key=("source",), kind="source", stage=None)
+        self.nodes: Dict[Tuple, PlanNode] = {self.source.key: self.source}
+        self.terminals: List[PlanNode] = [
+            self._lower(p, self.source) for p in self.pipelines]
+        self.nodes_total_naive = sum(plan_size(p) for p in self.pipelines)
+        self._label_nodes()
+        if cache_dir is not None or memo_factory is not None:
+            self._insert_memos()
+        self.stats: Optional[PlanStats] = None   # last run
+
+    def _label_nodes(self) -> None:
+        """Unique display labels: the same stage planned under two
+        different prefixes is two nodes and must not share a
+        ``node_times_s`` entry."""
+        seen: Dict[str, int] = {}
+        for node in self.nodes.values():
+            if node.kind == "source":
+                node.label = "<source>"
+                continue
+            base = repr(node.stage)
+            k = seen.get(base, 0)
+            seen[base] = k + 1
+            node.label = base if k == 0 else f"{base}#{k}"
+
+    # -- lowering ----------------------------------------------------------
+    def _node(self, key: Tuple, kind: str, stage: Transformer,
+              inputs: List[PlanNode]) -> PlanNode:
+        node = self.nodes.get(key)
+        if node is None:
+            node = PlanNode(key=key, kind=kind, stage=stage, inputs=inputs)
+            self.nodes[key] = node
+        return node
+
+    def _lower(self, expr: Transformer, inp: PlanNode) -> PlanNode:
+        """Recursively lower ``expr`` applied to ``inp``'s result."""
+        if isinstance(expr, Compose):
+            node = inp
+            for stage in expr.stages:
+                node = self._lower(stage, node)
+            return node
+        if isinstance(expr, _Binary):
+            left = self._lower(expr.left, inp)
+            right = self._lower(expr.right, inp)
+            key = ("combine", type(expr).__name__, left.key, right.key)
+            return self._node(key, "combine", expr, [left, right])
+        if isinstance(expr, ScalarProduct):
+            inner = self._lower(expr.inner, inp)
+            key = ("scale", expr.scalar, inner.key)
+            return self._node(key, "scale", expr, [inner])
+        key = ("stage", expr.signature(), inp.key)
+        return self._node(key, "stage", expr, [inp])
+
+    # -- planner-inserted memoization --------------------------------------
+    def _insert_memos(self) -> None:
+        factory = self._memo_factory
+        if factory is None:
+            from ..caching.auto import auto_cache_or_none
+            factory = auto_cache_or_none
+        for node in self.nodes.values():
+            if node.kind != "stage":
+                continue
+            path = None
+            if self.cache_dir is not None:
+                # key the store by the node's full structural position so
+                # the same stage under different prefixes never collides;
+                # sha256 (not hash()) so the path is stable across processes
+                digest = hashlib.sha256(
+                    repr(node.key).encode()).hexdigest()[:16]
+                path = os.path.join(
+                    self.cache_dir, pipeline_hash(node.stage) + "-" + digest)
+            node.cache = factory(node.stage, path)
+
+    def close(self) -> None:
+        """Close planner-inserted caches (flushes temporary stores)."""
+        for node in self.nodes.values():
+            if node.cache is not None and hasattr(node.cache, "close"):
+                node.cache.close()
+
+    def __enter__(self) -> "ExecutionPlan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # -- analysis ----------------------------------------------------------
+    def n_nodes(self) -> int:
+        return len(self.nodes) - 1       # exclude the source
+
+    # -- execution ---------------------------------------------------------
+    def run(self, queries: Any, *, batch_size: Optional[int] = None
+            ) -> Tuple[List[ColFrame], PlanStats]:
+        """Execute the DAG once over ``queries``.
+
+        Every node runs at most once; results are identical to naive
+        per-pipeline execution (the cache-transparency invariant,
+        asserted in tests/test_plan.py).
+        """
+        t0 = time.perf_counter()
+        cache_base = self._cache_counters()
+        results: Dict[Tuple, ColFrame] = {
+            self.source.key: ColFrame.coerce(queries)}
+        stats = PlanStats(
+            prefix_len=len(longest_common_prefix(self.pipelines)),
+            n_pipelines=len(self.pipelines),
+            nodes_total=self.nodes_total_naive,
+            nodes_planned=self.n_nodes())
+
+        def evaluate(node: PlanNode) -> ColFrame:
+            memo = results.get(node.key)
+            if memo is not None:
+                return memo
+            ins = [evaluate(i) for i in node.inputs]
+            t1 = time.perf_counter()
+            if node.kind == "stage":
+                runner = node.cache if node.cache is not None else node.stage
+                out = _run_stage(runner, ins[0], batch_size)
+            elif node.kind == "scale":
+                out = node.stage.apply(ins[0])
+            else:                                       # combine
+                out = node.stage.combine(ins[0], ins[1])
+            stats.nodes_executed += 1
+            stats.node_times_s[node.label] = \
+                stats.node_times_s.get(node.label, 0.0) + \
+                (time.perf_counter() - t1)
+            results[node.key] = out
+            return out
+
+        outs = [evaluate(t) for t in self.terminals]
+        stats.stage_invocations_saved = \
+            stats.nodes_total - stats.nodes_executed
+        hits, misses = self._cache_counters()
+        stats.cache_hits = hits - cache_base[0]
+        stats.cache_misses = misses - cache_base[1]
+        stats.wall_time_s = time.perf_counter() - t0
+        self.stats = stats
+        return outs, stats
+
+    def _cache_counters(self) -> Tuple[int, int]:
+        hits = misses = 0
+        for node in self.nodes.values():
+            cs = getattr(node.cache, "stats", None)
+            if cs is not None:
+                hits += cs.hits
+                misses += cs.misses
+        return hits, misses

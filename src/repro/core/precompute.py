@@ -88,18 +88,23 @@ def run_with_precompute(
 
     Mirrors the semantics of running each pipeline independently (the
     cache-transparency invariant is asserted in tests).
+
+    Thin wrapper over ``plan.ExecutionPlan`` (which shares strictly more
+    than the LCP); the returned stats keep the paper-§3 accounting —
+    ``stage_invocations_saved`` is the Eq. 2 quantity
+    ``(|P|-1) × ||LCP(P)||`` — so callers comparing against the paper's
+    tables see the LCP numbers.
     """
+    from .plan import ExecutionPlan
+
     prefix = longest_common_prefix(pipelines)
+    outs, plan_stats = ExecutionPlan(pipelines).run(
+        queries, batch_size=batch_size)
     stats = PrecomputeStats(
         prefix_len=len(prefix), n_pipelines=len(pipelines),
-        stage_invocations_saved=max(0, (len(pipelines) - 1)) * len(prefix))
-    interim = queries
-    for stage in prefix:
-        interim = _run_stage(stage, interim, batch_size)
-    outs: List[ColFrame] = []
-    for p in pipelines:
-        remainder = split_on_prefix(p, len(prefix))
-        outs.append(_run_stage(remainder, interim, batch_size))
+        stage_invocations_saved=max(0, (len(pipelines) - 1)) * len(prefix),
+        nodes_executed=plan_stats.nodes_executed,
+        nodes_total=plan_stats.nodes_total)
     return outs, stats
 
 
@@ -194,4 +199,9 @@ class PrefixTrie:
 def run_with_trie(pipelines: Sequence[Transformer], queries: ColFrame,
                   *, batch_size: Optional[int] = None,
                   ) -> Tuple[List[ColFrame], PrecomputeStats]:
-    return PrefixTrie(pipelines).run(queries, batch_size=batch_size)
+    """Maximal-coverage sharing — thin wrapper over ``plan.ExecutionPlan``,
+    which subsumes the trie (and additionally shares through binary
+    operator nodes; ``PrefixTrie`` is kept for structural analysis)."""
+    from .plan import ExecutionPlan
+
+    return ExecutionPlan(pipelines).run(queries, batch_size=batch_size)

@@ -16,22 +16,35 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5 exposes explicit axis types; older releases do not
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
 
 __all__ = ["make_production_mesh", "make_mesh", "mesh_info"]
+
+
+def _make(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     """Elastic variant: any (n_pods, data, model) factorization."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make(tuple(shape), tuple(axes))
 
 
 def mesh_info(mesh: Mesh) -> dict:

@@ -1,0 +1,166 @@
+"""Minimal stand-in for ``hypothesis`` on bare interpreters.
+
+The tier-1 suite must collect (and meaningfully run) without optional
+dependencies.  When the real ``hypothesis`` package is unavailable,
+``conftest.py`` installs this module as ``sys.modules["hypothesis"]``:
+``@given`` then draws a fixed number of pseudo-random examples from a
+seeded RNG instead of doing real property search.  Only the strategy
+surface the test suite uses is implemented (integers, floats, text,
+lists, tuples, sampled_from, permutations).
+
+This is a *fallback*, not a replacement — install ``hypothesis`` (the
+``test`` extra in pyproject.toml) to get shrinking and real coverage.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import string
+import types
+from typing import Any, Callable, List, Sequence
+
+__all__ = ["given", "settings", "strategies", "assume", "make_module"]
+
+_MAX_EXAMPLES_CAP = 20  # keep the fallback fast in CI
+
+
+class _Assumption(Exception):
+    pass
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example_with(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "_Strategy":
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "_Strategy":
+        def draw(rng: random.Random):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Assumption()
+        return _Strategy(draw)
+
+
+def integers(min_value: int = -(2 ** 16), max_value: int = 2 ** 16) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float = -1e6, max_value: float = 1e6,
+           **_: Any) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def text(alphabet: Sequence[str] = string.ascii_lowercase,
+         min_size: int = 0, max_size: int = 10) -> _Strategy:
+    chars = list(alphabet)
+
+    def draw(rng: random.Random) -> str:
+        n = rng.randint(min_size, max_size)
+        return "".join(rng.choice(chars) for _ in range(n))
+    return _Strategy(draw)
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10, **_: Any) -> _Strategy:
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        return [elements.example_with(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(
+        lambda rng: tuple(e.example_with(rng) for e in elements))
+
+
+def sampled_from(options: Sequence[Any]) -> _Strategy:
+    opts = list(options)
+    return _Strategy(lambda rng: rng.choice(opts))
+
+
+def permutations(values: Sequence[Any]) -> _Strategy:
+    def draw(rng: random.Random) -> List[Any]:
+        out = list(values)
+        rng.shuffle(out)
+        return out
+    return _Strategy(draw)
+
+
+def just(value: Any) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def one_of(*strats: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: rng.choice(strats).example_with(rng))
+
+
+def given(*strats: _Strategy, **kw_strats: _Strategy):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = (getattr(wrapper, "_max_examples", None)
+                 or getattr(fn, "_max_examples", None)
+                 or _MAX_EXAMPLES_CAP)
+            rng = random.Random(0)
+            for _ in range(min(n, _MAX_EXAMPLES_CAP)):
+                drawn = [s.example_with(rng) for s in strats]
+                drawn_kw = {k: s.example_with(rng)
+                            for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except _Assumption:
+                    continue
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # pytest must not mistake the drawn parameters for fixtures
+        wrapper.__signature__ = inspect.Signature()
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int = None, **_: Any):
+    def decorate(fn):
+        if max_examples:
+            fn._max_examples = max_examples
+        return fn
+    return decorate
+
+
+class HealthCheck:  # referenced by settings(suppress_health_check=...)
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def make_module() -> types.ModuleType:
+    """Build importable ``hypothesis`` + ``hypothesis.strategies`` modules."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.__is_repro_fallback__ = True
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "text", "lists",
+                 "tuples", "sampled_from", "permutations", "just", "one_of"):
+        setattr(st_mod, name, globals()[name])
+    hyp.strategies = st_mod
+    return hyp

@@ -1,0 +1,20 @@
+"""Shared pytest setup.
+
+Tier-1 must collect on a bare interpreter: when the optional
+``hypothesis`` dependency is missing, install the deterministic
+fallback sampler from ``_hypothesis_fallback`` under the ``hypothesis``
+module names *before* the test modules import it.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_fallback
+
+    _mod = _hypothesis_fallback.make_module()
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies

@@ -1,0 +1,294 @@
+"""ExecutionPlan: one shared DAG for a pipeline set (core/plan.py).
+
+Covers the cache-transparency invariant (plan execution == naive
+per-pipeline execution) across every operator of the §2.1 algebra,
+sharing through binary operator nodes (the §6 limitation the stage-list
+trie cannot resolve), planner-inserted memoization with hit accounting,
+and the §6 ablation regression (A; A»B; A»B»C executes B exactly once).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ColFrame, ExecutionPlan, GenericTransformer,
+                        add_ranks, plan_size, run_with_trie)
+
+
+class CountingStage(GenericTransformer):
+    def __init__(self, name, fn=None, **kw):
+        self.calls = 0
+
+        def wrapped(inp, _fn=fn):
+            self.calls += 1
+            return _fn(inp) if _fn else inp
+        super().__init__(wrapped, name, **kw)
+
+
+def make_retriever(name, n=6, base=10.0):
+    def fn(inp):
+        rows = []
+        for qid in inp["qid"].tolist():
+            for i in range(n):
+                rows.append({"qid": qid, "docno": f"{name}_d{i}",
+                             "score": base - i})
+        return add_ranks(ColFrame.from_dicts(rows))
+    return CountingStage(name, fn)
+
+
+def boost_fn(inp):
+    return add_ranks(inp.assign(score=inp["score"] * 2.0))
+
+
+def shift_fn(inp):
+    return add_ranks(inp.assign(score=inp["score"] + 1.0))
+
+
+QUERIES = ColFrame({"qid": ["q1", "q2", "q3"],
+                    "query": ["alpha", "beta", "gamma"]})
+
+SORT = ["qid", "docno"]
+
+
+def assert_equivalent(pipelines, queries=QUERIES, **plan_kw):
+    naive = [p(queries) for p in pipelines]
+    with ExecutionPlan(pipelines, **plan_kw) as plan:
+        outs, stats = plan.run(queries)
+    assert len(outs) == len(naive)
+    for got, want in zip(outs, naive):
+        g = got.sort_values(SORT)
+        w = want.sort_values(SORT)
+        cols = [c for c in ("qid", "docno", "score", "rank")
+                if c in want.columns]
+        assert g.equals(w, cols=cols), \
+            f"plan diverged from naive for {pipelines}"
+    return stats
+
+
+def test_plan_equivalence_all_operator_types():
+    a = make_retriever("A")
+    b = make_retriever("B", base=8.0)
+    boost = CountingStage("boost", boost_fn)
+    shift = CountingStage("shift", shift_fn)
+    pipelines = [
+        a,                              # bare stage
+        a >> boost,                     # compose
+        a % 3,                          # rank cutoff
+        a + b,                          # linear combine
+        a ** b,                         # feature union
+        a | b,                          # set union
+        a & a,                          # set intersection
+        a ^ b,                          # concatenate
+        a * 0.5,                        # scalar product
+        (a + b) % 4 >> shift,           # nested mix
+        ((a * 2.0) + (b >> boost)) % 5,
+    ]
+    stats = assert_equivalent(pipelines)
+    assert stats.nodes_executed == stats.nodes_planned
+    assert stats.nodes_total == sum(plan_size(p) for p in pipelines)
+    assert stats.stage_invocations_saved > 0
+
+
+def test_shared_retriever_under_binary_operators_runs_once():
+    """The tentpole claim: a retriever shared under ``a + b`` and
+    ``a ** c`` executes once — stages_of-based sharing cannot see it."""
+    a = make_retriever("A")
+    b = make_retriever("B", base=8.0)
+    c = make_retriever("C", base=6.0)
+    pipelines = [a + b, a ** c, a % 3, a]
+    assert_equivalent(pipelines)   # re-runs naive first
+    a.calls = b.calls = c.calls = 0
+    outs, stats = ExecutionPlan(pipelines).run(QUERIES)
+    assert a.calls == 1
+    assert b.calls == 1
+    assert c.calls == 1
+    # nodes: A, B, C, A+B, A**C, A%3  — naive would run 3+3+2+1=9
+    assert stats.nodes_planned == 6
+    assert stats.nodes_executed == 6
+    assert stats.nodes_total == 9
+    assert stats.stage_invocations_saved == 3
+
+
+def test_section6_ablation_executes_B_once():
+    """Regression for the paper-§6 case ``A; A»B; A»B»C``."""
+    A = make_retriever("A")
+    B = CountingStage("B", boost_fn)
+    C = CountingStage("C", shift_fn)
+    pipelines = [A, A >> B, A >> B >> C]
+    assert_equivalent(pipelines)
+    A.calls = B.calls = C.calls = 0
+    _, stats = ExecutionPlan(pipelines).run(QUERIES)
+    assert A.calls == 1
+    assert B.calls == 1          # LCP-only precomputation runs B twice
+    assert C.calls == 1
+    assert stats.nodes_executed == 3
+    assert stats.nodes_total == 6
+    # the thin wrapper reports identical accounting
+    _, trie_stats = run_with_trie(pipelines, QUERIES)
+    assert trie_stats.nodes_executed == 3
+    assert trie_stats.nodes_total == 6
+
+
+def test_same_stage_under_different_prefixes_not_merged():
+    """Correctness guard: node identity is (prefix, stage), not stage."""
+    a = make_retriever("A")
+    b = make_retriever("B", base=8.0)
+    boost = CountingStage("boost", boost_fn)
+    pipelines = [a >> boost, b >> boost]
+    stats = assert_equivalent(pipelines)
+    assert stats.nodes_planned == 4      # a, b, and TWO boost nodes
+
+
+def test_planner_inserted_cache_hits_on_second_run(tmp_path):
+    def retr_fn(inp):
+        rows = []
+        for qid, query in zip(inp["qid"].tolist(), inp["query"].tolist()):
+            for i in range(4):
+                rows.append({"qid": qid, "query": query,
+                             "docno": f"d{i}", "score": 9.0 - i})
+        return add_ranks(ColFrame.from_dicts(rows))
+    retr = CountingStage("R", retr_fn,
+                         one_to_many=True, key_columns=("qid", "query"))
+    boost = CountingStage("boost", boost_fn)   # no metadata -> uncached
+    pipelines = [retr % 3, retr >> boost]
+    naive = [p(QUERIES) for p in pipelines]
+    retr.calls = 0
+
+    with ExecutionPlan(pipelines, cache_dir=str(tmp_path)) as plan:
+        cached = [n for n in plan.nodes.values() if n.cache is not None]
+        assert len(cached) == 1          # only the retriever is cacheable
+        outs1, stats1 = plan.run(QUERIES)
+        assert stats1.cache_hits == 0
+        assert stats1.cache_misses == len(QUERIES)
+        outs2, stats2 = plan.run(QUERIES)
+        assert stats2.cache_hits == len(QUERIES)
+        assert stats2.cache_misses == 0
+    assert retr.calls == 1               # second run served from cache
+    for got, want in zip(outs2, naive):
+        assert got.sort_values(SORT).equals(
+            want.sort_values(SORT), cols=["qid", "docno", "score", "rank"])
+
+    # a fresh plan against the same cache_dir is hot from the start
+    with ExecutionPlan(pipelines, cache_dir=str(tmp_path)) as plan2:
+        _, stats3 = plan2.run(QUERIES)
+        assert stats3.cache_hits == len(QUERIES)
+    assert retr.calls == 1
+
+
+def test_cache_paths_stable_across_processes(tmp_path):
+    """Node cache directories must not depend on the per-process hash
+    salt — a fresh interpreter pointed at the same cache_dir must hit."""
+    import os
+    import subprocess
+    import sys
+    script = (
+        "import sys\n"
+        "from repro.core import ColFrame, ExecutionPlan, "
+        "GenericTransformer, add_ranks\n"
+        "def retr(inp):\n"
+        "    rows = [{'qid': q, 'query': t, 'docno': f'd{i}', "
+        "'score': 5.0 - i}\n"
+        "            for q, t in zip(inp['qid'].tolist(), "
+        "inp['query'].tolist()) for i in range(3)]\n"
+        "    return add_ranks(ColFrame.from_dicts(rows))\n"
+        "a = GenericTransformer(retr, 'A', one_to_many=True, "
+        "key_columns=('qid', 'query'))\n"
+        "Q = ColFrame({'qid': ['q1'], 'query': ['x']})\n"
+        "with ExecutionPlan([a % 2], cache_dir=sys.argv[1]) as plan:\n"
+        "    _, stats = plan.run(Q)\n"
+        "    print(stats.cache_hits, stats.cache_misses)\n")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ, "PYTHONPATH": os.path.join(root, "src")}
+    outs = []
+    for _ in range(2):
+        p = subprocess.run([sys.executable, "-c", script, str(tmp_path)],
+                           capture_output=True, text=True, env=env,
+                           timeout=120)
+        assert p.returncode == 0, p.stderr[-1000:]
+        outs.append(p.stdout.split())
+    assert outs[0] == ["0", "1"]         # cold
+    assert outs[1] == ["1", "0"]         # second process hits
+
+
+def test_pluggable_memo_factory():
+    seen = []
+
+    def factory(stage, path):
+        seen.append(repr(stage))
+        return None
+
+    a = make_retriever("A")
+    ExecutionPlan([a % 3], memo_factory=factory)
+    assert len(seen) == 2                # a and the RankCutoff node
+
+
+def test_plan_stats_carry_node_times():
+    a = make_retriever("A")
+    _, stats = ExecutionPlan([a % 3, a % 5]).run(QUERIES)
+    assert set(stats.node_times_s) == {repr(a), repr(
+        (a % 3).stages[1]), repr((a % 5).stages[1])}
+    assert all(t >= 0 for t in stats.node_times_s.values())
+    assert stats.wall_time_s > 0
+
+
+def test_plan_batching_matches_unbatched():
+    a = make_retriever("A", n=4)
+    boost = CountingStage("boost", boost_fn)
+    pipelines = [a >> boost, a % 2]
+    big = ColFrame({"qid": [f"q{i}" for i in range(9)],
+                    "query": [f"t{i}" for i in range(9)]})
+    full, _ = ExecutionPlan(pipelines).run(big)
+    batched, _ = ExecutionPlan(pipelines).run(big, batch_size=2)
+    for f, b in zip(full, batched):
+        assert f.sort_values(SORT).equals(b.sort_values(SORT),
+                                          cols=["qid", "docno", "score"])
+
+
+def test_experiment_plan_mode(tmp_path):
+    from repro.core import Experiment, PlanStats
+    qrels = ColFrame({"qid": ["q1", "q2", "q3"],
+                      "docno": ["A_d0", "A_d1", "B_d0"],
+                      "label": [1, 1, 1]})
+    a = make_retriever("A")
+    b = make_retriever("B", base=8.0)
+    systems = [a % 3, a + b, a ** b]
+    naive = Experiment(systems, QUERIES, qrels, ["nDCG@10", "MAP"])
+    planned = Experiment(systems, QUERIES, qrels, ["nDCG@10", "MAP"],
+                         precompute_prefix=True, precompute_mode="plan",
+                         cache_dir=str(tmp_path))
+    for n1, n2 in zip(naive.names, planned.names):
+        for m in ("nDCG@10", "MAP"):
+            assert naive.means[n1][m] == pytest.approx(planned.means[n2][m])
+    assert isinstance(planned.precompute, PlanStats)
+    assert planned.precompute.nodes_executed < planned.precompute.nodes_total
+
+
+@given(st.lists(st.lists(st.sampled_from("ABCD"), min_size=1, max_size=4),
+                min_size=2, max_size=5),
+       st.lists(st.sampled_from(["+", "**", "^", ">>"]),
+                min_size=0, max_size=3))
+@settings(max_examples=25, deadline=None)
+def test_property_plan_equals_naive(seqs, ops):
+    """Random pipeline sets: chains of rerankers over shared retrievers,
+    optionally merged pairwise by binary operators."""
+    retrievers = {c: make_retriever(c, base=ord(c) * 1.0) for c in "ABCD"}
+    rerank = {c: GenericTransformer(
+        lambda inp, _c=c: add_ranks(
+            inp.assign(score=inp["score"] + ord(_c))), f"re{c}")
+        for c in "ABCD"}
+    pipes = []
+    for seq in seqs:
+        p = retrievers[seq[0]]
+        for c in seq[1:]:
+            p = p >> rerank[c]
+        pipes.append(p)
+    for i, op in enumerate(ops):
+        l, r = pipes[i % len(pipes)], pipes[(i + 1) % len(pipes)]
+        if op == "+":
+            pipes.append(l + r)
+        elif op == "**":
+            pipes.append(l ** r)
+        elif op == "^":
+            pipes.append(l ^ r)
+        else:
+            pipes.append(l % 3)
+    assert_equivalent(pipes)
