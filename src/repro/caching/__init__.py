@@ -1,4 +1,7 @@
 # Explicit caching strategies (paper §4) + TPU adaptations.
+from .backends import (BACKENDS, CacheBackend, DbmBackend, FileLock,
+                       MemoryLRUBackend, PickleDirBackend, SQLiteBackend,
+                       atomic_write_bytes, open_backend)
 from .base import CacheMissError, CacheStats, CacheTransformer
 from .kv import KeyValueCache
 from .scorer import ScorerCache
@@ -18,6 +21,9 @@ for _cls in (KeyValueCache, ScorerCache, DenseScorerCache, RetrieverCache,
     install_artifact_methods(_cls)
 
 __all__ = [
+    "BACKENDS", "CacheBackend", "MemoryLRUBackend", "PickleDirBackend",
+    "DbmBackend", "SQLiteBackend", "FileLock", "atomic_write_bytes",
+    "open_backend",
     "CacheMissError", "CacheStats", "CacheTransformer",
     "KeyValueCache", "ScorerCache", "DenseScorerCache", "RetrieverCache",
     "IndexerCache", "Lazy", "Artifact", "to_hub", "from_hub", "hub_dir",

@@ -38,8 +38,16 @@ class UncacheableError(TypeError):
 
 
 def auto_cache(transformer: Transformer, path: Optional[str] = None,
-               **kwargs):
-    """Pick and construct the right cache family from metadata."""
+               *, backend: Optional[str] = None, **kwargs):
+    """Pick and construct the right cache family from metadata.
+
+    ``backend`` selects the storage implementation by registry name
+    (``"memory"`` / ``"pickle"`` / ``"dbm"`` / ``"sqlite"`` — see
+    ``backends.py``); ``None`` keeps each family's default (SQLite for
+    key-value/scorer caches, dbm for retriever caches, both per §4).
+    """
+    if backend is not None:
+        kwargs["backend"] = backend
     if isinstance(transformer, Compose):
         raise UncacheableError(
             "auto_cache wraps a single stage; wrap stages individually or "
@@ -75,7 +83,9 @@ def auto_cache_or_none(transformer: Transformer, path: Optional[str] = None,
     This is the default ``memo_factory`` of ``core.plan.ExecutionPlan``
     — nodes whose metadata admits a caching strategy get one inserted by
     the planner; everything else (uncacheable, nondeterministic,
-    already-cached, undeclared) runs bare.
+    already-cached, undeclared) runs bare.  Accepts the same
+    ``backend=`` selector as ``auto_cache`` (the planner forwards its
+    ``cache_backend`` argument here).
     """
     from .base import CacheTransformer
     if isinstance(transformer, (Compose, CacheTransformer)):

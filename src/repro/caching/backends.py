@@ -1,0 +1,468 @@
+"""Pluggable storage backends for the explicit cache families (§4).
+
+Before this module each cache family rolled its own persistence —
+``KeyValueCache`` embedded SQLite, ``RetrieverCache`` embedded ``dbm``,
+``DenseScorerCache`` hand-managed memmaps.  All of them reduce to the
+same contract: an (optionally persistent) ``bytes → bytes`` map with
+batched lookup/insert.  ``CacheBackend`` names that contract once and
+the families select an implementation via a ``backend=`` parameter
+(also plumbed through ``auto_cache`` and the execution planner).
+
+Implementations:
+
+* ``"memory"`` — a bounded in-process LRU (no persistence; ideal for
+  planner-inserted memos inside a single run);
+* ``"pickle"`` — one file per entry under the cache directory, written
+  with atomic renames (content-addressed like a git object store);
+* ``"dbm"``    — a single ``dbm`` database, every open/read/write under
+  an inter-process file lock (gdbm handles cannot be shared);
+* ``"sqlite"`` — the paper's §4.1 choice, kept as the
+  ``KeyValueCache`` default.
+
+Concurrency contract (the executor in ``core/plan.py`` relies on it):
+
+* every method is safe to call from multiple threads of one process;
+* on-disk backends are safe against concurrent *processes* sharing one
+  cache directory: writes happen under an ``fcntl`` file lock and/or an
+  atomic ``os.replace``, so readers never observe torn entries;
+* ``lock()`` exposes the same exclusive lock to callers, letting the
+  cache families implement *compute-once* misses: take the lock,
+  re-check, compute only what is still absent, insert, release.  Two
+  shards (or two CI jobs) racing on the same key therefore compute it
+  exactly once — the stress tests in ``tests/test_backends.py`` assert
+  this for every backend.  The exactly-once guarantee deliberately
+  serializes *miss computation* across workers sharing one store; pure
+  hits stay concurrent (lock-free pickle reads, shared-flock dbm
+  reads, WAL sqlite reads).
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import sqlite3
+import tempfile
+import threading
+from collections import OrderedDict
+from contextlib import contextmanager
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Type, Union
+
+try:                                     # POSIX; on other platforms the
+    import fcntl                         # thread lock still serializes
+except ImportError:                      # pragma: no cover - linux CI
+    fcntl = None
+
+__all__ = ["CacheBackend", "MemoryLRUBackend", "PickleDirBackend",
+           "DbmBackend", "SQLiteBackend", "FileLock", "atomic_write_bytes",
+           "open_backend", "BACKENDS"]
+
+
+# ---------------------------------------------------------------------------
+# shared primitives
+# ---------------------------------------------------------------------------
+
+def atomic_write_bytes(path: str, data: bytes) -> None:
+    """Write ``data`` to ``path`` via a same-directory temp file and an
+    atomic ``os.replace`` — concurrent readers see the old blob or the
+    new blob, never a torn one."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(prefix=".tmp-", dir=d)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+class FileLock:
+    """Re-entrant exclusive lock spanning threads *and* processes.
+
+    A ``threading.RLock`` serializes threads of this process; an
+    ``fcntl.flock`` on a sidecar file serializes against other
+    processes.  Usable as a context manager.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._tlock = threading.RLock()
+        self._depth = 0
+        self._fd: Optional[int] = None
+        self._owner: Optional[int] = None
+
+    def held(self) -> bool:
+        """True when the *calling thread* holds this lock (lets read
+        paths inside a compute-once critical section skip re-locking)."""
+        return self._owner == threading.get_ident()
+
+    def acquire(self) -> None:
+        self._tlock.acquire()
+        try:
+            if self._depth == 0 and fcntl is not None:
+                fd = os.open(self.path, os.O_RDWR | os.O_CREAT, 0o644)
+                try:
+                    fcntl.flock(fd, fcntl.LOCK_EX)
+                except BaseException:
+                    os.close(fd)
+                    raise
+                self._fd = fd
+            self._depth += 1
+            self._owner = threading.get_ident()
+        except BaseException:
+            # roll back the thread lock so a failed acquire (unwritable
+            # lock file, interrupt) surfaces instead of deadlocking
+            # every other thread touching this cache
+            self._tlock.release()
+            raise
+
+    def release(self) -> None:
+        try:
+            if self._depth == 1:
+                self._owner = None
+                if self._fd is not None:
+                    fcntl.flock(self._fd, fcntl.LOCK_UN)
+                    os.close(self._fd)
+                    self._fd = None
+        finally:
+            self._depth -= 1
+            self._tlock.release()
+
+    def __enter__(self) -> "FileLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.release()
+        return False
+
+
+@contextmanager
+def _shared_flock(path: str):
+    """A short-lived *shared* flock for read paths: concurrent readers
+    proceed together, while a writer holding the exclusive ``FileLock``
+    on the same file excludes them."""
+    if fcntl is None:                    # pragma: no cover - linux CI
+        yield
+        return
+    fd = os.open(path, os.O_RDWR | os.O_CREAT, 0o644)
+    try:
+        fcntl.flock(fd, fcntl.LOCK_SH)
+        yield
+    finally:
+        try:
+            fcntl.flock(fd, fcntl.LOCK_UN)
+        finally:
+            os.close(fd)
+
+
+def _store_file(path: str, preferred: str, legacy: str) -> str:
+    """Resolve a backend's store file, honouring directories written by
+    the pre-backend cache families (kv.sqlite3 / retriever.db) so warm
+    caches stay warm across the refactor."""
+    new = os.path.join(path, preferred)
+    old = os.path.join(path, legacy)
+    if not os.path.exists(new) and _legacy_store_exists(old):
+        return old
+    return new
+
+
+def _legacy_store_exists(base: str) -> bool:
+    # dbm flavours append suffixes (gdbm: none; ndbm: .db; dumb: .dat)
+    if os.path.exists(base):
+        return True
+    return any(os.path.exists(base + suf) for suf in (".db", ".dat", ".dir"))
+
+
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+
+class CacheBackend:
+    """``bytes → bytes`` store with batched access and an exclusive lock.
+
+    Subclasses implement ``get_many`` / ``put_many`` / ``__len__`` /
+    ``_close``; everything else is shared.  ``close()`` is idempotent.
+    """
+
+    #: registry name, set on concrete classes
+    name: str = ""
+    #: whether entries survive the process (drives test parametrization)
+    persistent: bool = True
+
+    def __init__(self, path: Optional[str]):
+        self.path = path
+        self._closed = False
+        if path is not None:
+            os.makedirs(path, exist_ok=True)
+            self._lock = FileLock(os.path.join(path, ".lock"))
+        else:
+            self._lock = threading.RLock()   # memory backend: threads only
+
+    # -- required ----------------------------------------------------------
+    def get_many(self, keys: Sequence[bytes]) -> List[Optional[bytes]]:
+        raise NotImplementedError
+
+    def put_many(self, items: Iterable[Tuple[bytes, bytes]]) -> None:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+    def _close(self) -> None:
+        pass
+
+    # -- shared ------------------------------------------------------------
+    def get(self, key: bytes) -> Optional[bytes]:
+        return self.get_many([key])[0]
+
+    def put(self, key: bytes, value: bytes) -> None:
+        self.put_many([(key, value)])
+
+    @contextmanager
+    def lock(self):
+        """Exclusive section across threads and (for disk backends)
+        processes — the compute-once critical section."""
+        with self._lock:
+            yield self
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._close()
+        self._closed = True
+
+
+# ---------------------------------------------------------------------------
+# implementations
+# ---------------------------------------------------------------------------
+
+class MemoryLRUBackend(CacheBackend):
+    """Bounded in-process LRU; ``path`` is ignored (no persistence)."""
+
+    name = "memory"
+    persistent = False
+
+    def __init__(self, path: Optional[str] = None, *,
+                 capacity: int = 1_000_000):
+        super().__init__(None)
+        self.capacity = int(capacity)
+        self._data: "OrderedDict[bytes, bytes]" = OrderedDict()
+
+    def get_many(self, keys: Sequence[bytes]) -> List[Optional[bytes]]:
+        with self._lock:
+            out: List[Optional[bytes]] = []
+            for k in keys:
+                v = self._data.get(k)
+                if v is not None:
+                    self._data.move_to_end(k)
+                out.append(v)
+            return out
+
+    def put_many(self, items: Iterable[Tuple[bytes, bytes]]) -> None:
+        with self._lock:
+            for k, v in items:
+                self._data[k] = v
+                self._data.move_to_end(k)
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+
+class PickleDirBackend(CacheBackend):
+    """One file per entry, named by the SHA-256 of the key, written with
+    atomic renames.  Lock-free reads; concurrent writers of the same key
+    are idempotent (deterministic transformers ⇒ identical blobs), so a
+    lost race costs a rewrite, never a torn entry."""
+
+    name = "pickle"
+
+    def __init__(self, path: str):
+        if path is None:
+            raise ValueError("PickleDirBackend requires a directory")
+        super().__init__(path)
+        self._objdir = os.path.join(path, "objects")
+        os.makedirs(self._objdir, exist_ok=True)
+
+    def _file_of(self, key: bytes) -> str:
+        h = hashlib.sha256(key).hexdigest()
+        return os.path.join(self._objdir, h[:2], h[2:] + ".bin")
+
+    def get_many(self, keys: Sequence[bytes]) -> List[Optional[bytes]]:
+        out: List[Optional[bytes]] = []
+        for k in keys:
+            try:
+                with open(self._file_of(k), "rb") as f:
+                    out.append(f.read())
+            except FileNotFoundError:
+                out.append(None)
+        return out
+
+    def put_many(self, items: Iterable[Tuple[bytes, bytes]]) -> None:
+        for k, v in items:
+            fp = self._file_of(k)
+            os.makedirs(os.path.dirname(fp), exist_ok=True)
+            atomic_write_bytes(fp, v)
+
+    def __len__(self) -> int:
+        n = 0
+        for _, _, files in os.walk(self._objdir):
+            n += sum(f.endswith(".bin") for f in files)
+        return n
+
+
+class DbmBackend(CacheBackend):
+    """A single ``dbm`` database (the paper's §4.3 retriever store).
+
+    gdbm handles are single-writer and do not observe other writers, so
+    the database is opened per operation: writes under the exclusive
+    inter-process file lock, reads under a *shared* flock (concurrent
+    readers proceed together; a writer excludes them) — so concurrent
+    shards, threads and CI jobs sharing one cache directory never
+    corrupt the store, and pure cache hits do not serialize.
+    """
+
+    name = "dbm"
+
+    def __init__(self, path: str):
+        if path is None:
+            raise ValueError("DbmBackend requires a directory")
+        super().__init__(path)
+        self._file = _store_file(path, "cache.dbm", "retriever.db")
+        import dbm
+        self._dbm = dbm
+        with self._lock:                     # create eagerly for readers
+            db = dbm.open(self._file, "c")
+            db.close()
+
+    @contextmanager
+    def _read_locked(self):
+        # inside our own exclusive section (compute-once recheck), a
+        # shared flock on the same file would deadlock — skip it
+        if self._lock.held():
+            yield
+        else:
+            with _shared_flock(self._lock.path):
+                yield
+
+    def get_many(self, keys: Sequence[bytes]) -> List[Optional[bytes]]:
+        with self._read_locked():
+            db = self._dbm.open(self._file, "r")
+            try:
+                return [db[k] if k in db else None for k in keys]
+            finally:
+                db.close()
+
+    def put_many(self, items: Iterable[Tuple[bytes, bytes]]) -> None:
+        with self._lock:
+            db = self._dbm.open(self._file, "c")
+            try:
+                for k, v in items:
+                    db[k] = v
+            finally:
+                db.close()
+
+    def __len__(self) -> int:
+        with self._read_locked():
+            db = self._dbm.open(self._file, "r")
+            try:
+                return len(db)
+            finally:
+                db.close()
+
+
+_SQLITE_SCHEMA = """
+CREATE TABLE IF NOT EXISTS kv (
+  key   BLOB PRIMARY KEY,
+  value BLOB NOT NULL
+) WITHOUT ROWID;
+"""
+
+
+class SQLiteBackend(CacheBackend):
+    """SQLite store (the paper's §4.1 KeyValueCache implementation).
+
+    One connection shared across threads (``check_same_thread=False``)
+    behind an in-process lock; SQLite's WAL journal already lets
+    concurrent *processes* read alongside a writer, so reads and writes
+    deliberately avoid the inter-process ``FileLock`` — it is reserved
+    for ``lock()`` (the compute-once critical section).
+    """
+
+    name = "sqlite"
+
+    def __init__(self, path: str):
+        if path is None:
+            raise ValueError("SQLiteBackend requires a directory")
+        super().__init__(path)
+        self._conn_lock = threading.Lock()
+        self._db = sqlite3.connect(
+            _store_file(path, "cache.sqlite3", "kv.sqlite3"),
+            check_same_thread=False)
+        self._db.executescript(_SQLITE_SCHEMA)
+        # bulk lookups are much faster with a page cache
+        self._db.execute("PRAGMA cache_size = -65536")
+        self._db.execute("PRAGMA journal_mode = WAL")
+        self._db.execute("PRAGMA synchronous = NORMAL")
+
+    def get_many(self, keys: Sequence[bytes]) -> List[Optional[bytes]]:
+        out: List[Optional[bytes]] = [None] * len(keys)
+        CHUNK = 900                          # sqlite var limit is 999
+        pos: Dict[bytes, int] = {k: i for i, k in enumerate(keys)}
+        with self._conn_lock:
+            for lo in range(0, len(keys), CHUNK):
+                chunk = list(keys[lo:lo + CHUNK])
+                q = ("SELECT key, value FROM kv WHERE key IN (%s)"
+                     % ",".join("?" * len(chunk)))
+                for k, v in self._db.execute(q, chunk):
+                    out[pos[bytes(k)]] = bytes(v)
+        return out
+
+    def put_many(self, items: Iterable[Tuple[bytes, bytes]]) -> None:
+        with self._conn_lock:
+            with self._db:
+                self._db.executemany(
+                    "INSERT OR REPLACE INTO kv (key, value) VALUES (?, ?)",
+                    items)
+
+    def __len__(self) -> int:
+        with self._conn_lock:
+            (n,) = self._db.execute("SELECT COUNT(*) FROM kv").fetchone()
+        return int(n)
+
+    def _close(self) -> None:
+        try:
+            self._db.close()
+        except Exception:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+BACKENDS: Dict[str, Type[CacheBackend]] = {
+    "memory": MemoryLRUBackend,
+    "pickle": PickleDirBackend,
+    "dbm": DbmBackend,
+    "sqlite": SQLiteBackend,
+}
+
+
+def open_backend(spec: Union[str, CacheBackend, None], path: Optional[str],
+                 default: str = "sqlite") -> CacheBackend:
+    """Resolve a ``backend=`` argument: an instance passes through, a
+    name is looked up in ``BACKENDS``, ``None`` means ``default``."""
+    if isinstance(spec, CacheBackend):
+        return spec
+    name = default if spec is None else str(spec)
+    cls = BACKENDS.get(name)
+    if cls is None:
+        raise ValueError(f"unknown cache backend {name!r}; "
+                         f"expected one of {sorted(BACKENDS)}")
+    return cls(path)

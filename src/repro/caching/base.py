@@ -18,11 +18,12 @@ from __future__ import annotations
 import os
 import pickle
 import shutil
+import sys
 import tempfile
+import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
-from ..core.frame import ColFrame
 from ..core.pipeline import Transformer
 
 __all__ = ["CacheMissError", "CacheStats", "CacheTransformer",
@@ -40,6 +41,18 @@ class CacheStats:
     misses: int = 0
     inserts: int = 0
     verified: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    def add(self, *, hits: int = 0, misses: int = 0, inserts: int = 0,
+            verified: int = 0) -> None:
+        """Atomic increment — cache families are shared by the
+        concurrent plan executor, so counter updates must not race."""
+        with self._lock:
+            self.hits += hits
+            self.misses += misses
+            self.inserts += inserts
+            self.verified += verified
 
     @property
     def lookups(self) -> int:
@@ -123,11 +136,33 @@ class CacheTransformer(Transformer):
         self.close()
         return False
 
-    def __del__(self):  # best-effort temp cleanup
+    def __del__(self):
+        # Best-effort temp cleanup.  During interpreter shutdown module
+        # globals (os/shutil/tempfile) may already be torn down, in which
+        # case close() can raise things `except Exception` does not stop
+        # (the attribute machinery itself may be gone) — so bail out
+        # early when finalizing, and never propagate from a finalizer.
         try:
+            if getattr(self, "_closed", True):
+                return
+            if sys is None or sys.is_finalizing() or shutil is None:
+                return
             self.close()
-        except Exception:
+        except BaseException:
             pass
+
+    # -- transparency: caches delegate the wrapped transformer's
+    #    scheduling metadata — a hand-wrapped cache must not launder a
+    #    shardable=False declaration into the class default.
+    @property
+    def shardable(self) -> bool:
+        t = self._transformer_raw
+        if t is not None and hasattr(t, "_resolve_lazy") \
+                and not getattr(t, "constructed", True):
+            # don't force a Lazy to construct just to read metadata;
+            # an unconstructed Lazy reports its own declaration
+            return bool(getattr(t, "shardable", True))
+        return bool(getattr(self.transformer, "shardable", True))
 
     # -- equality: caches are transparent, so they inherit the wrapped
     #    transformer's signature for LCP purposes *plus* a cache marker.

@@ -10,6 +10,16 @@ functionally identical layout:
   with NaN = "not cached";
 * ``npids.json`` — the docno enumeration (docno → column index);
 * ``queries.json`` — query string → row index (grown on demand).
+
+The sidecar JSON files are written with the shared atomic-rename
+primitive and row allocation / matrix growth happen under the shared
+``FileLock`` (``backends.py``), so concurrent shards/threads *of one
+process* never observe a torn sidecar or clobber each other's row
+assignments.  Concurrent **writer processes** are not supported: each
+process holds its own in-memory row map and memmap handle, which the
+lock cannot reconcile (readers of a warm cache are fine).  For a cache
+directory shared by concurrent writers use ``ScorerCache`` with a
+``pickle``/``dbm``/``sqlite`` backend instead.
 """
 from __future__ import annotations
 
@@ -21,7 +31,8 @@ import numpy as np
 
 from ..core.frame import ColFrame
 from ..core.pipeline import add_ranks
-from .base import CacheMissError, CacheTransformer
+from .backends import FileLock, atomic_write_bytes
+from .base import CacheTransformer
 
 __all__ = ["DenseScorerCache"]
 
@@ -38,6 +49,7 @@ class DenseScorerCache(CacheTransformer):
         self._npids_path = os.path.join(self.path, "npids.json")
         self._queries_path = os.path.join(self.path, "queries.json")
         self._scores_path = os.path.join(self.path, "scores.npy")
+        self._write_lock = FileLock(os.path.join(self.path, ".lock"))
         if os.path.exists(self._npids_path):
             with open(self._npids_path) as f:
                 self.docnos: List[str] = json.load(f)
@@ -46,8 +58,8 @@ class DenseScorerCache(CacheTransformer):
                 raise ValueError("DenseScorerCache needs `docnos` on first "
                                  "creation (the npids enumeration)")
             self.docnos = [str(d) for d in docnos]
-            with open(self._npids_path, "w") as f:
-                json.dump(self.docnos, f)
+            atomic_write_bytes(self._npids_path,
+                               json.dumps(self.docnos).encode())
         self._doc_idx: Dict[str, int] = {d: i for i, d in
                                          enumerate(self.docnos)}
         if os.path.exists(self._queries_path):
@@ -77,8 +89,8 @@ class DenseScorerCache(CacheTransformer):
             if row >= self._mat.shape[0]:
                 self._grow(row + 1)
             self._query_rows[query] = row
-            with open(self._queries_path, "w") as f:
-                json.dump(self._query_rows, f)
+            atomic_write_bytes(self._queries_path,
+                               json.dumps(self._query_rows).encode())
         return row
 
     def _grow(self, need: int):
@@ -126,8 +138,8 @@ class DenseScorerCache(CacheTransformer):
                     scores[i] = v
                     continue
             miss_idx.append(i)
-        self.stats.hits += len(inp) - len(miss_idx)
-        self.stats.misses += len(miss_idx)
+        self.stats.add(hits=len(inp) - len(miss_idx),
+                       misses=len(miss_idx))
 
         if miss_idx:
             t = self._require_transformer(len(miss_idx))
@@ -137,12 +149,13 @@ class DenseScorerCache(CacheTransformer):
                 raise ValueError("DenseScorerCache requires a pointwise "
                                  "(1:1) scorer")
             fresh = np.asarray(out["score"], dtype=np.float64)
-            for j, i in enumerate(miss_idx):
-                row = self._row_for(queries[i], create=True)
-                col = self._doc_idx[docnos[i]]
-                self._mat[row, col] = np.float32(fresh[j])
-                scores[i] = fresh[j]
-            self._mat.flush()
-            self.stats.inserts += len(miss_idx)
+            with self._write_lock:       # row alloc + growth are exclusive
+                for j, i in enumerate(miss_idx):
+                    row = self._row_for(queries[i], create=True)
+                    col = self._doc_idx[docnos[i]]
+                    self._mat[row, col] = np.float32(fresh[j])
+                    scores[i] = fresh[j]
+                self._mat.flush()
+            self.stats.add(inserts=len(miss_idx))
 
         return add_ranks(inp.assign(score=scores))

@@ -53,7 +53,7 @@ class IndexerCache(CacheTransformer, Indexer):
                 pos += 8 + len(blob)
                 if "docno" in row:
                     docnos.append(str(row["docno"]))
-                self.stats.inserts += 1
+                self.stats.add(inserts=1)
         np.save(self._off_path, np.asarray(offsets, dtype=np.int64))
         if docnos:
             with open(self._npids_path, "w") as f:
@@ -100,7 +100,7 @@ class IndexerCache(CacheTransformer, Indexer):
             log.seek(int(offsets[i]))
             n = int.from_bytes(log.read(8), "little")
             row = pickle.loads(zlib.decompress(log.read(n)))
-            self.stats.hits += 1
+            self.stats.add(hits=1)
             return row
 
     # -- as a transformer: forward-index text lookup (D-side join) ----------------

@@ -4,77 +4,55 @@ Maps one or more *key* columns to one or more *value* columns under the
 assumption that rows are independent and values depend only on keys.
 Suitable for Q→Q / D→D stages (query/document rewriters, Doc2Query).
 
-Implementation matches the paper: a SQLite database whose keys and
-values are pickled blobs.  Rows that miss are batched through the
-wrapped transformer, inserted, and merged back in position.
+Storage is delegated to a pluggable ``CacheBackend`` (``backends.py``);
+the default ``"sqlite"`` matches the paper's implementation (a SQLite
+database of pickled blobs).  Rows that miss are re-checked and batched
+through the wrapped transformer *inside the backend's exclusive lock*,
+so concurrent shards/processes sharing one cache directory compute each
+entry exactly once.
 """
 from __future__ import annotations
 
-import sqlite3
-import os
-from typing import Any, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
 from ..core.frame import ColFrame
-from .base import (CacheMissError, CacheTransformer, pickle_key,
-                   pickle_value, unpickle_value)
+from .backends import CacheBackend, open_backend
+from .base import (CacheTransformer, pickle_key, pickle_value,
+                   unpickle_value)
 
 __all__ = ["KeyValueCache"]
 
-_SCHEMA = """
-CREATE TABLE IF NOT EXISTS kv (
-  key   BLOB PRIMARY KEY,
-  value BLOB NOT NULL
-) WITHOUT ROWID;
-"""
-
 
 class KeyValueCache(CacheTransformer):
-    """Row-by-row key→value cache backed by SQLite."""
+    """Row-by-row key→value cache over a pluggable backend."""
+
+    #: registry name passed to ``open_backend`` when ``backend=None``
+    default_backend = "sqlite"
 
     def __init__(self, path: Optional[str] = None, transformer: Any = None,
                  *, key: Any = "text", value: Any = "text",
-                 verify_fraction: float = 0.0):
+                 verify_fraction: float = 0.0,
+                 backend: Any = None):
         super().__init__(path, transformer, verify_fraction=verify_fraction)
         self.key_cols: Tuple[str, ...] = \
             (key,) if isinstance(key, str) else tuple(key)
         self.value_cols: Tuple[str, ...] = \
             (value,) if isinstance(value, str) else tuple(value)
-        self._db = sqlite3.connect(os.path.join(self.path, "kv.sqlite3"))
-        self._db.executescript(_SCHEMA)
-        # bulk lookups are much faster with a page cache
-        self._db.execute("PRAGMA cache_size = -65536")
-        self._db.execute("PRAGMA journal_mode = WAL")
-        self._db.execute("PRAGMA synchronous = NORMAL")
+        self._backend: CacheBackend = open_backend(
+            backend, self.path, default=self.default_backend)
 
     # -- backend -------------------------------------------------------------
+    @property
+    def backend(self) -> CacheBackend:
+        return self._backend
+
     def _close_backend(self):
-        try:
-            self._db.close()
-        except Exception:
-            pass
-
-    def _get_many(self, keys: List[bytes]) -> List[Optional[bytes]]:
-        out: List[Optional[bytes]] = [None] * len(keys)
-        CHUNK = 900  # sqlite var limit is 999
-        pos = {k: i for i, k in enumerate(keys)}
-        for lo in range(0, len(keys), CHUNK):
-            chunk = keys[lo:lo + CHUNK]
-            q = ("SELECT key, value FROM kv WHERE key IN (%s)"
-                 % ",".join("?" * len(chunk)))
-            for k, v in self._db.execute(q, chunk):
-                out[pos[bytes(k)]] = bytes(v)
-        return out
-
-    def _put_many(self, items: Iterable[Tuple[bytes, bytes]]):
-        with self._db:
-            self._db.executemany(
-                "INSERT OR REPLACE INTO kv (key, value) VALUES (?, ?)", items)
+        self._backend.close()
 
     def __len__(self) -> int:
-        (n,) = self._db.execute("SELECT COUNT(*) FROM kv").fetchone()
-        return int(n)
+        return len(self._backend)
 
     # -- transform -----------------------------------------------------------
     def _keys_of(self, frame: ColFrame) -> List[bytes]:
@@ -85,36 +63,15 @@ class KeyValueCache(CacheTransformer):
         if len(inp) == 0:
             return inp
         keys = self._keys_of(inp)
-        found = self._get_many(keys)
+        found = self._backend.get_many(keys)
         miss_idx = [i for i, v in enumerate(found) if v is None]
-        self.stats.hits += len(keys) - len(miss_idx)
-        self.stats.misses += len(miss_idx)
 
         values: List[Optional[Tuple]] = \
             [unpickle_value(v) if v is not None else None for v in found]
 
         if miss_idx:
-            t = self._require_transformer(len(miss_idx))
-            # dedup identical keys within the miss batch
-            uniq: dict = {}
-            for i in miss_idx:
-                uniq.setdefault(keys[i], []).append(i)
-            rep_rows = [idxs[0] for idxs in uniq.values()]
-            miss_frame = inp.take(np.asarray(rep_rows, dtype=np.int64))
-            out = t(miss_frame)
-            if len(out) != len(rep_rows):
-                raise ValueError(
-                    f"KeyValueCache: wrapped transformer returned {len(out)} "
-                    f"rows for {len(rep_rows)} inputs — KeyValueCache "
-                    f"requires a row-wise (1:1) transformer")
-            new_items = []
-            for j, (k, idxs) in enumerate(uniq.items()):
-                val = tuple(out[c][j] for c in self.value_cols)
-                new_items.append((k, pickle_value(val)))
-                for i in idxs:
-                    values[i] = val
-            self._put_many(new_items)
-            self.stats.inserts += len(new_items)
+            miss_idx = self._fill_misses(inp, keys, values, miss_idx)
+        self.stats.add(hits=len(keys) - len(miss_idx), misses=len(miss_idx))
 
         if self.verify_fraction > 0 and len(keys) > len(miss_idx):
             self._verify(inp, keys, values, miss_idx)
@@ -132,6 +89,54 @@ class KeyValueCache(CacheTransformer):
                 pass
             out_frame = out_frame.assign(**{c: col})
         return out_frame
+
+    def _fill_misses(self, inp: ColFrame, keys: List[bytes],
+                     values: List[Optional[Tuple]],
+                     miss_idx: List[int]) -> List[int]:
+        """Compute-once miss handling: under the backend's exclusive
+        lock, re-check the missing keys (another thread/process may have
+        inserted them since the optimistic lookup), run the wrapped
+        transformer only on what is still absent, and insert.  Returns
+        the indices this call actually computed.
+
+        Holding the lock across the compute is what makes the
+        exactly-once guarantee hold; the price is that cold-cache
+        misses serialize across workers sharing one store (hits stay
+        concurrent).  Run cold warm-ups uncached, or accept first-run
+        serialization for never-recompute semantics."""
+        with self._backend.lock():
+            recheck = self._backend.get_many([keys[i] for i in miss_idx])
+            still = []
+            for i, blob in zip(miss_idx, recheck):
+                if blob is None:
+                    still.append(i)
+                else:
+                    values[i] = unpickle_value(blob)
+            if not still:
+                return []
+            t = self._require_transformer(len(still))
+            # dedup identical keys within the miss batch
+            uniq: dict = {}
+            for i in still:
+                uniq.setdefault(keys[i], []).append(i)
+            rep_rows = [idxs[0] for idxs in uniq.values()]
+            miss_frame = inp.take(np.asarray(rep_rows, dtype=np.int64))
+            out = t(miss_frame)
+            if len(out) != len(rep_rows):
+                raise ValueError(
+                    f"{type(self).__name__}: wrapped transformer returned "
+                    f"{len(out)} rows for {len(rep_rows)} inputs — "
+                    f"{type(self).__name__} requires a row-wise (1:1) "
+                    f"transformer")
+            new_items = []
+            for j, (k, idxs) in enumerate(uniq.items()):
+                val = tuple(out[c][j] for c in self.value_cols)
+                new_items.append((k, pickle_value(val)))
+                for i in idxs:
+                    values[i] = val
+            self._backend.put_many(new_items)
+            self.stats.add(inserts=len(new_items))
+            return still
 
     # -- determinism verification (beyond paper §6) ---------------------------
     def _verify(self, inp: ColFrame, keys: List[bytes],
@@ -153,7 +158,7 @@ class KeyValueCache(CacheTransformer):
                 raise AssertionError(
                     f"KeyValueCache determinism violation at key index {i}: "
                     f"cached {exp!r} vs fresh {got!r}")
-        self.stats.verified += len(sample)
+        self.stats.add(verified=len(sample))
 
 
 def _val_eq(a, b) -> bool:

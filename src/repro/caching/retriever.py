@@ -1,24 +1,29 @@
 """RetrieverCache — one input row → many output rows (paper §4.3).
 
-Caches whole per-query result frames.  Implementation matches the
-paper: a ``dbm`` database whose keys are SHA256 hashes of the pickled
-key tuple and whose values are compressed pickles of the value frame.
-(The paper compresses with LZ4; LZ4 is unavailable offline so we use
-zlib level 1 — same interface, same asymptotics; noted in DESIGN.md.)
+Caches whole per-query result frames.  Storage is delegated to a
+pluggable ``CacheBackend`` (``backends.py``); the default ``"dbm"``
+matches the paper: a ``dbm`` database whose keys are SHA256 hashes of
+the pickled key tuple and whose values are compressed pickles of the
+value frame.  (The paper compresses with LZ4; LZ4 is unavailable
+offline so we use zlib level 1 — same interface, same asymptotics;
+noted in DESIGN.md.)
+
+Misses are re-checked and computed inside the backend's exclusive lock,
+so concurrent shards/processes sharing one cache directory retrieve
+each query exactly once.
 """
 from __future__ import annotations
 
-import dbm
 import hashlib
-import os
 import pickle
 import zlib
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
 from ..core.frame import ColFrame
-from .base import CacheMissError, CacheTransformer, pickle_key
+from .backends import CacheBackend, open_backend
+from .base import CacheTransformer, pickle_key
 
 __all__ = ["RetrieverCache"]
 
@@ -26,19 +31,24 @@ __all__ = ["RetrieverCache"]
 class RetrieverCache(CacheTransformer):
     """Caches the full result frame per input row (keyed ⟨qid,query⟩)."""
 
+    default_backend = "dbm"
+
     def __init__(self, path: Optional[str] = None, retriever: Any = None,
                  *, key: Any = ("qid", "query"),
-                 verify_fraction: float = 0.0):
+                 verify_fraction: float = 0.0,
+                 backend: Any = None):
         super().__init__(path, retriever, verify_fraction=verify_fraction)
         self.key_cols: Tuple[str, ...] = \
             (key,) if isinstance(key, str) else tuple(key)
-        self._db = dbm.open(os.path.join(self.path, "retriever.db"), "c")
+        self._backend: CacheBackend = open_backend(
+            backend, self.path, default=self.default_backend)
+
+    @property
+    def backend(self) -> CacheBackend:
+        return self._backend
 
     def _close_backend(self):
-        try:
-            self._db.close()
-        except Exception:
-            pass
+        self._backend.close()
 
     # -- encoding ----------------------------------------------------------
     @staticmethod
@@ -55,7 +65,7 @@ class RetrieverCache(CacheTransformer):
         return pickle.loads(zlib.decompress(blob))
 
     def __len__(self) -> int:
-        return len(self._db.keys())
+        return len(self._backend)
 
     # -- transform ----------------------------------------------------------
     def transform(self, inp: ColFrame) -> ColFrame:
@@ -63,32 +73,49 @@ class RetrieverCache(CacheTransformer):
             return inp
         key_tuples = inp.key_tuples(list(self.key_cols))
         hashes = [self._hash_key(k) for k in key_tuples]
-        results: List[Optional[List[dict]]] = []
-        miss_idx: List[int] = []
-        for i, h in enumerate(hashes):
-            blob = self._db.get(h)
-            if blob is None:
-                results.append(None)
-                miss_idx.append(i)
-            else:
-                results.append(self._decode_frame(blob))
-        self.stats.hits += len(hashes) - len(miss_idx)
-        self.stats.misses += len(miss_idx)
+        blobs = self._backend.get_many(hashes)
+        results: List[Optional[List[dict]]] = \
+            [self._decode_frame(b) if b is not None else None for b in blobs]
+        miss_idx = [i for i, b in enumerate(blobs) if b is None]
 
         if miss_idx:
-            t = self._require_transformer(len(miss_idx))
-            sub = inp.take(np.asarray(miss_idx, dtype=np.int64))
-            out = t(sub)
-            groups = out.group_indices(list(self.key_cols)) if len(out) else {}
-            for i in miss_idx:
-                k = key_tuples[i]
-                idxs = groups.get(k)
-                rows = out.take(idxs).to_dicts() if idxs is not None else []
-                self._db[hashes[i]] = self._encode_frame(rows)
-                results[i] = rows
-            self.stats.inserts += len(miss_idx)
+            miss_idx = self._fill_misses(inp, key_tuples, hashes, results,
+                                         miss_idx)
+        self.stats.add(hits=len(hashes) - len(miss_idx),
+                       misses=len(miss_idx))
 
         all_rows: List[dict] = []
         for rows in results:
             all_rows.extend(rows or [])
         return ColFrame.from_dicts(all_rows)
+
+    def _fill_misses(self, inp: ColFrame, key_tuples: List[Tuple],
+                     hashes: List[bytes],
+                     results: List[Optional[List[dict]]],
+                     miss_idx: List[int]) -> List[int]:
+        """Compute-once miss handling under the backend lock (see
+        ``KeyValueCache._fill_misses``)."""
+        with self._backend.lock():
+            recheck = self._backend.get_many([hashes[i] for i in miss_idx])
+            still = []
+            for i, blob in zip(miss_idx, recheck):
+                if blob is None:
+                    still.append(i)
+                else:
+                    results[i] = self._decode_frame(blob)
+            if not still:
+                return []
+            t = self._require_transformer(len(still))
+            sub = inp.take(np.asarray(still, dtype=np.int64))
+            out = t(sub)
+            groups = out.group_indices(list(self.key_cols)) if len(out) else {}
+            items = []
+            for i in still:
+                k = key_tuples[i]
+                idxs = groups.get(k)
+                rows = out.take(idxs).to_dicts() if idxs is not None else []
+                items.append((hashes[i], self._encode_frame(rows)))
+                results[i] = rows
+            self._backend.put_many(items)
+            self.stats.add(inserts=len(still))
+            return still

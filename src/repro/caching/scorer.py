@@ -13,7 +13,7 @@ carry ``cacheable=False`` and ``auto_cache`` refuses to wrap them.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional
 
 import numpy as np
 
@@ -29,9 +29,9 @@ class ScorerCache(KeyValueCache):
 
     def __init__(self, path: Optional[str] = None, transformer: Any = None,
                  *, key: Any = ("query", "docno"), value: Any = ("score",),
-                 verify_fraction: float = 0.0):
+                 verify_fraction: float = 0.0, backend: Any = None):
         super().__init__(path, transformer, key=key, value=value,
-                         verify_fraction=verify_fraction)
+                         verify_fraction=verify_fraction, backend=backend)
 
     def transform(self, inp: ColFrame) -> ColFrame:
         if len(inp) == 0:

@@ -153,6 +153,9 @@ def Experiment(
     precompute_prefix: bool = False,
     precompute_mode: str = "lcp",          # "lcp" (§3) | "trie" | "plan"
     cache_dir: Optional[str] = None,       # plan mode: auto-insert caches
+    cache_backend: Optional[str] = None,   # plan mode: backend registry name
+    n_shards: Optional[int] = None,        # plan mode: concurrent executor
+    max_workers: Optional[int] = None,
     baseline: Optional[int] = None,
     correction: str = "holm",
     batch_size: Optional[int] = None,
@@ -170,8 +173,11 @@ def Experiment(
     the paper-§3 accounting, ``"trie"`` maximal prefix sharing, and
     ``"plan"`` the full execution planner (``core/plan.py``) — which
     additionally shares through binary operator nodes and, given a
-    ``cache_dir``, auto-inserts the §4 explicit caches per DAG node.
-    All three execute through the planner; results are identical.
+    ``cache_dir``, auto-inserts the §4 explicit caches per DAG node
+    (``cache_backend`` selects their storage backend).  In plan mode
+    ``n_shards`` / ``max_workers`` enable the concurrent sharded
+    executor.  All three execute through the planner; results are
+    identical.
     """
     topics = ColFrame.coerce(topics)
     qrels = ColFrame.coerce(qrels)
@@ -190,13 +196,21 @@ def Experiment(
     if precompute_prefix and len(systems) > 1:
         if precompute_mode == "plan":
             from .plan import ExecutionPlan
-            with ExecutionPlan(systems, cache_dir=cache_dir) as plan:
-                outs, stats = plan.run(topics, batch_size=batch_size)
+            with ExecutionPlan(systems, cache_dir=cache_dir,
+                               cache_backend=cache_backend) as plan:
+                outs, stats = plan.run(topics, batch_size=batch_size,
+                                       n_shards=n_shards,
+                                       max_workers=max_workers)
         elif precompute_mode == "trie":
-            outs, stats = run_with_trie(systems, topics, batch_size=batch_size)
+            outs, stats = run_with_trie(systems, topics,
+                                        batch_size=batch_size,
+                                        n_shards=n_shards,
+                                        max_workers=max_workers)
         elif precompute_mode == "lcp":
             outs, stats = run_with_precompute(systems, topics,
-                                              batch_size=batch_size)
+                                              batch_size=batch_size,
+                                              n_shards=n_shards,
+                                              max_workers=max_workers)
         else:
             raise ValueError(f"unknown precompute_mode {precompute_mode!r}; "
                              f"expected 'lcp', 'trie' or 'plan'")

@@ -172,6 +172,13 @@ class Transformer:
     cacheable: bool = True
     #: one-to-many stages (retrievers) need RetrieverCache not KeyValueCache
     one_to_many: bool = False
+    #: row-local per qid: output for a qid group depends only on that
+    #: group's rows.  Stages computing cross-query statistics (global
+    #: score normalization, corpus-level IDF updates, ...) must declare
+    #: ``shardable=False`` — the concurrent executor then refuses to
+    #: partition the query frame (``core/plan.py``), like ``batch_size``
+    #: callers must refuse to batch them.
+    shardable: bool = True
 
     # -- execution -----------------------------------------------------
     def transform(self, inp: ColFrame) -> ColFrame:
@@ -447,7 +454,7 @@ class GenericTransformer(Transformer):
 
     def __init__(self, fn, name: str, *, key_columns=(), value_columns=(),
                  one_to_many=False, cacheable=True, deterministic=True,
-                 params: Tuple = ()):
+                 shardable=True, params: Tuple = ()):
         self.fn = fn
         self.name = name
         self.params = tuple(params)
@@ -456,6 +463,7 @@ class GenericTransformer(Transformer):
         self.one_to_many = one_to_many
         self.cacheable = cacheable
         self.deterministic = deterministic
+        self.shardable = shardable
 
     def transform(self, inp: ColFrame) -> ColFrame:
         return ColFrame.coerce(self.fn(inp))

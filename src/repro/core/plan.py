@@ -6,8 +6,8 @@ prefix trie for the §6 ablation limitation) and *explicit* operation
 caches applied by hand (§4).  ``ExecutionPlan`` unifies both behind a
 single abstraction, following the "Trie-based Experiment Plans"
 follow-up (PAPERS.md): a set of pipelines is **lowered** into one DAG
-whose nodes are deduplicated by structural signature, then executed in
-dependency order with each node run exactly once.
+whose nodes are deduplicated by structural signature, then executed
+with each node run exactly once.
 
 Improvements over the stage-list trie of ``precompute.py``:
 
@@ -22,10 +22,24 @@ Improvements over the stage-list trie of ``precompute.py``:
   ``auto_cache`` metadata gets the matching explicit cache family
   (KeyValueCache / ScorerCache / RetrieverCache) wrapped around it by
   the planner — researchers no longer hand-wrap stages (§4's usability
-  caveat).  A custom ``memo_factory`` makes the policy pluggable.
+  caveat).  ``cache_backend`` selects the storage backend
+  (``caching/backends.py``); a custom ``memo_factory`` makes the whole
+  policy pluggable.
+* **Concurrent sharded execution**: once sharing is explicit in a plan,
+  the plan is also the natural unit of parallel scheduling (the
+  trie-based-plans observation).  ``run(..., n_shards=S,
+  max_workers=W)`` partitions the query frame into ``S`` qid-aligned
+  shards and executes the DAG in topological wavefronts on a thread
+  pool: independent branches (both sides of a ``combine``, sibling
+  rerankers over one retrieval) and independent shards run
+  concurrently; per-shard outputs merge back in shard order, so results
+  match sequential execution row-set-for-row-set with identical
+  scores/ranks (the cache-transparency invariant, property-tested in
+  ``tests/test_plan.py``).
 * **Plan-level accounting**: ``PlanStats`` extends ``PrecomputeStats``
-  with planned/executed node counts, cache hit/miss totals and
-  per-node wall times, surfaced through ``Experiment`` results and
+  with planned/executed node counts, cache hit/miss totals, per-node
+  wall times and — under concurrency — per-shard wall times and
+  scheduler occupancy, surfaced through ``Experiment`` results and
   ``benchmarks/plan_bench.py``.
 
 ``run_with_precompute``, ``run_with_trie`` and ``Experiment`` are thin
@@ -35,9 +49,14 @@ from __future__ import annotations
 
 import hashlib
 import os
+import threading
 import time
+from collections import deque
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
+
+import numpy as np
 
 from .frame import ColFrame
 from .pipeline import (Compose, ScalarProduct, Transformer, _Binary,
@@ -55,14 +74,24 @@ class PlanStats(PrecomputeStats):
     cache_misses: int = 0
     node_times_s: Dict[str, float] = field(default_factory=dict)
     wall_time_s: float = 0.0
+    # -- concurrent executor -------------------------------------------------
+    n_shards: int = 1                    # query-frame partitions executed
+    n_workers: int = 1                   # thread-pool size
+    shard_times_s: List[float] = field(default_factory=list)
+    occupancy: float = 0.0               # busy-time / (workers × wall)
+    speedup_vs_sequential: Optional[float] = None  # filled by benchmarks
 
     def __str__(self) -> str:
+        extra = ""
+        if self.n_shards > 1 or self.n_workers > 1:
+            extra = (f" shards={self.n_shards} workers={self.n_workers} "
+                     f"occupancy={self.occupancy:.2f}")
         return (f"PlanStats(planned={self.nodes_planned} "
                 f"executed={self.nodes_executed} "
                 f"naive={self.nodes_total} "
                 f"saved={self.stage_invocations_saved} "
                 f"cache_hits={self.cache_hits} "
-                f"wall={self.wall_time_s:.3f}s)")
+                f"wall={self.wall_time_s:.3f}s{extra})")
 
 
 @dataclass
@@ -88,6 +117,54 @@ def plan_size(expr: Transformer) -> int:
     return 1
 
 
+def _qid_runs_unique(qids: np.ndarray) -> bool:
+    """True when every qid forms one contiguous run — the property that
+    makes cutting at run boundaries preserve per-qid semantics."""
+    n = len(qids)
+    if n == 0:
+        return True
+    arr = qids
+    if arr.dtype == object or arr.dtype.kind in ("U", "S"):
+        arr = arr.astype(str)
+    change = np.empty(n, dtype=bool)
+    change[0] = True
+    change[1:] = arr[1:] != arr[:-1]
+    return int(change.sum()) == len(np.unique(arr))
+
+
+def _shard_bounds(frame: ColFrame, n_shards: int) -> List[Tuple[int, int]]:
+    """Partition ``frame`` into ≤ ``n_shards`` contiguous row ranges,
+    cutting only at qid-run boundaries so no query straddles a shard."""
+    n = len(frame)
+    if n == 0 or n_shards <= 1:
+        return [(0, n)]
+    if "qid" in frame:
+        q = frame["qid"]
+        arr = q.astype(str) if q.dtype == object or q.dtype.kind in ("U", "S") \
+            else q
+        cuts = np.nonzero(arr[1:] != arr[:-1])[0] + 1
+    else:
+        cuts = np.arange(1, n)
+    sel: List[int] = []
+    prev = 0
+    for i in range(1, n_shards):
+        target = round(i * n / n_shards)
+        j = int(np.searchsorted(cuts, max(target, prev + 1)))
+        cands = []
+        if j < len(cuts):
+            cands.append(int(cuts[j]))
+        if j > 0 and int(cuts[j - 1]) > prev:
+            cands.append(int(cuts[j - 1]))
+        if not cands:
+            continue
+        c = min(cands, key=lambda x: abs(x - target))
+        if prev < c < n:
+            sel.append(c)
+            prev = c
+    bounds = [0] + sel + [n]
+    return list(zip(bounds[:-1], bounds[1:]))
+
+
 class ExecutionPlan:
     """Lower a pipeline set into a shared DAG and execute it.
 
@@ -100,25 +177,38 @@ class ExecutionPlan:
         node gets an explicit cache (selected by ``auto_cache`` from the
         node's metadata) rooted under this directory, so repeated runs —
         or overlapping plans pointed at the same directory — hit.
+    cache_backend:
+        Storage backend for planner-inserted caches, by registry name
+        (``"memory"`` / ``"pickle"`` / ``"dbm"`` / ``"sqlite"`` — see
+        ``caching/backends.py``).  ``None`` keeps each cache family's
+        default.  ``cache_backend="memory"`` alone (no ``cache_dir``)
+        enables purely in-process memoization.
     memo_factory:
-        Pluggable cache policy ``(transformer, path) -> wrapper | None``.
-        Defaults to ``repro.caching.auto.auto_cache`` with uncacheable
-        stages (per §5, e.g. DuoT5-style scorers) left bare.
+        Pluggable cache policy ``(transformer, path, **kw) -> wrapper |
+        None``.  Defaults to ``repro.caching.auto.auto_cache_or_none``
+        with uncacheable stages (per §5, e.g. DuoT5-style scorers) left
+        bare.
     """
 
     def __init__(self, pipelines: Sequence[Transformer], *,
                  cache_dir: Optional[str] = None,
+                 cache_backend: Optional[str] = None,
                  memo_factory: Optional[Callable[..., Any]] = None):
         self.pipelines: List[Transformer] = list(pipelines)
         self.cache_dir = cache_dir
+        self.cache_backend = cache_backend
         self._memo_factory = memo_factory
         self.source = PlanNode(key=("source",), kind="source", stage=None)
         self.nodes: Dict[Tuple, PlanNode] = {self.source.key: self.source}
         self.terminals: List[PlanNode] = [
             self._lower(p, self.source) for p in self.pipelines]
         self.nodes_total_naive = sum(plan_size(p) for p in self.pipelines)
+        self._all_shardable = all(
+            getattr(n.stage, "shardable", True)
+            for n in self.nodes.values() if n.kind == "stage")
         self._label_nodes()
-        if cache_dir is not None or memo_factory is not None:
+        if (cache_dir is not None or memo_factory is not None
+                or cache_backend is not None):
             self._insert_memos()
         self.stats: Optional[PlanStats] = None   # last run
 
@@ -170,6 +260,9 @@ class ExecutionPlan:
         if factory is None:
             from ..caching.auto import auto_cache_or_none
             factory = auto_cache_or_none
+        kwargs: Dict[str, Any] = {}
+        if self.cache_backend is not None:
+            kwargs["backend"] = self.cache_backend
         for node in self.nodes.values():
             if node.kind != "stage":
                 continue
@@ -182,7 +275,7 @@ class ExecutionPlan:
                     repr(node.key).encode()).hexdigest()[:16]
                 path = os.path.join(
                     self.cache_dir, pipeline_hash(node.stage) + "-" + digest)
-            node.cache = factory(node.stage, path)
+            node.cache = factory(node.stage, path, **kwargs)
 
     def close(self) -> None:
         """Close planner-inserted caches (flushes temporary stores)."""
@@ -202,23 +295,94 @@ class ExecutionPlan:
         return len(self.nodes) - 1       # exclude the source
 
     # -- execution ---------------------------------------------------------
-    def run(self, queries: Any, *, batch_size: Optional[int] = None
+    def run(self, queries: Any, *, batch_size: Optional[int] = None,
+            n_shards: Optional[int] = None,
+            max_workers: Optional[int] = None,
             ) -> Tuple[List[ColFrame], PlanStats]:
         """Execute the DAG once over ``queries``.
 
-        Every node runs at most once; results are identical to naive
-        per-pipeline execution (the cache-transparency invariant,
+        Every node runs at most once per shard; results are identical to
+        naive per-pipeline execution (the cache-transparency invariant,
         asserted in tests/test_plan.py).
+
+        ``n_shards`` / ``max_workers`` enable the concurrent executor:
+        the query frame is partitioned into qid-aligned shards and
+        (node, shard) tasks are scheduled in topological wavefronts on a
+        thread pool.  With ``max_workers > 1`` and ``n_shards`` unset,
+        the shard count defaults to ``ceil(len(queries)/batch_size)``
+        when ``batch_size`` is given, else to ``max_workers``.  The
+        default (both unset) is the sequential executor.
+
+        Sharding assumes stages are row-local per qid (a qid group's
+        output depends only on that group's rows) — the same contract
+        ``batch_size`` already imposes.  Stages computing cross-query
+        statistics must declare ``shardable=False``; the executor then
+        falls back to one shard (branch parallelism still applies).
         """
         t0 = time.perf_counter()
-        cache_base = self._cache_counters()
-        results: Dict[Tuple, ColFrame] = {
-            self.source.key: ColFrame.coerce(queries)}
-        stats = PlanStats(
+        frame = ColFrame.coerce(queries)
+        shards = self._resolve_n_shards(frame, batch_size, n_shards,
+                                        max_workers)
+        if max_workers is not None:
+            workers = max(1, int(max_workers))
+        else:
+            workers = min(32, shards) if shards > 1 else 1
+        if shards <= 1 and workers <= 1:
+            return self._run_sequential(frame, batch_size, t0)
+        return self._run_concurrent(frame, batch_size, shards, workers, t0)
+
+    def _new_stats(self) -> PlanStats:
+        return PlanStats(
             prefix_len=len(longest_common_prefix(self.pipelines)),
             n_pipelines=len(self.pipelines),
             nodes_total=self.nodes_total_naive,
             nodes_planned=self.n_nodes())
+
+    def _resolve_n_shards(self, frame: ColFrame,
+                          batch_size: Optional[int],
+                          n_shards: Optional[int],
+                          max_workers: Optional[int]) -> int:
+        n = len(frame)
+        if n == 0:
+            return 1
+        if n_shards is not None:
+            want = int(n_shards)
+        elif max_workers is not None and int(max_workers) > 1:
+            want = -(-n // int(batch_size)) if batch_size else int(max_workers)
+        else:
+            return 1
+        want = max(1, min(want, n))
+        if want > 1 and not self._all_shardable:
+            # a stage declared shardable=False (cross-query statistics);
+            # partitioning the frame would change its results.  Keep one
+            # shard (branch-level parallelism via max_workers still
+            # applies).
+            return 1
+        if want > 1 and "qid" in frame \
+                and not _qid_runs_unique(frame["qid"]):
+            # a qid with non-contiguous rows cannot be cut without
+            # splitting its group; keep one shard
+            return 1
+        return want
+
+    def _exec_node(self, node: PlanNode, ins: List[ColFrame],
+                   batch_size: Optional[int]) -> ColFrame:
+        if node.kind == "stage":
+            runner = node.cache if node.cache is not None else node.stage
+            if not getattr(node.stage, "shardable", True):
+                # batching partitions the frame exactly like sharding
+                # would — a cross-query stage must see it whole
+                return runner(ins[0])
+            return _run_stage(runner, ins[0], batch_size)
+        if node.kind == "scale":
+            return node.stage.apply(ins[0])
+        return node.stage.combine(ins[0], ins[1])          # combine
+
+    def _run_sequential(self, frame: ColFrame, batch_size: Optional[int],
+                        t0: float) -> Tuple[List[ColFrame], PlanStats]:
+        cache_base = self._cache_counters()
+        results: Dict[Tuple, ColFrame] = {self.source.key: frame}
+        stats = self._new_stats()
 
         def evaluate(node: PlanNode) -> ColFrame:
             memo = results.get(node.key)
@@ -226,13 +390,7 @@ class ExecutionPlan:
                 return memo
             ins = [evaluate(i) for i in node.inputs]
             t1 = time.perf_counter()
-            if node.kind == "stage":
-                runner = node.cache if node.cache is not None else node.stage
-                out = _run_stage(runner, ins[0], batch_size)
-            elif node.kind == "scale":
-                out = node.stage.apply(ins[0])
-            else:                                       # combine
-                out = node.stage.combine(ins[0], ins[1])
+            out = self._exec_node(node, ins, batch_size)
             stats.nodes_executed += 1
             stats.node_times_s[node.label] = \
                 stats.node_times_s.get(node.label, 0.0) + \
@@ -241,6 +399,107 @@ class ExecutionPlan:
             return out
 
         outs = [evaluate(t) for t in self.terminals]
+        self._finalize_stats(stats, cache_base, t0)
+        return outs, stats
+
+    def _run_concurrent(self, frame: ColFrame, batch_size: Optional[int],
+                        n_shards: int, workers: int, t0: float,
+                        ) -> Tuple[List[ColFrame], PlanStats]:
+        """Sharded wavefront execution on a thread pool.
+
+        Each (node, shard) pair is one task; a task becomes ready when
+        its node's inputs have completed *for its shard*, so wavefronts
+        advance independently per shard and independent branches of one
+        shard run in parallel.  Python-level work holds the GIL, but IR
+        stages dominated by I/O, BLAS or accelerator dispatch release
+        it — those are exactly the stages worth sharding.
+        """
+        cache_base = self._cache_counters()
+        stats = self._new_stats()
+        bounds = _shard_bounds(frame, n_shards)
+        n_shards = len(bounds)
+        stats.n_shards = n_shards
+        stats.n_workers = workers
+
+        results: Dict[Tuple[Tuple, int], ColFrame] = {}
+        for s, (lo, hi) in enumerate(bounds):
+            results[(self.source.key, s)] = frame.take(np.arange(lo, hi))
+
+        children: Dict[Tuple, List[PlanNode]] = {}
+        indeg: Dict[Tuple[Tuple, int], int] = {}
+        for node in self.nodes.values():
+            if node.kind == "source":
+                continue
+            for inp in node.inputs:
+                children.setdefault(inp.key, []).append(node)
+            for s in range(n_shards):
+                indeg[(node.key, s)] = len(node.inputs)
+
+        ready: deque = deque()
+
+        def complete(key: Tuple, s: int) -> None:
+            for child in children.get(key, ()):
+                k = (child.key, s)
+                indeg[k] -= 1
+                if indeg[k] == 0:
+                    ready.append((child, s))
+
+        for s in range(n_shards):
+            complete(self.source.key, s)
+
+        records: List[Tuple[str, int, float, float]] = []
+        rec_lock = threading.Lock()
+
+        def exec_task(node: PlanNode, s: int) -> None:
+            ins = [results[(i.key, s)] for i in node.inputs]
+            t1 = time.perf_counter()
+            out = self._exec_node(node, ins, batch_size)
+            t2 = time.perf_counter()
+            results[(node.key, s)] = out
+            with rec_lock:
+                records.append((node.label, s, t1, t2))
+
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            futures: Dict[Any, Tuple[PlanNode, int]] = {}
+
+            def submit_ready() -> None:
+                while ready:
+                    node, s = ready.popleft()
+                    fut = pool.submit(exec_task, node, s)
+                    futures[fut] = (node, s)
+
+            submit_ready()
+            while futures:
+                done, _ = wait(set(futures), return_when=FIRST_COMPLETED)
+                for fut in done:
+                    node, s = futures.pop(fut)
+                    fut.result()                 # propagate task errors
+                    complete(node.key, s)
+                submit_ready()
+
+        outs = [ColFrame.concat([results[(t.key, s)]
+                                 for s in range(n_shards)])
+                for t in self.terminals]
+
+        executed = set()
+        for label, s, a, b in records:
+            executed.add(label)
+            stats.node_times_s[label] = \
+                stats.node_times_s.get(label, 0.0) + (b - a)
+        stats.nodes_executed = len(executed)
+        for s in range(n_shards):
+            spans = [(a, b) for _, sh, a, b in records if sh == s]
+            stats.shard_times_s.append(
+                max(b for _, b in spans) - min(a for a, _ in spans)
+                if spans else 0.0)
+        busy = sum(b - a for _, _, a, b in records)
+        self._finalize_stats(stats, cache_base, t0)
+        stats.occupancy = busy / (workers * stats.wall_time_s) \
+            if stats.wall_time_s > 0 else 0.0
+        return outs, stats
+
+    def _finalize_stats(self, stats: PlanStats,
+                        cache_base: Tuple[int, int], t0: float) -> None:
         stats.stage_invocations_saved = \
             stats.nodes_total - stats.nodes_executed
         hits, misses = self._cache_counters()
@@ -248,7 +507,6 @@ class ExecutionPlan:
         stats.cache_misses = misses - cache_base[1]
         stats.wall_time_s = time.perf_counter() - t0
         self.stats = stats
-        return outs, stats
 
     def _cache_counters(self) -> Tuple[int, int]:
         hits = misses = 0

@@ -83,6 +83,8 @@ def run_with_precompute(
         queries: ColFrame,
         *,
         batch_size: Optional[int] = None,
+        n_shards: Optional[int] = None,
+        max_workers: Optional[int] = None,
 ) -> Tuple[List[ColFrame], PrecomputeStats]:
     """Execute pipelines over `queries` sharing the LCP exactly once.
 
@@ -99,7 +101,8 @@ def run_with_precompute(
 
     prefix = longest_common_prefix(pipelines)
     outs, plan_stats = ExecutionPlan(pipelines).run(
-        queries, batch_size=batch_size)
+        queries, batch_size=batch_size, n_shards=n_shards,
+        max_workers=max_workers)
     stats = PrecomputeStats(
         prefix_len=len(prefix), n_pipelines=len(pipelines),
         stage_invocations_saved=max(0, (len(pipelines) - 1)) * len(prefix),
@@ -198,10 +201,14 @@ class PrefixTrie:
 
 def run_with_trie(pipelines: Sequence[Transformer], queries: ColFrame,
                   *, batch_size: Optional[int] = None,
+                  n_shards: Optional[int] = None,
+                  max_workers: Optional[int] = None,
                   ) -> Tuple[List[ColFrame], PrecomputeStats]:
     """Maximal-coverage sharing — thin wrapper over ``plan.ExecutionPlan``,
     which subsumes the trie (and additionally shares through binary
     operator nodes; ``PrefixTrie`` is kept for structural analysis)."""
     from .plan import ExecutionPlan
 
-    return ExecutionPlan(pipelines).run(queries, batch_size=batch_size)
+    return ExecutionPlan(pipelines).run(queries, batch_size=batch_size,
+                                        n_shards=n_shards,
+                                        max_workers=max_workers)

@@ -1,0 +1,362 @@
+"""Pluggable cache backends (caching/backends.py): protocol conformance,
+persistence, file-locked atomic writes, compute-once under concurrency,
+and CacheTransformer lifecycle (close idempotency, __del__ guard)."""
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.caching import (BACKENDS, KeyValueCache, MemoryLRUBackend,
+                           RetrieverCache, ScorerCache, atomic_write_bytes,
+                           auto_cache, open_backend)
+from repro.core import ColFrame, GenericTransformer, add_ranks
+
+DISK_BACKENDS = ["pickle", "dbm", "sqlite"]
+ALL_BACKENDS = ["memory"] + DISK_BACKENDS
+
+
+# -- protocol conformance ----------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_backend_roundtrip_and_len(name, tmp_path):
+    b = open_backend(name, str(tmp_path))
+    assert len(b) == 0
+    b.put_many([(b"k1", b"v1"), (b"k2", b"v2")])
+    assert b.get_many([b"k1", b"missing", b"k2"]) == [b"v1", None, b"v2"]
+    assert b.get(b"k1") == b"v1" and b.get(b"nope") is None
+    assert len(b) == 2
+    b.put(b"k1", b"v1b")                 # overwrite, not a new entry
+    assert b.get(b"k1") == b"v1b"
+    assert len(b) == 2
+    b.close()
+    b.close()                            # idempotent
+
+
+@pytest.mark.parametrize("name", DISK_BACKENDS)
+def test_backend_persists_across_instances(name, tmp_path):
+    b = open_backend(name, str(tmp_path))
+    b.put(b"key", b"value")
+    b.close()
+    b2 = open_backend(name, str(tmp_path))
+    assert b2.persistent
+    assert b2.get(b"key") == b"value"
+    b2.close()
+
+
+def test_memory_backend_lru_eviction():
+    b = MemoryLRUBackend(capacity=2)
+    b.put(b"a", b"1")
+    b.put(b"b", b"2")
+    assert b.get(b"a") == b"1"           # refresh a
+    b.put(b"c", b"3")                    # evicts b (least recent)
+    assert b.get(b"b") is None
+    assert b.get(b"a") == b"1" and b.get(b"c") == b"3"
+    assert len(b) == 2
+
+
+def test_open_backend_rejects_unknown(tmp_path):
+    with pytest.raises(ValueError, match="unknown cache backend"):
+        open_backend("redis", str(tmp_path))
+    inst = MemoryLRUBackend()
+    assert open_backend(inst, None) is inst          # instances pass through
+    assert set(BACKENDS) == {"memory", "pickle", "dbm", "sqlite"}
+
+
+def test_atomic_write_bytes(tmp_path):
+    p = str(tmp_path / "blob.bin")
+    atomic_write_bytes(p, b"one")
+    atomic_write_bytes(p, b"two")
+    with open(p, "rb") as f:
+        assert f.read() == b"two"
+    # no temp litter left behind
+    assert [f for f in os.listdir(tmp_path) if f.startswith(".tmp-")] == []
+
+
+def test_legacy_store_filenames_stay_warm(tmp_path):
+    """Directories written by the pre-backend cache families
+    (kv.sqlite3 / retriever.db) must be picked up, not recomputed."""
+    import sqlite3
+    legacy_sql = tmp_path / "sql"
+    legacy_sql.mkdir()
+    db = sqlite3.connect(str(legacy_sql / "kv.sqlite3"))
+    db.executescript("CREATE TABLE IF NOT EXISTS kv ("
+                     "key BLOB PRIMARY KEY, value BLOB NOT NULL"
+                     ") WITHOUT ROWID;")
+    db.execute("INSERT INTO kv VALUES (?, ?)", (b"k", b"v"))
+    db.commit()
+    db.close()
+    b = open_backend("sqlite", str(legacy_sql))
+    assert b.get(b"k") == b"v"
+    b.close()
+
+    import dbm
+    legacy_dbm = tmp_path / "dbm"
+    legacy_dbm.mkdir()
+    d = dbm.open(str(legacy_dbm / "retriever.db"), "c")
+    d[b"k"] = b"v"
+    d.close()
+    b2 = open_backend("dbm", str(legacy_dbm))
+    assert b2.get(b"k") == b"v"
+    b2.close()
+
+
+def test_filelock_failed_acquire_does_not_deadlock(tmp_path):
+    """If taking the inter-process lock fails, the in-process lock must
+    be rolled back so other threads see the error, not a hang."""
+    from repro.caching import FileLock
+    missing_dir = str(tmp_path / "nope" / ".lock")   # os.open -> ENOENT
+    lk = FileLock(missing_dir)
+    with pytest.raises(OSError):
+        lk.acquire()
+    acquired = []
+
+    def try_lock():
+        real = FileLock(str(tmp_path / ".lock"))
+        lk._tlock.acquire(timeout=5) and lk._tlock.release()
+        acquired.append(True)
+        real.acquire()
+        real.release()
+
+    t = threading.Thread(target=try_lock)
+    t.start()
+    t.join(timeout=10)
+    assert acquired, "thread lock leaked by failed FileLock.acquire"
+    assert not lk.held()
+
+
+def test_dbm_reads_concurrent_under_shared_flock(tmp_path):
+    """Two threads reading a dbm backend proceed without exclusive
+    serialization, and reads inside lock() (compute-once recheck) do
+    not deadlock against the held exclusive lock."""
+    b = open_backend("dbm", str(tmp_path))
+    b.put_many([(f"k{i}".encode(), f"v{i}".encode()) for i in range(4)])
+    with b.lock():                       # recheck path: read while held
+        assert b.get(b"k1") == b"v1"
+    results = []
+
+    def reader():
+        results.append(b.get_many([b"k0", b"k3"]))
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+    assert results == [[b"v0", b"v3"]] * 2
+    b.close()
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_backend_lock_reentrant(name, tmp_path):
+    b = open_backend(name, str(tmp_path))
+    with b.lock():
+        with b.lock():                   # re-entrant for nested miss paths
+            b.put(b"k", b"v")
+    assert b.get(b"k") == b"v"
+    b.close()
+
+
+# -- cache families over each backend ----------------------------------------
+
+def _expander():
+    return GenericTransformer(
+        lambda inp: inp.assign(query=np.array(
+            [q + "!" for q in inp["query"].tolist()], dtype=object)),
+        "expander", key_columns=("qid", "query"), value_columns=("query",))
+
+
+TOPICS = ColFrame({"qid": [f"q{i}" for i in range(8)],
+                   "query": [f"terms {i}" for i in range(8)]})
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_kv_cache_over_backend(name, tmp_path):
+    with KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend=name) as kv:
+        cold = kv(TOPICS)
+        assert kv.stats.misses == len(TOPICS)
+        hot = kv(TOPICS)
+        assert kv.stats.hits == len(TOPICS)
+        direct = _expander()(TOPICS)
+        assert cold.equals(direct) and hot.equals(direct)
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_retriever_cache_over_backend(name, tmp_path):
+    def retr_fn(inp):
+        rows = [{"qid": q, "query": t, "docno": f"d{i}", "score": 9.0 - i}
+                for q, t in zip(inp["qid"].tolist(), inp["query"].tolist())
+                for i in range(4)]
+        return add_ranks(ColFrame.from_dicts(rows))
+    retr = GenericTransformer(retr_fn, "retr", one_to_many=True,
+                              key_columns=("qid", "query"))
+    with RetrieverCache(str(tmp_path), retr, backend=name) as rc:
+        cold = rc(TOPICS)
+        hot = rc(TOPICS)
+        assert rc.stats.hits == len(TOPICS)
+        direct = retr(TOPICS)
+        cols = ["qid", "docno", "score", "rank"]
+        assert cold.equals(direct, cols=cols)
+        assert hot.equals(direct, cols=cols)
+
+
+def test_auto_cache_backend_selector(tmp_path):
+    c = auto_cache(_expander(), str(tmp_path), backend="pickle")
+    assert isinstance(c, KeyValueCache)
+    assert c.backend.name == "pickle"
+    c.close()
+    s = auto_cache(GenericTransformer(lambda x: x, "scorer",
+                                      key_columns=("query", "docno"),
+                                      value_columns=("score",)),
+                   backend="memory")
+    assert isinstance(s, ScorerCache)
+    assert s.backend.name == "memory"
+    s.close()
+
+
+# -- compute-once under concurrent threads -----------------------------------
+
+class CountingExpander(GenericTransformer):
+    """Row-wise transformer that counts computed rows thread-safely."""
+
+    def __init__(self):
+        self.computed = []
+        self._lock = threading.Lock()
+
+        def fn(inp):
+            with self._lock:
+                self.computed.extend(inp["qid"].tolist())
+            return inp.assign(query=np.array(
+                [q + "!" for q in inp["query"].tolist()], dtype=object))
+        super().__init__(fn, "counting_expander",
+                         key_columns=("qid", "query"),
+                         value_columns=("query",))
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_two_threads_share_cache_compute_exactly_once(name, tmp_path):
+    """Two threads race the same key set through one cache directory —
+    the locked recheck-then-compute miss path must compute each entry
+    exactly once, whichever thread wins the lock."""
+    counter = CountingExpander()
+    if name == "memory":
+        # memory backends do not share state across instances; share one
+        shared = open_backend("memory", None)
+        caches = [KeyValueCache(None, counter, key=("qid", "query"),
+                                value=("query",), backend=shared)
+                  for _ in range(2)]
+    else:
+        caches = [KeyValueCache(str(tmp_path), counter,
+                                key=("qid", "query"), value=("query",),
+                                backend=name)
+                  for _ in range(2)]
+    outs = [None, None]
+    errs = []
+
+    def worker(i):
+        try:
+            outs[i] = caches[i](TOPICS)
+        except Exception as e:                       # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert sorted(counter.computed) == sorted(TOPICS["qid"].tolist()), \
+        f"{name}: entries recomputed — computed {len(counter.computed)} " \
+        f"rows for {len(TOPICS)} unique keys"
+    direct = _expander()(TOPICS)
+    for out in outs:
+        assert out is not None and out.equals(direct)
+    for c in caches:
+        c.close()
+
+
+# -- compute-once across processes (shared cache dir) -------------------------
+
+_PROC_SCRIPT = """
+import sys
+import numpy as np
+from repro.caching import KeyValueCache
+from repro.core import ColFrame, GenericTransformer
+
+cache_dir, backend, log_path = sys.argv[1:4]
+
+def fn(inp):
+    with open(log_path, "a") as f:           # O_APPEND: atomic small writes
+        for q in inp["qid"].tolist():
+            f.write(q + "\\n")
+    return inp.assign(query=np.array(
+        [q + "!" for q in inp["query"].tolist()], dtype=object))
+
+t = GenericTransformer(fn, "counting_expander",
+                       key_columns=("qid", "query"),
+                       value_columns=("query",))
+topics = ColFrame({"qid": [f"q{i}" for i in range(8)],
+                   "query": [f"terms {i}" for i in range(8)]})
+with KeyValueCache(cache_dir, t, key=("qid", "query"), value=("query",),
+                   backend=backend) as kv:
+    out = kv(topics)
+assert out["query"][0] == "terms 0!"
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", DISK_BACKENDS)
+def test_two_processes_share_cache_dir_compute_exactly_once(name, tmp_path):
+    """Two interpreters pointed at one cache directory, started
+    concurrently: the inter-process file lock serializes the miss path,
+    so every entry is computed exactly once across both."""
+    log = tmp_path / "computed.log"
+    log.touch()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ, "PYTHONPATH": os.path.join(root, "src")}
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _PROC_SCRIPT,
+         str(tmp_path / "cache"), name, str(log)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, env=env)
+        for _ in range(2)]
+    for p in procs:
+        _, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()[-2000:]
+    computed = log.read_text().split()
+    assert sorted(computed) == sorted(f"q{i}" for i in range(8)), \
+        f"{name}: keys computed more than once across processes: {computed}"
+
+
+# -- CacheTransformer lifecycle (close idempotency, __del__ guard) ------------
+
+def test_close_is_idempotent_and_del_safe():
+    kv = KeyValueCache(None, _expander(), key=("qid", "query"),
+                       value=("query",))
+    path = kv.path
+    kv(TOPICS)
+    assert os.path.isdir(path)
+    kv.close()
+    assert not os.path.isdir(path)       # temp dir cleaned up
+    kv.close()                           # second close is a no-op
+    kv.__del__()                         # finalizer after close: no raise
+    assert not os.path.isdir(path)
+
+
+def test_del_closes_unclosed_cache(tmp_path):
+    kv = KeyValueCache(None, _expander(), key=("qid", "query"),
+                       value=("query",), backend="pickle")
+    path = kv.path
+    kv(TOPICS)
+    kv.__del__()                         # acts as close() pre-shutdown
+    assert not os.path.isdir(path)
+
+
+def test_backend_close_idempotent_through_cache(tmp_path):
+    with KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="sqlite") as kv:
+        kv(TOPICS)
+        b = kv.backend
+    b.close()                            # backend already closed by cache

@@ -49,17 +49,17 @@ QUERIES = ColFrame({"qid": ["q1", "q2", "q3"],
 SORT = ["qid", "docno"]
 
 
-def assert_equivalent(pipelines, queries=QUERIES, **plan_kw):
+def assert_equivalent(pipelines, queries=QUERIES, run_kw=None, **plan_kw):
     naive = [p(queries) for p in pipelines]
     with ExecutionPlan(pipelines, **plan_kw) as plan:
-        outs, stats = plan.run(queries)
+        outs, stats = plan.run(queries, **(run_kw or {}))
     assert len(outs) == len(naive)
     for got, want in zip(outs, naive):
         g = got.sort_values(SORT)
         w = want.sort_values(SORT)
         cols = [c for c in ("qid", "docno", "score", "rank")
                 if c in want.columns]
-        assert g.equals(w, cols=cols), \
+        assert g.equals(w, cols=cols, rtol=0, atol=0), \
             f"plan diverged from naive for {pipelines}"
     return stats
 
@@ -262,14 +262,7 @@ def test_experiment_plan_mode(tmp_path):
     assert planned.precompute.nodes_executed < planned.precompute.nodes_total
 
 
-@given(st.lists(st.lists(st.sampled_from("ABCD"), min_size=1, max_size=4),
-                min_size=2, max_size=5),
-       st.lists(st.sampled_from(["+", "**", "^", ">>"]),
-                min_size=0, max_size=3))
-@settings(max_examples=25, deadline=None)
-def test_property_plan_equals_naive(seqs, ops):
-    """Random pipeline sets: chains of rerankers over shared retrievers,
-    optionally merged pairwise by binary operators."""
+def _random_pipes(seqs, ops):
     retrievers = {c: make_retriever(c, base=ord(c) * 1.0) for c in "ABCD"}
     rerank = {c: GenericTransformer(
         lambda inp, _c=c: add_ranks(
@@ -291,4 +284,265 @@ def test_property_plan_equals_naive(seqs, ops):
             pipes.append(l ^ r)
         else:
             pipes.append(l % 3)
-    assert_equivalent(pipes)
+    return pipes
+
+
+@given(st.lists(st.lists(st.sampled_from("ABCD"), min_size=1, max_size=4),
+                min_size=2, max_size=5),
+       st.lists(st.sampled_from(["+", "**", "^", ">>"]),
+                min_size=0, max_size=3))
+@settings(max_examples=25, deadline=None)
+def test_property_plan_equals_naive(seqs, ops):
+    """Random pipeline sets: chains of rerankers over shared retrievers,
+    optionally merged pairwise by binary operators."""
+    assert_equivalent(_random_pipes(seqs, ops))
+
+
+# ---------------------------------------------------------------------------
+# concurrent sharded executor
+# ---------------------------------------------------------------------------
+
+def test_sharded_run_matches_sequential_all_operator_types():
+    a = make_retriever("A")
+    b = make_retriever("B", base=8.0)
+    boost = CountingStage("boost", boost_fn)
+    shift = CountingStage("shift", shift_fn)
+    pipelines = [
+        a, a >> boost, a % 3, a + b, a ** b, a | b, a & a, a ^ b,
+        a * 0.5, (a + b) % 4 >> shift, ((a * 2.0) + (b >> boost)) % 5,
+    ]
+    stats = assert_equivalent(pipelines,
+                              run_kw=dict(n_shards=2, max_workers=4))
+    assert stats.n_shards == 2
+    assert stats.n_workers == 4
+    assert stats.nodes_executed == stats.nodes_planned
+
+
+@given(st.lists(st.lists(st.sampled_from("ABCD"), min_size=1, max_size=4),
+                min_size=2, max_size=4),
+       st.lists(st.sampled_from(["+", "**", "^", ">>"]),
+                min_size=0, max_size=3),
+       st.integers(min_value=2, max_value=4))
+@settings(max_examples=15, deadline=None)
+def test_property_sharded_plan_equals_naive(seqs, ops, n_shards):
+    """The acceptance-criteria property: ``run(..., n_shards>1)`` equals
+    sequential/naive execution on every operator shape."""
+    assert_equivalent(_random_pipes(seqs, ops),
+                      run_kw=dict(n_shards=n_shards, max_workers=4))
+
+
+def test_sharded_stats_carry_shard_times_and_occupancy():
+    a = make_retriever("A")
+    b = make_retriever("B", base=8.0)
+    _, stats = ExecutionPlan([a + b, a % 3]).run(
+        QUERIES, n_shards=3, max_workers=2)
+    assert stats.n_shards == len(stats.shard_times_s) == 3
+    assert all(t >= 0 for t in stats.shard_times_s)
+    assert 0.0 < stats.occupancy <= 1.0
+    assert stats.wall_time_s > 0
+    assert "shards=3" in str(stats)
+
+
+def test_max_workers_alone_enables_branch_parallelism():
+    """Branch-level concurrency without sharding: n_shards defaults to
+    max_workers, and a single-row frame degenerates to one shard."""
+    a = make_retriever("A")
+    b = make_retriever("B", base=8.0)
+    one = ColFrame({"qid": ["q1"], "query": ["alpha"]})
+    naive = (a + b)(one)
+    outs, stats = ExecutionPlan([a + b]).run(one, max_workers=4)
+    assert stats.n_shards == 1 and stats.n_workers == 4
+    assert outs[0].sort_values(SORT).equals(
+        naive.sort_values(SORT), cols=["qid", "docno", "score", "rank"])
+
+
+def test_sharding_keeps_qid_groups_whole():
+    """R-type inputs with several rows per qid: shard cuts only at qid
+    boundaries, so per-qid operators see whole groups."""
+    rows = [{"qid": f"q{i}", "query": f"t{i}", "docno": f"d{j}",
+             "score": float(10 - j)}
+            for i in range(5) for j in range(4)]
+    results = add_ranks(ColFrame.from_dicts(rows))
+    cut = GenericTransformer(
+        lambda inp: inp.mask(inp["rank"] < 2), "cut2")
+    from repro.core import Identity
+    pipelines = [Identity() >> cut]
+    naive = [p(results) for p in pipelines]
+    outs, stats = ExecutionPlan(pipelines).run(
+        results, n_shards=3, max_workers=3)
+    assert stats.n_shards == 3
+    assert outs[0].sort_values(SORT).equals(
+        naive[0].sort_values(SORT), cols=["qid", "docno", "score", "rank"])
+
+
+def test_unshardable_stage_falls_back_to_one_shard():
+    """A stage declaring shardable=False (cross-query statistics) must
+    not see a partitioned frame — results would silently change."""
+    a = make_retriever("A")
+    norm = GenericTransformer(
+        lambda inp: add_ranks(inp.assign(
+            score=inp["score"] - float(inp["score"].max()))),
+        "global_norm", shardable=False)
+    pipelines = [a >> norm]
+    naive = [p(QUERIES) for p in pipelines]
+    outs, stats = ExecutionPlan(pipelines).run(
+        QUERIES, n_shards=3, max_workers=3)
+    assert stats.n_shards == 1
+    assert outs[0].sort_values(SORT).equals(
+        naive[0].sort_values(SORT), cols=["qid", "docno", "score", "rank"],
+        rtol=0, atol=0)
+    # batch_size partitions the frame exactly like sharding would;
+    # an unshardable stage must see it whole there too
+    outs_b, _ = ExecutionPlan(pipelines).run(QUERIES, batch_size=1)
+    assert outs_b[0].sort_values(SORT).equals(
+        naive[0].sort_values(SORT), cols=["qid", "docno", "score", "rank"],
+        rtol=0, atol=0)
+
+
+def test_hand_wrapped_cache_preserves_unshardable(tmp_path):
+    """A CacheTransformer wrapping a shardable=False stage must delegate
+    the declaration — otherwise sharding silently changes results."""
+    from repro.caching import KeyValueCache
+    norm = GenericTransformer(
+        lambda inp: add_ranks(inp.assign(
+            score=inp["score"] - float(inp["score"].max()))),
+        "global_norm", shardable=False,
+        key_columns=("qid", "docno"), value_columns=("score",))
+    cached = KeyValueCache(str(tmp_path), norm,
+                           key=("qid", "docno"), value=("score",))
+    assert cached.shardable is False
+    a = make_retriever("A")
+    pipelines = [a >> cached]
+    naive = [(a >> norm)(QUERIES)]
+    outs, stats = ExecutionPlan(pipelines).run(
+        QUERIES, n_shards=3, max_workers=3)
+    assert stats.n_shards == 1
+    assert outs[0].sort_values(SORT).equals(
+        naive[0].sort_values(SORT), cols=["qid", "docno", "score"],
+        rtol=0, atol=0)
+    cached.close()
+
+
+def test_experiment_forwards_shards_in_lcp_and_trie_modes():
+    a = make_retriever("A")
+    b = make_retriever("B", base=8.0)
+    from repro.core import Experiment
+    qrels = ColFrame({"qid": ["q1"], "docno": ["A_d0"], "label": [1]})
+    base = Experiment([a % 3, a + b], QUERIES, qrels, ["MAP"])
+    for mode in ("lcp", "trie"):
+        res = Experiment([a % 3, a + b], QUERIES, qrels, ["MAP"],
+                         precompute_prefix=True, precompute_mode=mode,
+                         n_shards=3, max_workers=3)
+        if mode == "trie":               # trie returns PlanStats directly
+            assert res.precompute.n_shards == 3
+        for n1, n2 in zip(base.names, res.names):
+            assert base.means[n1]["MAP"] == pytest.approx(
+                res.means[n2]["MAP"])
+
+
+def test_non_contiguous_qids_fall_back_to_one_shard():
+    frame = add_ranks(ColFrame({
+        "qid": ["q1", "q2", "q1"], "query": ["a", "b", "a"],
+        "docno": ["d1", "d1", "d2"], "score": [3.0, 2.0, 1.0]}))
+    boost = CountingStage("boost", boost_fn)
+    from repro.core import Identity
+    outs, stats = ExecutionPlan([Identity() >> boost]).run(
+        frame, n_shards=4, max_workers=2)
+    assert stats.n_shards == 1          # cannot cut without splitting q1
+    naive = boost(frame)
+    assert outs[0].sort_values(SORT).equals(
+        naive.sort_values(SORT), cols=["qid", "docno", "score", "rank"])
+
+
+def test_sharded_run_with_cache_dir_hits_on_second_run(tmp_path):
+    def retr_fn(inp):
+        rows = []
+        for qid, query in zip(inp["qid"].tolist(), inp["query"].tolist()):
+            for i in range(4):
+                rows.append({"qid": qid, "query": query,
+                             "docno": f"d{i}", "score": 9.0 - i})
+        return add_ranks(ColFrame.from_dicts(rows))
+    retr = CountingStage("R", retr_fn,
+                         one_to_many=True, key_columns=("qid", "query"))
+    pipelines = [retr % 3, retr % 2]
+    with ExecutionPlan(pipelines, cache_dir=str(tmp_path),
+                       cache_backend="pickle") as plan:
+        _, s1 = plan.run(QUERIES, n_shards=3, max_workers=3)
+        assert s1.cache_misses == len(QUERIES)
+        outs, s2 = plan.run(QUERIES, n_shards=3, max_workers=3)
+        assert s2.cache_hits == len(QUERIES)
+        assert s2.cache_misses == 0
+    naive = [p(QUERIES) for p in pipelines]
+    for got, want in zip(outs, naive):
+        assert got.sort_values(SORT).equals(
+            want.sort_values(SORT), cols=["qid", "docno", "score", "rank"])
+
+
+def test_plan_cache_backend_memory_without_cache_dir():
+    """cache_backend="memory" alone enables in-process memoization."""
+    def retr_fn(inp):
+        rows = [{"qid": q, "query": t, "docno": "d0", "score": 1.0}
+                for q, t in zip(inp["qid"].tolist(), inp["query"].tolist())]
+        return add_ranks(ColFrame.from_dicts(rows))
+    retr = CountingStage("R", retr_fn,
+                         one_to_many=True, key_columns=("qid", "query"))
+    with ExecutionPlan([retr % 1], cache_backend="memory") as plan:
+        cached = [n for n in plan.nodes.values() if n.cache is not None]
+        assert len(cached) == 1
+        assert cached[0].cache.backend.name == "memory"
+        plan.run(QUERIES)
+        plan.run(QUERIES)
+    assert retr.calls == 1              # second run served from memory
+
+
+_CONCURRENT_PLAN_SCRIPT = """
+import sys
+from repro.core import ColFrame, ExecutionPlan, GenericTransformer, add_ranks
+
+cache_dir, backend, log_path = sys.argv[1:4]
+
+def retr(inp):
+    with open(log_path, "a") as f:            # O_APPEND: atomic small writes
+        for q in inp["qid"].tolist():
+            f.write(q + "\\n")
+    rows = [{"qid": q, "query": t, "docno": f"d{i}", "score": 5.0 - i}
+            for q, t in zip(inp["qid"].tolist(), inp["query"].tolist())
+            for i in range(3)]
+    return add_ranks(ColFrame.from_dicts(rows))
+
+a = GenericTransformer(retr, "A", one_to_many=True,
+                       key_columns=("qid", "query"))
+Q = ColFrame({"qid": [f"q{i}" for i in range(6)],
+              "query": [f"t{i}" for i in range(6)]})
+with ExecutionPlan([a % 2], cache_dir=cache_dir,
+                   cache_backend=backend) as plan:
+    outs, stats = plan.run(Q, n_shards=3, max_workers=3)
+assert len(outs[0]) == 12, len(outs[0])
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["pickle", "dbm", "sqlite"])
+def test_concurrent_processes_share_plan_cache_dir(tmp_path, backend):
+    """Two concurrent interpreters run the same sharded plan against one
+    cache_dir through each backend: the file-locked miss path computes
+    every entry exactly once across both processes *and* all shards."""
+    import os
+    import subprocess
+    import sys
+    log = tmp_path / "computed.log"
+    log.touch()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ, "PYTHONPATH": os.path.join(root, "src")}
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _CONCURRENT_PLAN_SCRIPT,
+         str(tmp_path / "cache"), backend, str(log)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, env=env)
+        for _ in range(2)]
+    for p in procs:
+        _, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()[-2000:]
+    computed = log.read_text().split()
+    assert sorted(computed) == sorted(f"q{i}" for i in range(6)), \
+        f"{backend}: entries computed more than once: {computed}"
+
