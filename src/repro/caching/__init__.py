@@ -1,7 +1,11 @@
 # Explicit caching strategies (paper §4) + TPU adaptations.
 from .backends import (BACKENDS, CacheBackend, DbmBackend, FileLock,
                        MemoryLRUBackend, PickleDirBackend, SQLiteBackend,
-                       atomic_write_bytes, open_backend)
+                       atomic_write_bytes, open_backend,
+                       resolve_backend_name)
+from .provenance import (CacheManifest, ManifestError, ProvenanceError,
+                         StaleCacheError, combine_fingerprints,
+                         transformer_fingerprint)
 from .base import CacheMissError, CacheStats, CacheTransformer
 from .kv import KeyValueCache
 from .scorer import ScorerCache
@@ -13,7 +17,8 @@ from .artifact import Artifact, to_hub, from_hub, hub_dir, \
     install_artifact_methods
 from .bucketing import BucketedRunner, bucket_size, pad_batch
 from .compile_cache import CompileCache, default_compile_cache
-from .auto import auto_cache, typecheck_pipeline, UncacheableError
+from .auto import (auto_cache, auto_cache_or_none, derive_fingerprint,
+                   typecheck_pipeline, UncacheableError)
 
 # Artifact API conformance for every cache family (paper §4.5)
 for _cls in (KeyValueCache, ScorerCache, DenseScorerCache, RetrieverCache,
@@ -23,11 +28,14 @@ for _cls in (KeyValueCache, ScorerCache, DenseScorerCache, RetrieverCache,
 __all__ = [
     "BACKENDS", "CacheBackend", "MemoryLRUBackend", "PickleDirBackend",
     "DbmBackend", "SQLiteBackend", "FileLock", "atomic_write_bytes",
-    "open_backend",
+    "open_backend", "resolve_backend_name",
+    "CacheManifest", "ManifestError", "ProvenanceError", "StaleCacheError",
+    "combine_fingerprints", "transformer_fingerprint",
     "CacheMissError", "CacheStats", "CacheTransformer",
     "KeyValueCache", "ScorerCache", "DenseScorerCache", "RetrieverCache",
     "IndexerCache", "Lazy", "Artifact", "to_hub", "from_hub", "hub_dir",
     "BucketedRunner", "bucket_size", "pad_batch",
     "CompileCache", "default_compile_cache",
-    "auto_cache", "typecheck_pipeline", "UncacheableError",
+    "auto_cache", "auto_cache_or_none", "derive_fingerprint",
+    "typecheck_pipeline", "UncacheableError",
 ]

@@ -62,7 +62,10 @@ def from_hub(repo_id: str, dest_path: Optional[str] = None) -> str:
     if dest_path is None:
         dest_path = tempfile.mkdtemp(prefix="repro-artifact-")
     with tarfile.open(tar_path) as tar:
-        tar.extractall(dest_path, filter="data")
+        if hasattr(tarfile, "data_filter"):
+            tar.extractall(dest_path, filter="data")
+        else:                            # pragma: no cover - old stdlib
+            tar.extractall(dest_path)
     return os.path.join(dest_path, "artifact")
 
 

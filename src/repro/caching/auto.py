@@ -21,7 +21,7 @@ footnote 13 anticipates (automatic type-checking of pipelines).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 from ..core.frame import ColFrame
 from ..core.pipeline import Compose, Transformer, stages_of
@@ -29,25 +29,56 @@ from .kv import KeyValueCache
 from .retriever import RetrieverCache
 from .scorer import ScorerCache
 
-__all__ = ["auto_cache", "auto_cache_or_none", "typecheck_pipeline",
-           "UncacheableError"]
+__all__ = ["auto_cache", "auto_cache_or_none", "derive_fingerprint",
+           "typecheck_pipeline", "UncacheableError"]
 
 
 class UncacheableError(TypeError):
     pass
 
 
+def derive_fingerprint(transformer: Any) -> Optional[str]:
+    """``transformer.fingerprint()`` when safely derivable, else None
+    (no transformer, unconstructed ``Lazy`` — whose placeholder
+    signature would change once constructed — or a failing hook)."""
+    if transformer is None:
+        return None
+    if hasattr(transformer, "_resolve_lazy"):
+        if not getattr(transformer, "constructed", True):
+            return None
+        transformer = transformer._resolve_lazy()    # already built: free
+    try:
+        return transformer.fingerprint()
+    except Exception:
+        return None
+
+
 def auto_cache(transformer: Transformer, path: Optional[str] = None,
-               *, backend: Optional[str] = None, **kwargs):
+               *, backend: Optional[str] = None,
+               fingerprint: Optional[str] = None,
+               on_stale: Optional[str] = None, **kwargs):
     """Pick and construct the right cache family from metadata.
 
     ``backend`` selects the storage implementation by registry name
     (``"memory"`` / ``"pickle"`` / ``"dbm"`` / ``"sqlite"`` — see
     ``backends.py``); ``None`` keeps each family's default (SQLite for
     key-value/scorer caches, dbm for retriever caches, both per §4).
+
+    Provenance (``caching/provenance.py``): ``fingerprint`` defaults to
+    ``transformer.fingerprint()`` (skipped for unconstructed ``Lazy``
+    wrappers — deriving it would force construction), so reopening a
+    cache directory after the transformer's config or code changed
+    trips the ``on_stale`` policy (``"error"`` | ``"recompute"`` |
+    ``"readonly"``) instead of silently serving stale results.
     """
     if backend is not None:
         kwargs["backend"] = backend
+    if on_stale is not None:
+        kwargs["on_stale"] = on_stale
+    if fingerprint is None:
+        fingerprint = derive_fingerprint(transformer)
+    if fingerprint is not None:
+        kwargs["fingerprint"] = fingerprint
     if isinstance(transformer, Compose):
         raise UncacheableError(
             "auto_cache wraps a single stage; wrap stages individually or "

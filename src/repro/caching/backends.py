@@ -53,7 +53,7 @@ except ImportError:                      # pragma: no cover - linux CI
 
 __all__ = ["CacheBackend", "MemoryLRUBackend", "PickleDirBackend",
            "DbmBackend", "SQLiteBackend", "FileLock", "atomic_write_bytes",
-           "open_backend", "BACKENDS"]
+           "open_backend", "resolve_backend_name", "BACKENDS"]
 
 
 # ---------------------------------------------------------------------------
@@ -211,6 +211,22 @@ class CacheBackend:
     def __len__(self) -> int:
         raise NotImplementedError
 
+    def items(self) -> List[Tuple[bytes, bytes]]:
+        """All ``(key, value)`` entries (drives ``repro cache export``).
+
+        Optional: backends that cannot recover keys from their store
+        raise ``NotImplementedError`` and are exported as raw files.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} cannot enumerate entries")
+
+    @classmethod
+    def store_exists(cls, path: str) -> bool:
+        """Whether ``path`` already holds this backend's store files —
+        answered *without* opening (and thereby creating) a store, for
+        offline inspection (``repro cache verify`` / ``export``)."""
+        return False
+
     def _close(self) -> None:
         pass
 
@@ -273,6 +289,10 @@ class MemoryLRUBackend(CacheBackend):
         with self._lock:
             return len(self._data)
 
+    def items(self) -> List[Tuple[bytes, bytes]]:
+        with self._lock:
+            return list(self._data.items())
+
 
 class PickleDirBackend(CacheBackend):
     """One file per entry, named by the SHA-256 of the key, written with
@@ -314,6 +334,17 @@ class PickleDirBackend(CacheBackend):
         for _, _, files in os.walk(self._objdir):
             n += sum(f.endswith(".bin") for f in files)
         return n
+
+    def items(self) -> List[Tuple[bytes, bytes]]:
+        # entry files are named by the *hash* of the key; the key itself
+        # is unrecoverable, so this store exports as raw files instead
+        raise NotImplementedError(
+            "PickleDirBackend stores hashed keys only; export the cache "
+            "directory as raw files")
+
+    @classmethod
+    def store_exists(cls, path: str) -> bool:
+        return os.path.isdir(os.path.join(path, "objects"))
 
 
 class DbmBackend(CacheBackend):
@@ -375,6 +406,19 @@ class DbmBackend(CacheBackend):
             finally:
                 db.close()
 
+    def items(self) -> List[Tuple[bytes, bytes]]:
+        with self._read_locked():
+            db = self._dbm.open(self._file, "r")
+            try:
+                return [(bytes(k), bytes(db[k])) for k in db.keys()]
+            finally:
+                db.close()
+
+    @classmethod
+    def store_exists(cls, path: str) -> bool:
+        return _legacy_store_exists(os.path.join(path, "cache.dbm")) or \
+            _legacy_store_exists(os.path.join(path, "retriever.db"))
+
 
 _SQLITE_SCHEMA = """
 CREATE TABLE IF NOT EXISTS kv (
@@ -435,6 +479,16 @@ class SQLiteBackend(CacheBackend):
             (n,) = self._db.execute("SELECT COUNT(*) FROM kv").fetchone()
         return int(n)
 
+    def items(self) -> List[Tuple[bytes, bytes]]:
+        with self._conn_lock:
+            return [(bytes(k), bytes(v)) for k, v in
+                    self._db.execute("SELECT key, value FROM kv")]
+
+    @classmethod
+    def store_exists(cls, path: str) -> bool:
+        return os.path.exists(os.path.join(path, "cache.sqlite3")) or \
+            os.path.exists(os.path.join(path, "kv.sqlite3"))
+
     def _close(self) -> None:
         try:
             self._db.close()
@@ -454,15 +508,38 @@ BACKENDS: Dict[str, Type[CacheBackend]] = {
 }
 
 
+def resolve_backend_name(spec: Union[str, CacheBackend, None],
+                         default: str = "sqlite") -> str:
+    """The registry name a ``backend=`` selector resolves to, validated
+    *without* opening a store (so callers can check manifests first).
+
+    Raises ``TypeError`` for selectors that are neither a name, an
+    instance nor ``None``, and ``ValueError`` (listing every registered
+    backend) for unknown names.
+    """
+    if isinstance(spec, CacheBackend):
+        return spec.name or type(spec).__name__
+    if spec is None:
+        spec = default
+    if not isinstance(spec, str):
+        raise TypeError(
+            f"cache backend selector must be a registry name "
+            f"({', '.join(repr(n) for n in sorted(BACKENDS))}), a "
+            f"CacheBackend instance, or None — got "
+            f"{type(spec).__name__}: {spec!r}")
+    if spec not in BACKENDS:
+        known = ", ".join(repr(n) for n in sorted(BACKENDS))
+        raise ValueError(
+            f"unknown cache backend {spec!r}; registered backends are "
+            f"{known} (pass a CacheBackend instance for a custom store)")
+    return spec
+
+
 def open_backend(spec: Union[str, CacheBackend, None], path: Optional[str],
                  default: str = "sqlite") -> CacheBackend:
     """Resolve a ``backend=`` argument: an instance passes through, a
-    name is looked up in ``BACKENDS``, ``None`` means ``default``."""
+    name is looked up in ``BACKENDS``, ``None`` means ``default``.
+    Unknown selectors raise with the registered names spelled out."""
     if isinstance(spec, CacheBackend):
         return spec
-    name = default if spec is None else str(spec)
-    cls = BACKENDS.get(name)
-    if cls is None:
-        raise ValueError(f"unknown cache backend {name!r}; "
-                         f"expected one of {sorted(BACKENDS)}")
-    return cls(path)
+    return BACKENDS[resolve_backend_name(spec, default)](path)

@@ -21,14 +21,19 @@ import shutil
 import sys
 import tempfile
 import threading
+import time
 from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 from ..core.pipeline import Transformer
+from .provenance import CacheManifest, ManifestError, StaleCacheError
 
 __all__ = ["CacheMissError", "CacheStats", "CacheTransformer",
            "resolve_transformer", "pickle_key", "pickle_value",
            "unpickle_value"]
+
+#: valid ``on_stale=`` policies (see CacheTransformer)
+ON_STALE_POLICIES = ("error", "recompute", "readonly")
 
 
 class CacheMissError(KeyError):
@@ -89,10 +94,32 @@ def unpickle_value(b: bytes) -> Tuple:
 
 
 class CacheTransformer(Transformer):
-    """Base for cache components that wrap a transformer."""
+    """Base for cache components that wrap a transformer.
+
+    Provenance (beyond-paper; see ``caching/provenance.py``): pass
+    ``fingerprint=`` (usually ``transformer.fingerprint()`` or a
+    planner node fingerprint) and the cache checks it against the
+    directory's ``manifest.json`` on open.  On mismatch the
+    ``on_stale`` policy applies:
+
+    * ``"error"`` (default) — raise :class:`StaleCacheError`;
+    * ``"recompute"`` — discard the stale entries (the directory is
+      wiped) and recompute from the wrapped transformer;
+    * ``"readonly"`` — serve the existing entries as-is but never
+      write (misses are computed yet not inserted).
+
+    Without a ``fingerprint`` the manifest is still written/maintained
+    (family, backend, schema, timestamps, entry counts) so the
+    directory stays inspectable by the ``repro cache`` CLI.
+    """
 
     def __init__(self, path: Optional[str], transformer: Any = None,
-                 *, verify_fraction: float = 0.0):
+                 *, verify_fraction: float = 0.0,
+                 fingerprint: Optional[str] = None,
+                 on_stale: str = "error"):
+        if on_stale not in ON_STALE_POLICIES:
+            raise ValueError(f"on_stale must be one of {ON_STALE_POLICIES}, "
+                             f"got {on_stale!r}")
         self._transformer_raw = transformer
         self._temporary = path is None
         if path is None:
@@ -101,7 +128,122 @@ class CacheTransformer(Transformer):
         os.makedirs(self.path, exist_ok=True)
         self.stats = CacheStats()
         self.verify_fraction = float(verify_fraction)
+        self.provenance_fingerprint = fingerprint
+        self.on_stale = on_stale
+        #: set by ``_open_manifest`` under the "readonly" stale policy
+        self.readonly = False
+        self._manifest: Optional[CacheManifest] = None
         self._closed = False
+
+    # -- provenance ----------------------------------------------------------
+    @property
+    def manifest(self) -> Optional[CacheManifest]:
+        return self._manifest
+
+    def _open_manifest(self, *, backend: Optional[str],
+                       key_columns: Sequence[str] = (),
+                       value_columns: Sequence[str] = ()) -> None:
+        """Validate (or create) this directory's manifest.
+
+        Families call this *before* opening their store, so that the
+        ``recompute`` policy can wipe a stale directory first.
+        """
+        try:
+            existing = CacheManifest.load(self.path)
+        except ManifestError:
+            if self.on_stale != "recompute":
+                raise
+            self._wipe_dir()
+            existing = None
+        if existing is not None:
+            reasons = self._stale_reasons(existing, backend,
+                                          key_columns, value_columns)
+            if reasons:
+                if self.on_stale == "error":
+                    raise StaleCacheError(
+                        f"{type(self).__name__} at {self.path!r} is stale: "
+                        f"{'; '.join(reasons)}.  Pass on_stale='recompute' "
+                        f"to discard the cached entries, or "
+                        f"on_stale='readonly' to use them anyway without "
+                        f"writing")
+                if self.on_stale == "recompute":
+                    self._wipe_dir()
+                    existing = None
+                else:                              # readonly
+                    self.readonly = True
+        if existing is None:
+            self._manifest = CacheManifest.new(
+                family=type(self).__name__, backend=backend,
+                fingerprint=self.provenance_fingerprint,
+                transformer=self._transformer_label(),
+                key_columns=list(key_columns),
+                value_columns=list(value_columns))
+            self._manifest.save(self.path)
+        else:
+            # adopt (incl. pre-provenance dirs); record our fingerprint
+            # the first time one is known for this directory
+            if existing.fingerprint is None \
+                    and self.provenance_fingerprint is not None \
+                    and not self.readonly:
+                existing.fingerprint = self.provenance_fingerprint
+                existing.save(self.path)
+            self._manifest = existing
+
+    def _stale_reasons(self, m: CacheManifest, backend: Optional[str],
+                       key_columns: Sequence[str],
+                       value_columns: Sequence[str]) -> list:
+        reasons = []
+        ours = self.provenance_fingerprint
+        if ours is not None and m.fingerprint is not None \
+                and m.fingerprint != ours:
+            reasons.append(f"recorded fingerprint {m.fingerprint} != "
+                           f"expected {ours}")
+        if backend is not None and m.backend is not None \
+                and m.backend != backend:
+            reasons.append(f"recorded backend {m.backend!r} != "
+                           f"requested {backend!r}")
+        if key_columns and m.key_columns \
+                and list(key_columns) != list(m.key_columns):
+            reasons.append(f"recorded key columns {m.key_columns} != "
+                           f"requested {list(key_columns)}")
+        if value_columns and m.value_columns \
+                and list(value_columns) != list(m.value_columns):
+            reasons.append(f"recorded value columns {m.value_columns} != "
+                           f"requested {list(value_columns)}")
+        return reasons
+
+    def _transformer_label(self) -> Optional[str]:
+        t = self._transformer_raw
+        if t is None:
+            return None
+        try:
+            return repr(t)
+        except Exception:
+            return type(t).__name__
+
+    def _wipe_dir(self) -> None:
+        """Discard every entry (and the manifest) under ``self.path``."""
+        for name in os.listdir(self.path):
+            p = os.path.join(self.path, name)
+            if os.path.isdir(p) and not os.path.islink(p):
+                shutil.rmtree(p, ignore_errors=True)
+            else:
+                try:
+                    os.unlink(p)
+                except OSError:
+                    pass
+
+    def _update_manifest(self) -> None:
+        """Refresh last-use timestamp and entry count on disk."""
+        if self._manifest is None or self.readonly or self._temporary:
+            return
+        try:
+            n = len(self)                    # families define __len__
+        except Exception:
+            n = self._manifest.entry_count
+        self._manifest.entry_count = int(n)
+        self._manifest.last_used_at = time.time()
+        self._manifest.save(self.path)
 
     # -- wrapped transformer -------------------------------------------------
     @property
@@ -121,6 +263,10 @@ class CacheTransformer(Transformer):
     def close(self) -> None:
         if self._closed:
             return
+        try:
+            self._update_manifest()
+        except Exception:
+            pass                         # manifest refresh is best-effort
         self._close_backend()
         if self._temporary:
             shutil.rmtree(self.path, ignore_errors=True)

@@ -44,9 +44,25 @@ class DenseScorerCache(CacheTransformer):
 
     def __init__(self, path: Optional[str] = None, transformer: Any = None,
                  *, docnos: Optional[Sequence[str]] = None,
-                 verify_fraction: float = 0.0):
-        super().__init__(path, transformer, verify_fraction=verify_fraction)
+                 verify_fraction: float = 0.0,
+                 fingerprint: Optional[str] = None,
+                 on_stale: str = "error"):
+        super().__init__(path, transformer, verify_fraction=verify_fraction,
+                         fingerprint=fingerprint, on_stale=on_stale)
         self._npids_path = os.path.join(self.path, "npids.json")
+        # the docno enumeration is the cache's key space, not a cached
+        # value: keep it across an on_stale="recompute" wipe so the
+        # normal reopen-without-docnos path can still rebuild (pass
+        # ``docnos`` explicitly when the corpus itself changed)
+        if docnos is None and os.path.exists(self._npids_path):
+            try:
+                with open(self._npids_path) as f:
+                    docnos = json.load(f)
+            except (OSError, ValueError):
+                pass
+        self._open_manifest(backend="dense",
+                            key_columns=("query", "docno"),
+                            value_columns=("score",))
         self._queries_path = os.path.join(self.path, "queries.json")
         self._scores_path = os.path.join(self.path, "scores.npy")
         self._write_lock = FileLock(os.path.join(self.path, ".lock"))
@@ -149,13 +165,17 @@ class DenseScorerCache(CacheTransformer):
                 raise ValueError("DenseScorerCache requires a pointwise "
                                  "(1:1) scorer")
             fresh = np.asarray(out["score"], dtype=np.float64)
-            with self._write_lock:       # row alloc + growth are exclusive
+            if self.readonly:            # stale-readonly: never insert
                 for j, i in enumerate(miss_idx):
-                    row = self._row_for(queries[i], create=True)
-                    col = self._doc_idx[docnos[i]]
-                    self._mat[row, col] = np.float32(fresh[j])
                     scores[i] = fresh[j]
-                self._mat.flush()
-            self.stats.add(inserts=len(miss_idx))
+            else:
+                with self._write_lock:   # row alloc + growth are exclusive
+                    for j, i in enumerate(miss_idx):
+                        row = self._row_for(queries[i], create=True)
+                        col = self._doc_idx[docnos[i]]
+                        self._mat[row, col] = np.float32(fresh[j])
+                        scores[i] = fresh[j]
+                    self._mat.flush()
+                self.stats.add(inserts=len(miss_idx))
 
         return add_ranks(inp.assign(score=scores))

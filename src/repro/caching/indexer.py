@@ -30,14 +30,22 @@ __all__ = ["IndexerCache"]
 class IndexerCache(CacheTransformer, Indexer):
     """Sequence cache: write once via .index(), replay via iteration."""
 
-    def __init__(self, path: Optional[str] = None):
-        CacheTransformer.__init__(self, path, None)
+    def __init__(self, path: Optional[str] = None, *,
+                 fingerprint: Optional[str] = None,
+                 on_stale: str = "error"):
+        CacheTransformer.__init__(self, path, None, fingerprint=fingerprint,
+                                  on_stale=on_stale)
+        self._open_manifest(backend="log", key_columns=("docno",))
         self._log_path = os.path.join(self.path, "rows.log")
         self._off_path = os.path.join(self.path, "offsets.npy")
         self._npids_path = os.path.join(self.path, "npids.json")
 
     # -- writing ---------------------------------------------------------------
     def index(self, corpus_iter: Iterable[dict]) -> "IndexerCache":
+        if self.readonly:
+            raise RuntimeError(
+                f"IndexerCache at {self.path!r} opened read-only "
+                f"(stale provenance); refusing to overwrite the stream")
         offsets: List[int] = []
         docnos: List[str] = []
         with open(self._log_path, "wb") as log:

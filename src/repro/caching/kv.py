@@ -18,7 +18,7 @@ from typing import Any, List, Optional, Tuple
 import numpy as np
 
 from ..core.frame import ColFrame
-from .backends import CacheBackend, open_backend
+from .backends import CacheBackend, open_backend, resolve_backend_name
 from .base import (CacheTransformer, pickle_key, pickle_value,
                    unpickle_value)
 
@@ -34,12 +34,20 @@ class KeyValueCache(CacheTransformer):
     def __init__(self, path: Optional[str] = None, transformer: Any = None,
                  *, key: Any = "text", value: Any = "text",
                  verify_fraction: float = 0.0,
-                 backend: Any = None):
-        super().__init__(path, transformer, verify_fraction=verify_fraction)
+                 backend: Any = None,
+                 fingerprint: Optional[str] = None,
+                 on_stale: str = "error"):
+        super().__init__(path, transformer, verify_fraction=verify_fraction,
+                         fingerprint=fingerprint, on_stale=on_stale)
         self.key_cols: Tuple[str, ...] = \
             (key,) if isinstance(key, str) else tuple(key)
         self.value_cols: Tuple[str, ...] = \
             (value,) if isinstance(value, str) else tuple(value)
+        # manifest check precedes the store open so a stale directory
+        # can be wiped under on_stale="recompute"
+        self._open_manifest(
+            backend=resolve_backend_name(backend, self.default_backend),
+            key_columns=self.key_cols, value_columns=self.value_cols)
         self._backend: CacheBackend = open_backend(
             backend, self.path, default=self.default_backend)
 
@@ -134,8 +142,9 @@ class KeyValueCache(CacheTransformer):
                 new_items.append((k, pickle_value(val)))
                 for i in idxs:
                     values[i] = val
-            self._backend.put_many(new_items)
-            self.stats.add(inserts=len(new_items))
+            if not self.readonly:        # stale-readonly: never insert
+                self._backend.put_many(new_items)
+                self.stats.add(inserts=len(new_items))
             return still
 
     # -- determinism verification (beyond paper §6) ---------------------------

@@ -22,7 +22,7 @@ from typing import Any, List, Optional, Tuple
 import numpy as np
 
 from ..core.frame import ColFrame
-from .backends import CacheBackend, open_backend
+from .backends import CacheBackend, open_backend, resolve_backend_name
 from .base import CacheTransformer, pickle_key
 
 __all__ = ["RetrieverCache"]
@@ -36,10 +36,16 @@ class RetrieverCache(CacheTransformer):
     def __init__(self, path: Optional[str] = None, retriever: Any = None,
                  *, key: Any = ("qid", "query"),
                  verify_fraction: float = 0.0,
-                 backend: Any = None):
-        super().__init__(path, retriever, verify_fraction=verify_fraction)
+                 backend: Any = None,
+                 fingerprint: Optional[str] = None,
+                 on_stale: str = "error"):
+        super().__init__(path, retriever, verify_fraction=verify_fraction,
+                         fingerprint=fingerprint, on_stale=on_stale)
         self.key_cols: Tuple[str, ...] = \
             (key,) if isinstance(key, str) else tuple(key)
+        self._open_manifest(
+            backend=resolve_backend_name(backend, self.default_backend),
+            key_columns=self.key_cols)
         self._backend: CacheBackend = open_backend(
             backend, self.path, default=self.default_backend)
 
@@ -116,6 +122,7 @@ class RetrieverCache(CacheTransformer):
                 rows = out.take(idxs).to_dicts() if idxs is not None else []
                 items.append((hashes[i], self._encode_frame(rows)))
                 results[i] = rows
-            self._backend.put_many(items)
-            self.stats.add(inserts=len(still))
+            if not self.readonly:        # stale-readonly: never insert
+                self._backend.put_many(items)
+                self.stats.add(inserts=len(still))
             return still

@@ -29,9 +29,11 @@ class ScorerCache(KeyValueCache):
 
     def __init__(self, path: Optional[str] = None, transformer: Any = None,
                  *, key: Any = ("query", "docno"), value: Any = ("score",),
-                 verify_fraction: float = 0.0, backend: Any = None):
+                 verify_fraction: float = 0.0, backend: Any = None,
+                 fingerprint: Optional[str] = None, on_stale: str = "error"):
         super().__init__(path, transformer, key=key, value=value,
-                         verify_fraction=verify_fraction, backend=backend)
+                         verify_fraction=verify_fraction, backend=backend,
+                         fingerprint=fingerprint, on_stale=on_stale)
 
     def transform(self, inp: ColFrame) -> ColFrame:
         if len(inp) == 0:

@@ -1,0 +1,28 @@
+"""``repro`` command line (also invocable as ``python -m repro.cli``).
+
+Subcommands register themselves on the top-level parser; the first one
+is ``repro cache`` (``cli/cache.py``) — inspection, verification,
+garbage collection and export/import of cache directories built on the
+provenance manifests of ``caching/provenance.py``.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List, Optional
+
+__all__ = ["main", "build_parser"]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro",
+        description="Precomputation & caching in IR experiments — tooling")
+    sub = ap.add_subparsers(dest="command", required=True)
+    from . import cache as _cache
+    _cache.register(sub)
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    return int(args.func(args) or 0)

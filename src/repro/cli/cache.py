@@ -1,0 +1,529 @@
+"""``repro cache`` — manage provenance-aware cache directories.
+
+Every cache directory carries a checksummed ``manifest.json``
+(``caching/provenance.py``) and planner-managed roots additionally
+carry per-plan manifests under ``plans/``; this tool consumes both:
+
+* ``ls ROOT``        — list cache dirs (family, backend, entries,
+  fingerprint, last use) and the plans that reference them;
+* ``verify ROOT``    — integrity check: manifest checksums, format
+  versions, store presence, recorded-vs-actual entry counts, and
+  plan-manifest ↔ dir-manifest fingerprint consistency (exit 1 on any
+  failure — a hand-edited manifest is detected by its checksum);
+* ``gc ROOT``        — prune dirs unused for ``--older-than`` and/or
+  ``--orphaned`` dirs no plan manifest references (dry-run unless
+  ``--yes``);
+* ``export DIR OUT`` — package one node's entries as a portable
+  artifact: backends that can enumerate entries export them
+  backend-agnostically (re-importable into *any* registry backend at
+  any compatible pipeline position), others export raw store files;
+* ``import ART DEST``— materialize an artifact into a cache dir;
+  fingerprint mismatches with an existing destination manifest are
+  refused without ``--force``.
+
+Import only artifacts you trust — entries are pickled blobs, the same
+trust model as the shared result files the source paper discusses.
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import json
+import os
+import pickle
+import shutil
+import tarfile
+import tempfile
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..caching.backends import BACKENDS
+from ..caching.provenance import (MANIFEST_NAME, PLAN_MANIFEST_VERSION,
+                                  CacheManifest, ManifestError,
+                                  iter_plan_manifests, manifest_path)
+
+__all__ = ["register", "cmd_ls", "cmd_verify", "cmd_gc", "cmd_export",
+           "cmd_import"]
+
+EXPORT_FORMAT_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# registration
+# ---------------------------------------------------------------------------
+
+def register(subparsers) -> None:
+    p = subparsers.add_parser(
+        "cache", help="inspect / verify / prune / share cache directories",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = p.add_subparsers(dest="cache_command", required=True)
+
+    ls = sub.add_parser("ls", help="list cache dirs and plan manifests")
+    ls.add_argument("root", help="cache root (a planner cache_dir) or "
+                                 "a single cache directory")
+    ls.add_argument("--json", action="store_true", dest="as_json")
+    ls.set_defaults(func=cmd_ls)
+
+    vf = sub.add_parser("verify", help="integrity-check manifests and stores")
+    vf.add_argument("root")
+    vf.add_argument("--json", action="store_true", dest="as_json")
+    vf.set_defaults(func=cmd_verify)
+
+    gc = sub.add_parser("gc", help="prune stale / orphaned cache dirs")
+    gc.add_argument("root")
+    gc.add_argument("--older-than", metavar="AGE", default=None,
+                    help="remove dirs last used more than AGE ago "
+                         "(e.g. 30s, 12h, 7d; bare numbers are seconds)")
+    gc.add_argument("--orphaned", action="store_true",
+                    help="remove dirs referenced by no plan manifest")
+    gc.add_argument("--yes", action="store_true",
+                    help="actually delete (default is a dry run)")
+    gc.set_defaults(func=cmd_gc)
+
+    ex = sub.add_parser("export", help="package one cache dir as a "
+                                       "portable artifact")
+    ex.add_argument("cache_dir")
+    ex.add_argument("out", help="output artifact path (.tar)")
+    ex.set_defaults(func=cmd_export)
+
+    im = sub.add_parser("import", help="materialize an artifact into a "
+                                       "cache dir")
+    im.add_argument("artifact")
+    im.add_argument("dest", help="destination cache directory (e.g. the "
+                                 "planner node dir shown by `repro cache "
+                                 "ls`)")
+    im.add_argument("--backend", default=None,
+                    help="store entry-mode artifacts in this backend "
+                         "instead of the recorded one")
+    im.add_argument("--force", action="store_true",
+                    help="overwrite despite fingerprint mismatch / "
+                         "non-empty destination")
+    im.set_defaults(func=cmd_import)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _cache_dirs(root: str) -> List[str]:
+    """Directories holding a ``manifest.json``: the root itself, or its
+    immediate children (a planner ``cache_dir`` layout)."""
+    root = os.path.abspath(root)
+    if os.path.exists(manifest_path(root)):
+        return [root]
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in sorted(os.listdir(root)):
+        d = os.path.join(root, name)
+        if os.path.isdir(d) and os.path.exists(manifest_path(d)):
+            out.append(d)
+    return out
+
+
+def _store_exists(dirpath: str, backend: Optional[str]) -> bool:
+    if backend in BACKENDS:              # registry backends know their files
+        return BACKENDS[backend].store_exists(dirpath)
+    if backend == "dense":               # DenseScorerCache layout
+        return os.path.exists(os.path.join(dirpath, "scores.npy"))
+    if backend == "log":                 # IndexerCache layout
+        return os.path.exists(os.path.join(dirpath, "offsets.npy"))
+    return False
+
+
+def _actual_entries(dirpath: str, backend: Optional[str]) -> Optional[int]:
+    """Count the entries actually present in a directory's store;
+    ``None`` when the backend cannot be counted offline."""
+    if backend == "memory":
+        return None                      # in-process only; nothing on disk
+    if not _store_exists(dirpath, backend):
+        return 0
+    if backend in BACKENDS:
+        b = BACKENDS[backend](dirpath)
+        try:
+            return len(b)
+        finally:
+            b.close()
+    if backend == "dense":
+        import numpy as np
+        qpath = os.path.join(dirpath, "queries.json")
+        if not os.path.exists(qpath):
+            return 0
+        with open(qpath) as f:
+            rows = sorted(json.load(f).values())
+        if not rows:
+            return 0
+        mat = np.lib.format.open_memmap(
+            os.path.join(dirpath, "scores.npy"), mode="r")
+        return int(np.sum(~np.isnan(mat[rows])))
+    if backend == "log":
+        import numpy as np
+        return int(np.load(os.path.join(dirpath, "offsets.npy")).shape[0])
+    return None
+
+
+def _dir_size(dirpath: str) -> int:
+    total = 0
+    for base, _, files in os.walk(dirpath):
+        for f in files:
+            try:
+                total += os.path.getsize(os.path.join(base, f))
+            except OSError:
+                pass
+    return total
+
+
+def _fmt_time(ts: float) -> str:
+    if not ts:
+        return "-"
+    return time.strftime("%Y-%m-%d %H:%M:%S", time.localtime(ts))
+
+
+def _parse_age(text: str) -> float:
+    text = text.strip().lower()
+    units = {"s": 1.0, "m": 60.0, "h": 3600.0, "d": 86400.0, "w": 604800.0}
+    mult = 1.0
+    if text and text[-1] in units:
+        mult = units[text[-1]]
+        text = text[:-1]
+    try:
+        return float(text) * mult
+    except ValueError:
+        raise SystemExit(f"repro cache: invalid age {text!r} "
+                         f"(expected e.g. 30s, 12h, 7d)")
+
+
+def _load_manifest_doc(dirpath: str) -> Tuple[Optional[CacheManifest],
+                                              Optional[str]]:
+    try:
+        return CacheManifest.load(dirpath), None
+    except ManifestError as e:
+        return None, str(e)
+
+
+# ---------------------------------------------------------------------------
+# ls
+# ---------------------------------------------------------------------------
+
+def _collect(root: str) -> Dict[str, Any]:
+    root = os.path.abspath(root)
+    dirs = []
+    for d in _cache_dirs(root):
+        m, err = _load_manifest_doc(d)
+        rec: Dict[str, Any] = {"dir": os.path.relpath(d, root) if d != root
+                               else ".", "path": d}
+        if err is not None:
+            rec["error"] = err
+        else:
+            rec.update(family=m.family, backend=m.backend,
+                       fingerprint=m.fingerprint,
+                       transformer=m.transformer,
+                       key_columns=m.key_columns,
+                       value_columns=m.value_columns,
+                       entry_count=m.entry_count,
+                       created_at=m.created_at,
+                       last_used_at=m.last_used_at,
+                       size_bytes=_dir_size(d))
+        dirs.append(rec)
+    plans = []
+    for path, doc, err in iter_plan_manifests(root):
+        rec = {"path": path}
+        if err is not None:
+            rec["error"] = err
+        else:
+            rec.update(plan_id=doc.get("plan_id"),
+                       created_at=doc.get("created_at"),
+                       pipelines=doc.get("pipelines", []),
+                       n_nodes=len(doc.get("nodes", [])),
+                       n_runs=len(doc.get("runs", [])))
+        plans.append(rec)
+    return {"root": root, "dirs": dirs, "plans": plans}
+
+
+def cmd_ls(args) -> int:
+    info = _collect(args.root)
+    if args.as_json:
+        print(json.dumps(info, indent=2, sort_keys=True))
+        return 0
+    if not info["dirs"]:
+        print(f"no cache directories under {info['root']}")
+    for rec in info["dirs"]:
+        if "error" in rec:
+            print(f"{rec['dir']}: UNREADABLE ({rec['error']})")
+            continue
+        fp = rec["fingerprint"] or "-"
+        print(f"{rec['dir']}: {rec['family']}[{rec['backend']}] "
+              f"entries={rec['entry_count']} "
+              f"size={rec['size_bytes'] / 1024:.1f}KiB fp={fp} "
+              f"last_used={_fmt_time(rec['last_used_at'])}")
+        if rec.get("transformer"):
+            print(f"    transformer: {rec['transformer']}")
+    for rec in info["plans"]:
+        if "error" in rec:
+            print(f"plan {os.path.basename(rec['path'])}: UNREADABLE "
+                  f"({rec['error']})")
+            continue
+        print(f"plan {rec['plan_id']}: {len(rec['pipelines'])} pipeline(s), "
+              f"{rec['n_nodes']} node(s), {rec['n_runs']} recorded run(s), "
+              f"created={_fmt_time(rec['created_at'] or 0)}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# verify
+# ---------------------------------------------------------------------------
+
+def cmd_verify(args) -> int:
+    root = os.path.abspath(args.root)
+    report: List[Dict[str, Any]] = []
+    manifests: Dict[str, Optional[CacheManifest]] = {}
+
+    for d in _cache_dirs(root):
+        rel = os.path.relpath(d, root) if d != root else "."
+        problems: List[str] = []
+        m, err = _load_manifest_doc(d)
+        manifests[os.path.basename(d)] = m
+        if err is not None:
+            problems.append(err)
+        else:
+            actual = _actual_entries(d, m.backend)
+            if actual is not None and actual != m.entry_count:
+                problems.append(
+                    f"entry count mismatch: store holds {actual}, "
+                    f"manifest records {m.entry_count}")
+        report.append({"dir": rel, "problems": problems})
+
+    for path, doc, err in iter_plan_manifests(root):
+        name = f"plan:{os.path.basename(path)}"
+        problems = []
+        if err is not None:
+            problems.append(err)
+        else:
+            ver = doc.get("format_version")
+            if not isinstance(ver, int) or ver > PLAN_MANIFEST_VERSION:
+                problems.append(f"unsupported plan format_version {ver!r}")
+            for node in doc.get("nodes", []):
+                nd = node.get("dir")
+                if not nd:
+                    continue
+                m = manifests.get(nd)
+                if m is None:
+                    if not os.path.isdir(os.path.join(root, nd)):
+                        problems.append(
+                            f"node {node.get('label')!r} references missing "
+                            f"dir {nd!r} (gc'd or never populated)")
+                    continue
+                if m.fingerprint and node.get("fingerprint") \
+                        and m.fingerprint != node["fingerprint"]:
+                    problems.append(
+                        f"node {node.get('label')!r}: plan fingerprint "
+                        f"{node['fingerprint']} != dir manifest "
+                        f"{m.fingerprint}")
+        report.append({"dir": name, "problems": problems})
+
+    failed = [r for r in report if r["problems"]]
+    if args.as_json:
+        print(json.dumps({"root": root, "checked": len(report),
+                          "failed": len(failed), "report": report},
+                         indent=2, sort_keys=True))
+    else:
+        for r in report:
+            if r["problems"]:
+                print(f"FAIL {r['dir']}")
+                for p in r["problems"]:
+                    print(f"    {p}")
+            else:
+                print(f"OK   {r['dir']}")
+        print(f"verified {len(report)} item(s), {len(failed)} failure(s)")
+    return 1 if failed else 0
+
+
+# ---------------------------------------------------------------------------
+# gc
+# ---------------------------------------------------------------------------
+
+def cmd_gc(args) -> int:
+    root = os.path.abspath(args.root)
+    if args.older_than is None and not args.orphaned:
+        raise SystemExit("repro cache gc: nothing selected — pass "
+                         "--older-than and/or --orphaned")
+    dirs = [d for d in _cache_dirs(root) if d != root]
+    victims: Dict[str, str] = {}
+
+    if args.older_than is not None:
+        cutoff = time.time() - _parse_age(args.older_than)
+        for d in dirs:
+            m, err = _load_manifest_doc(d)
+            if m is None:
+                continue                 # unreadable: verify's business
+            last = m.last_used_at or m.created_at
+            if last <= cutoff:
+                victims[d] = (f"last used {_fmt_time(last)}, older than "
+                              f"{args.older_than}")
+
+    if args.orphaned:
+        referenced = set()
+        for _, doc, _err in iter_plan_manifests(root):
+            if doc:
+                referenced.update(n.get("dir") for n in doc.get("nodes", [])
+                                  if n.get("dir"))
+        for d in dirs:
+            if os.path.basename(d) not in referenced:
+                victims.setdefault(d, "referenced by no plan manifest")
+
+    if not victims:
+        print("nothing to collect")
+        return 0
+    freed = 0
+    for d in sorted(victims):
+        size = _dir_size(d)
+        freed += size
+        verb = "removing" if args.yes else "would remove"
+        print(f"{verb} {d} ({victims[d]}; {size / 1024:.1f}KiB)")
+        if args.yes:
+            shutil.rmtree(d, ignore_errors=True)
+    action = "freed" if args.yes else "would free"
+    print(f"{action} {freed / 1024:.1f}KiB across {len(victims)} dir(s)"
+          + ("" if args.yes else " — re-run with --yes to delete"))
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# export / import
+# ---------------------------------------------------------------------------
+
+def _add_bytes(tar: tarfile.TarFile, name: str, data: bytes) -> None:
+    info = tarfile.TarInfo(name)
+    info.size = len(data)
+    info.mtime = int(time.time())
+    tar.addfile(info, io.BytesIO(data))
+
+
+def _safe_extractall(tar: tarfile.TarFile, dest: str, members=None) -> None:
+    # the extraction ``filter=`` kwarg is absent on 3.10.<12 / 3.11.<4
+    if hasattr(tarfile, "data_filter"):
+        tar.extractall(dest, members=members, filter="data")
+    else:                                # pragma: no cover - old stdlib
+        tar.extractall(dest, members=members)
+
+
+def cmd_export(args) -> int:
+    src = os.path.abspath(args.cache_dir)
+    m, err = _load_manifest_doc(src)
+    if err is not None:
+        raise SystemExit(f"repro cache export: {err}")
+    if m is None:
+        raise SystemExit(f"repro cache export: {src!r} has no "
+                         f"{MANIFEST_NAME} — not a provenance-aware cache "
+                         f"directory")
+    entries: Optional[List[Tuple[bytes, bytes]]] = None
+    if m.backend in BACKENDS and m.backend != "memory" \
+            and _store_exists(src, m.backend):
+        backend = BACKENDS[m.backend](src)
+        try:
+            entries = backend.items()
+        except NotImplementedError:
+            entries = None               # e.g. pickle: raw-file export
+        finally:
+            backend.close()
+    mode = "entries" if entries is not None else "raw"
+    meta = {"format_version": EXPORT_FORMAT_VERSION, "mode": mode,
+            "exported_at": time.time(),
+            "n_entries": len(entries) if entries is not None
+            else m.entry_count}
+    with tarfile.open(args.out, "w") as tar:
+        _add_bytes(tar, "export.json",
+                   json.dumps(meta, indent=2, sort_keys=True).encode())
+        with open(manifest_path(src), "rb") as f:
+            _add_bytes(tar, MANIFEST_NAME, f.read())
+        if mode == "entries":
+            _add_bytes(tar, "entries.pkl", pickle.dumps(
+                entries, protocol=pickle.HIGHEST_PROTOCOL))
+        else:
+            for base, _, files in os.walk(src):
+                for fname in files:
+                    full = os.path.join(base, fname)
+                    rel = os.path.relpath(full, src)
+                    if rel == MANIFEST_NAME:
+                        continue
+                    tar.add(full, arcname=os.path.join("raw", rel))
+    print(f"exported {meta['n_entries']} entrie(s) from {src} "
+          f"({mode} mode, fp={m.fingerprint or '-'}) -> {args.out}")
+    return 0
+
+
+def _read_member(tar: tarfile.TarFile, name: str) -> bytes:
+    f = tar.extractfile(name)
+    if f is None:
+        raise SystemExit(f"repro cache import: artifact is missing {name!r}")
+    return f.read()
+
+
+def cmd_import(args) -> int:
+    dest = os.path.abspath(args.dest)
+    with tarfile.open(args.artifact) as tar:
+        meta = json.loads(_read_member(tar, "export.json"))
+        if meta.get("format_version", 0) > EXPORT_FORMAT_VERSION:
+            raise SystemExit("repro cache import: artifact written by a "
+                             "newer exporter")
+        man_bytes = _read_member(tar, MANIFEST_NAME)
+        with tempfile.TemporaryDirectory() as td:
+            with open(manifest_path(td), "wb") as f:
+                f.write(man_bytes)
+            try:
+                imported = CacheManifest.load(td)
+            except ManifestError as e:
+                raise SystemExit(f"repro cache import: {e}")
+
+        existing, err = (None, None)
+        if os.path.isdir(dest):
+            existing, err = _load_manifest_doc(dest)
+            if err is not None and not args.force:
+                raise SystemExit(f"repro cache import: destination has a "
+                                 f"corrupted manifest ({err}); pass --force "
+                                 f"to overwrite")
+        if existing is not None and existing.fingerprint \
+                and imported.fingerprint \
+                and existing.fingerprint != imported.fingerprint \
+                and not args.force:
+            raise SystemExit(
+                f"repro cache import: fingerprint mismatch — destination "
+                f"records {existing.fingerprint}, artifact carries "
+                f"{imported.fingerprint}; this is not the same pipeline "
+                f"position (pass --force to import anyway)")
+
+        if meta["mode"] == "entries":
+            backend_name = args.backend or imported.backend
+            if backend_name not in BACKENDS:
+                raise SystemExit(f"repro cache import: unknown backend "
+                                 f"{backend_name!r}; registered: "
+                                 f"{', '.join(sorted(BACKENDS))}")
+            entries = pickle.loads(_read_member(tar, "entries.pkl"))
+            os.makedirs(dest, exist_ok=True)
+            backend = BACKENDS[backend_name](dest)
+            try:
+                backend.put_many(entries)
+                n = len(backend)
+            finally:
+                backend.close()
+            imported.backend = backend_name
+            imported.entry_count = int(n)
+            imported.last_used_at = time.time()
+            imported.save(dest)
+        else:
+            if os.path.isdir(dest) and os.listdir(dest) and not args.force:
+                raise SystemExit(f"repro cache import: destination {dest!r} "
+                                 f"is not empty (pass --force)")
+            os.makedirs(dest, exist_ok=True)
+            members = [m_ for m_ in tar.getmembers()
+                       if m_.name.startswith("raw/")]
+            for m_ in members:
+                m_.name = os.path.relpath(m_.name, "raw")
+            _safe_extractall(tar, dest, members=members)
+            imported.last_used_at = time.time()
+            imported.save(dest)
+
+    print(f"imported {meta['n_entries']} entrie(s) into {dest} "
+          f"({meta['mode']} mode, fp={imported.fingerprint or '-'})")
+    return 0

@@ -154,6 +154,7 @@ def Experiment(
     precompute_mode: str = "lcp",          # "lcp" (§3) | "trie" | "plan"
     cache_dir: Optional[str] = None,       # plan mode: auto-insert caches
     cache_backend: Optional[str] = None,   # plan mode: backend registry name
+    on_stale: str = "error",               # plan mode: stale-cache policy
     n_shards: Optional[int] = None,        # plan mode: concurrent executor
     max_workers: Optional[int] = None,
     baseline: Optional[int] = None,
@@ -174,7 +175,9 @@ def Experiment(
     ``"plan"`` the full execution planner (``core/plan.py``) — which
     additionally shares through binary operator nodes and, given a
     ``cache_dir``, auto-inserts the §4 explicit caches per DAG node
-    (``cache_backend`` selects their storage backend).  In plan mode
+    (``cache_backend`` selects their storage backend; ``on_stale``
+    picks the policy when a cache directory's recorded provenance
+    fingerprint mismatches — see ``caching/provenance.py``).  In plan mode
     ``n_shards`` / ``max_workers`` enable the concurrent sharded
     executor.  All three execute through the planner; results are
     identical.
@@ -197,7 +200,8 @@ def Experiment(
         if precompute_mode == "plan":
             from .plan import ExecutionPlan
             with ExecutionPlan(systems, cache_dir=cache_dir,
-                               cache_backend=cache_backend) as plan:
+                               cache_backend=cache_backend,
+                               on_stale=on_stale) as plan:
                 outs, stats = plan.run(topics, batch_size=batch_size,
                                        n_shards=n_shards,
                                        max_workers=max_workers)

@@ -198,6 +198,24 @@ class Transformer:
     def signature(self) -> Tuple:
         return (type(self).__name__,)
 
+    # -- provenance (beyond paper: cache invalidation) -------------------
+    def fingerprint(self) -> str:
+        """Stable provenance fingerprint (hex): class identity + config
+        (``signature()``) + ``fingerprint_extras()``, hashed by the
+        ``cachekey_hash`` kernel digest (``caching/provenance.py``).
+        Deterministic across processes; used by the cache manifests to
+        detect stale cache directories."""
+        from ..caching.provenance import transformer_fingerprint
+        return transformer_fingerprint(self)
+
+    def fingerprint_extras(self) -> Tuple:
+        """Extra provenance tokens folded into ``fingerprint()``.
+
+        Override to declare behaviour-relevant state the signature
+        misses — corpus versions, checkpoint paths, model revisions —
+        so caches of this transformer invalidate when they change."""
+        return ()
+
     def __eq__(self, other) -> bool:
         return isinstance(other, Transformer) and self.signature() == other.signature()
 

@@ -48,6 +48,7 @@ wrappers over this module — the planner is the single execution path.
 from __future__ import annotations
 
 import hashlib
+import inspect
 import os
 import threading
 import time
@@ -115,6 +116,22 @@ def plan_size(expr: Transformer) -> int:
     if isinstance(expr, ScalarProduct):
         return 1 + plan_size(expr.inner)
     return 1
+
+
+def _accepted_kwargs(factory: Callable[..., Any],
+                     wanted: Dict[str, Any]) -> Dict[str, Any]:
+    """The subset of ``wanted`` that ``factory`` can accept — custom
+    memo factories keep their minimal ``(stage, path)`` signature while
+    richer ones opt into ``backend`` / ``fingerprint`` / ``on_stale``."""
+    try:
+        params = inspect.signature(factory).parameters.values()
+    except (TypeError, ValueError):      # builtins / C callables
+        return {}
+    if any(p.kind == p.VAR_KEYWORD for p in params):
+        return dict(wanted)
+    names = {p.name for p in params
+             if p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)}
+    return {k: v for k, v in wanted.items() if k in names}
 
 
 def _qid_runs_unique(qids: np.ndarray) -> bool:
@@ -187,17 +204,25 @@ class ExecutionPlan:
         Pluggable cache policy ``(transformer, path, **kw) -> wrapper |
         None``.  Defaults to ``repro.caching.auto.auto_cache_or_none``
         with uncacheable stages (per §5, e.g. DuoT5-style scorers) left
-        bare.
+        bare.  Factories that accept them also receive ``fingerprint=``
+        (the node's provenance fingerprint) and ``on_stale=``.
+    on_stale:
+        Policy when a node's cache directory records a different
+        provenance fingerprint (``caching/provenance.py``): ``"error"``
+        (default — raise ``StaleCacheError``), ``"recompute"`` (discard
+        the stale entries) or ``"readonly"`` (serve them, never write).
     """
 
     def __init__(self, pipelines: Sequence[Transformer], *,
                  cache_dir: Optional[str] = None,
                  cache_backend: Optional[str] = None,
-                 memo_factory: Optional[Callable[..., Any]] = None):
+                 memo_factory: Optional[Callable[..., Any]] = None,
+                 on_stale: str = "error"):
         self.pipelines: List[Transformer] = list(pipelines)
         self.cache_dir = cache_dir
         self.cache_backend = cache_backend
         self._memo_factory = memo_factory
+        self.on_stale = on_stale
         self.source = PlanNode(key=("source",), kind="source", stage=None)
         self.nodes: Dict[Tuple, PlanNode] = {self.source.key: self.source}
         self.terminals: List[PlanNode] = [
@@ -207,9 +232,13 @@ class ExecutionPlan:
             getattr(n.stage, "shardable", True)
             for n in self.nodes.values() if n.kind == "stage")
         self._label_nodes()
+        self._node_fps: Optional[Dict[Tuple, str]] = None
+        self._plan_manifest_path: Optional[str] = None
         if (cache_dir is not None or memo_factory is not None
                 or cache_backend is not None):
             self._insert_memos()
+        if cache_dir is not None:
+            self._write_plan_manifest()
         self.stats: Optional[PlanStats] = None   # last run
 
     def _label_nodes(self) -> None:
@@ -254,6 +283,31 @@ class ExecutionPlan:
         key = ("stage", expr.signature(), inp.key)
         return self._node(key, "stage", expr, [inp])
 
+    # -- provenance --------------------------------------------------------
+    def node_fingerprints(self) -> Dict[Tuple, str]:
+        """Provenance fingerprint per plan node: the stage's transformer
+        fingerprint folded over the fingerprints of its input nodes, so
+        a config/code change anywhere upstream changes every downstream
+        node's fingerprint (``caching/provenance.py``).  Deterministic
+        across processes."""
+        if self._node_fps is None:
+            from ..caching.auto import derive_fingerprint
+            from ..caching.provenance import combine_fingerprints
+            fps: Dict[Tuple, str] = {
+                self.source.key: combine_fingerprints("plan-source")}
+            # self.nodes preserves insertion order, and _lower creates
+            # every input before its consumer — already topological
+            for node in self.nodes.values():
+                if node.kind == "source":
+                    continue
+                stage_fp = derive_fingerprint(node.stage) \
+                    or combine_fingerprints("sig", repr(node.stage))
+                fps[node.key] = combine_fingerprints(
+                    "node", node.kind, stage_fp,
+                    *[fps[i.key] for i in node.inputs])
+            self._node_fps = fps
+        return self._node_fps
+
     # -- planner-inserted memoization --------------------------------------
     def _insert_memos(self) -> None:
         factory = self._memo_factory
@@ -263,6 +317,7 @@ class ExecutionPlan:
         kwargs: Dict[str, Any] = {}
         if self.cache_backend is not None:
             kwargs["backend"] = self.cache_backend
+        fps = self.node_fingerprints()
         for node in self.nodes.values():
             if node.kind != "stage":
                 continue
@@ -275,7 +330,86 @@ class ExecutionPlan:
                     repr(node.key).encode()).hexdigest()[:16]
                 path = os.path.join(
                     self.cache_dir, pipeline_hash(node.stage) + "-" + digest)
-            node.cache = factory(node.stage, path, **kwargs)
+            node.cache = factory(node.stage, path, **_accepted_kwargs(
+                factory, {**kwargs, "fingerprint": fps[node.key],
+                          "on_stale": self.on_stale}))
+
+    def _write_plan_manifest(self) -> None:
+        """Record this plan in ``<cache_dir>/plans/<plan_id>.json`` so the
+        cache directory is self-describing: which pipelines used it,
+        which node dirs belong to which DAG position, with what
+        provenance.  ``repro cache ls / gc --orphaned`` consume this."""
+        from ..caching.provenance import (PLAN_MANIFEST_VERSION,
+                                          combine_fingerprints,
+                                          save_plan_manifest)
+        fps = self.node_fingerprints()
+        plan_id = combine_fingerprints(
+            "plan", *[fps[t.key] for t in self.terminals])
+        nodes = []
+        for node in self.nodes.values():
+            if node.kind == "source":
+                continue
+            cache = node.cache
+            # custom memo factories may return wrappers without a .path
+            cache_path = getattr(cache, "path", None)
+            nodes.append({
+                "label": node.label,
+                "kind": node.kind,
+                "fingerprint": fps[node.key],
+                "dir": os.path.basename(cache_path)
+                       if cache_path is not None else None,
+                "family": type(cache).__name__ if cache is not None else None,
+                "inputs": [i.label for i in node.inputs],
+            })
+        record = {
+            "format_version": PLAN_MANIFEST_VERSION,
+            "plan_id": plan_id,
+            "created_at": time.time(),
+            "pipelines": [repr(p) for p in self.pipelines],
+            "cache_backend": self.cache_backend,
+            "on_stale": self.on_stale,
+            "nodes": nodes,
+            "runs": [],
+        }
+        # re-planning the same pipeline set keeps its recorded history
+        prior = os.path.join(self.cache_dir, "plans", f"{plan_id}.json")
+        if os.path.exists(prior):
+            try:
+                import json
+                with open(prior, "r", encoding="utf-8") as f:
+                    old = json.load(f)
+                record["created_at"] = old.get("created_at",
+                                               record["created_at"])
+                record["runs"] = list(old.get("runs", []))
+            except Exception:
+                pass
+        self._plan_manifest_path = save_plan_manifest(self.cache_dir, record)
+
+    def _record_run(self, stats: PlanStats) -> None:
+        """Append one run record to the plan manifest (best-effort)."""
+        if self._plan_manifest_path is None:
+            return
+        try:
+            import json
+            with open(self._plan_manifest_path, "r", encoding="utf-8") as f:
+                record = json.load(f)
+            runs = record.setdefault("runs", [])
+            runs.append({
+                "at": time.time(),
+                "nodes_executed": stats.nodes_executed,
+                "cache_hits": stats.cache_hits,
+                "cache_misses": stats.cache_misses,
+                "n_shards": stats.n_shards,
+                "n_workers": stats.n_workers,
+                "wall_time_s": round(stats.wall_time_s, 4),
+            })
+            del runs[:-50]               # keep the tail bounded
+            from ..caching.backends import atomic_write_bytes
+            atomic_write_bytes(
+                self._plan_manifest_path,
+                json.dumps(record, indent=2, sort_keys=True).encode("utf-8"))
+        except Exception:
+            pass
 
     def close(self) -> None:
         """Close planner-inserted caches (flushes temporary stores)."""
@@ -507,6 +641,7 @@ class ExecutionPlan:
         stats.cache_misses = misses - cache_base[1]
         stats.wall_time_s = time.perf_counter() - t0
         self.stats = stats
+        self._record_run(stats)
 
     def _cache_counters(self) -> Tuple[int, int]:
         hits = misses = 0

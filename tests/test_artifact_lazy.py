@@ -1,0 +1,152 @@
+"""Dedicated coverage for caching/artifact.py and caching/lazy.py.
+
+The Artifact layer (paper §4.5) packages cache directories into a local
+hub (the network transport to HF/Zenodo is the only stubbed part); Lazy
+defers transformer construction until a cache actually misses.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.caching import KeyValueCache, Lazy
+from repro.caching.artifact import (Artifact, from_hub, hub_dir,
+                                    install_artifact_methods, to_hub)
+from repro.caching.base import resolve_transformer
+from repro.core import ColFrame, GenericTransformer
+from repro.ir import QueryExpander
+
+QUERIES = ColFrame({"qid": ["q1", "q2"], "query": ["alpha beta", "gamma"]})
+
+
+@pytest.fixture
+def hub(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_HUB", str(tmp_path / "hub"))
+    return tmp_path
+
+
+# -- artifact hub -------------------------------------------------------------
+
+def test_hub_dir_honours_env(hub):
+    d = hub_dir()
+    assert d == str(hub / "hub") and os.path.isdir(d)
+
+
+def test_to_hub_writes_tarball_and_metadata(hub, tmp_path):
+    src = str(tmp_path / "kv")
+    with KeyValueCache(src, QueryExpander(2), key=("qid", "query"),
+                       value=("query",)) as kv:
+        kv(QUERIES)
+        kv._temporary = False
+        dest = to_hub(kv, "grp/expansions")
+    assert os.path.exists(os.path.join(dest, "artifact.tar"))
+    with open(os.path.join(dest, "metadata.json")) as f:
+        meta = json.load(f)
+    assert meta["artifact_type"] == "KeyValueCache"
+    assert meta["module"] == "repro.caching.kv"
+    assert meta["format_version"] == 1 and meta["created"] > 0
+
+
+def test_hub_roundtrip_preserves_entries_and_manifest(hub, tmp_path):
+    src = str(tmp_path / "kv")
+    t = QueryExpander(2)
+    with KeyValueCache(src, t, key=("qid", "query"), value=("query",),
+                       fingerprint=t.fingerprint()) as kv:
+        kv(QUERIES)
+        kv._temporary = False
+        kv.to_hf("grp/expansions")       # grafted Artifact method
+    local = from_hub("grp/expansions")
+    # the manifest travelled with the directory -> provenance survives
+    from repro.caching import CacheManifest
+    m = CacheManifest.load(local)
+    assert m.fingerprint == t.fingerprint()
+    with KeyValueCache(local, t, key=("qid", "query"), value=("query",),
+                       fingerprint=t.fingerprint()) as kv2:
+        out = kv2(QUERIES)
+        assert kv2.stats.hits == len(QUERIES)
+        assert out["query"][0] == "alpha beta alpha"
+
+
+def test_from_hub_missing_artifact_raises(hub):
+    with pytest.raises(FileNotFoundError, match="not found in hub"):
+        from_hub("nobody/nothing")
+
+
+def test_to_hub_requires_a_directory(hub):
+    class Pathless:
+        pass
+    with pytest.raises(ValueError, match="no directory"):
+        to_hub(Pathless(), "grp/x")
+
+
+def test_artifact_from_hf_constructs_class(hub, tmp_path):
+    src = str(tmp_path / "kv")
+    with KeyValueCache(src, QueryExpander(2), key=("qid", "query"),
+                       value=("query",)) as kv:
+        kv(QUERIES)
+        kv._temporary = False
+        kv.to_zenodo("12345")
+    cache = Artifact.from_zenodo("12345", KeyValueCache,
+                                 key=("qid", "query"), value=("query",))
+    try:
+        assert isinstance(cache, KeyValueCache)
+        assert cache(QUERIES)["query"][0] == "alpha beta alpha"
+        assert cache.stats.hits == len(QUERIES)
+    finally:
+        cache.close()
+    # without cls, from_* return the local path
+    assert os.path.isdir(Artifact.from_zenodo("12345"))
+
+
+def test_install_artifact_methods_grafts():
+    class Custom:
+        pass
+    install_artifact_methods(Custom)
+    assert callable(Custom.to_hf) and callable(Custom.to_zenodo)
+
+
+# -- lazy ---------------------------------------------------------------------
+
+def test_lazy_defers_and_constructs_once():
+    built = []
+
+    def factory():
+        built.append(1)
+        return GenericTransformer(lambda x: x.assign(
+            query=np.array([q + "!" for q in x["query"].tolist()],
+                           dtype=object)), "bang")
+
+    lazy = Lazy(factory, name="bang")
+    assert not lazy.constructed and built == []
+    assert lazy.signature() == ("Lazy", "bang")       # placeholder identity
+    out = lazy(QUERIES)
+    assert out["query"][0] == "alpha beta!"
+    assert lazy.constructed and lazy.construction_count == 1
+    lazy(QUERIES)
+    lazy._resolve_lazy()
+    assert lazy.construction_count == 1               # at most once
+    # after construction the signature is the instance's
+    assert lazy.signature() == ("GenericTransformer", "bang")
+
+
+def test_resolve_transformer_passthrough_and_lazy():
+    assert resolve_transformer(None) is None
+    t = GenericTransformer(lambda x: x, "id")
+    assert resolve_transformer(t) is t
+    lazy = Lazy(lambda: t)
+    assert resolve_transformer(lazy) is t
+    assert lazy.constructed
+
+
+def test_unconstructed_lazy_skips_fingerprint_derivation(tmp_path):
+    """auto-deriving a fingerprint from an unconstructed Lazy would (a)
+    force construction and (b) record the placeholder signature; the
+    derivation helper must decline instead."""
+    from repro.caching import derive_fingerprint
+    t = GenericTransformer(lambda x: x, "id")
+    lazy = Lazy(lambda: t)
+    assert derive_fingerprint(lazy) is None
+    assert not lazy.constructed
+    lazy._resolve_lazy()
+    assert derive_fingerprint(lazy) == t.fingerprint()

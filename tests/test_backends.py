@@ -360,3 +360,52 @@ def test_backend_close_idempotent_through_cache(tmp_path):
         kv(TOPICS)
         b = kv.backend
     b.close()                            # backend already closed by cache
+
+
+# -- open_backend diagnostics (helpful errors) --------------------------------
+
+def test_open_backend_unknown_name_lists_registered_backends(tmp_path):
+    """The error for a typo'd selector must spell out every registered
+    backend so the fix is copy-pasteable."""
+    with pytest.raises(ValueError) as ei:
+        open_backend("sqlite3", str(tmp_path))       # classic typo
+    msg = str(ei.value)
+    assert "'sqlite3'" in msg
+    for name in BACKENDS:
+        assert repr(name) in msg
+    assert "CacheBackend instance" in msg            # custom-store hint
+
+
+def test_open_backend_rejects_non_string_selector(tmp_path):
+    with pytest.raises(TypeError, match="registry name"):
+        open_backend(42, str(tmp_path))
+
+
+def test_resolve_backend_name():
+    from repro.caching import resolve_backend_name
+    assert resolve_backend_name(None, "dbm") == "dbm"
+    assert resolve_backend_name("pickle", "dbm") == "pickle"
+    assert resolve_backend_name(MemoryLRUBackend(), "dbm") == "memory"
+    with pytest.raises(ValueError, match="registered backends"):
+        resolve_backend_name("redis", "dbm")
+
+
+# -- entry enumeration (drives `repro cache export`) --------------------------
+
+@pytest.mark.parametrize("name", ["memory", "dbm", "sqlite"])
+def test_backend_items_enumerates_all_entries(name, tmp_path):
+    b = open_backend(name, str(tmp_path))
+    pairs = [(f"k{i}".encode(), f"v{i}".encode()) for i in range(5)]
+    b.put_many(pairs)
+    assert sorted(b.items()) == sorted(pairs)
+    b.close()
+
+
+def test_pickle_backend_items_unsupported(tmp_path):
+    """Keys are stored hashed; enumeration must refuse loudly (export
+    falls back to raw-file mode for this backend)."""
+    b = open_backend("pickle", str(tmp_path))
+    b.put(b"k", b"v")
+    with pytest.raises(NotImplementedError, match="raw files"):
+        b.items()
+    b.close()
