@@ -1,7 +1,7 @@
-"""Planner benchmarks: vectorized hot paths, plan-vs-naive sharing, and
-the concurrent sharded executor.
+"""Planner benchmarks: vectorized hot paths, plan-vs-naive sharing,
+the optimizer pass pipeline, and the concurrent sharded executor.
 
-Three suites:
+Four suites:
 
 1. ``add_ranks``: the seed implementation looped over qid groups in
    Python; the vectorized version does one global lexsort.  Measured at
@@ -10,7 +10,10 @@ Three suites:
    (``bm25 % k >> rerank`` over four cutoffs — §5's experiment shape)
    plus a binary-operator fusion workload the stage-list trie cannot
    share (``a + b``, ``a ** c``, ``a % k`` all reusing retriever ``a``).
-3. Concurrent vs. sequential plan execution on a 2-branch
+3. Optimizer: rank-cutoff pushdown (``bm25 % k >> rerank`` fused into
+   ``num_results=k``) and commutative CSE (``a + b`` shared with
+   ``b + a``), each asserting bit-identical results vs. naive.
+4. Concurrent vs. sequential plan execution on a 2-branch
    shared-retriever workload whose stages carry simulated per-query
    model latency (``time.sleep`` releases the GIL exactly like the
    I/O / BLAS / accelerator dispatch that dominates real pipelines).
@@ -18,13 +21,17 @@ Three suites:
    CI smoke mode, where runner timing is noisy).
 
 ``--quick`` shrinks the workloads for the CI smoke job; ``--json PATH``
-dumps every row plus the concurrent run's ``PlanStats`` (per-shard wall
-times, scheduler occupancy, speedup-vs-sequential) as a build artifact.
+dumps every row plus the concurrent run's ``PlanStats`` and the
+optimizer pass times as a build artifact.  ``--no-optimize`` plans with
+``optimize="none"`` — each row records planned vs. executed node counts
+and a deterministic result checksum, so the CI bench-smoke job can
+assert optimized execution does no more work and changes no bits.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import hashlib
 import json
 import time
 from typing import Dict, List, Optional
@@ -33,6 +40,25 @@ import numpy as np
 
 from repro.core import ColFrame, ExecutionPlan, GenericTransformer, add_ranks
 from repro.ir import InvertedIndex, msmarco_like
+
+
+def frame_checksum(frames: List[ColFrame]) -> str:
+    """Deterministic digest of result content under canonical row order
+    (per-qid bit-identity: same (qid, docno, score, rank) values)."""
+    h = hashlib.sha256()
+    for f in frames:
+        cols = [c for c in ("qid", "docno", "score", "rank")
+                if c in f.columns]
+        srt = f.sort_values([c for c in ("qid", "docno") if c in f.columns]) \
+            if len(f) else f
+        for c in cols:
+            col = srt[c]
+            if np.issubdtype(col.dtype, np.floating):
+                h.update(b"|".join(float(v).hex().encode()
+                                   for v in col.tolist()))
+            else:
+                h.update(repr(col.tolist()).encode())
+    return h.hexdigest()[:16]
 
 
 # -- the seed per-qid loop, kept verbatim for comparison --------------------
@@ -90,7 +116,40 @@ def bench_add_ranks(n_queries: int = 10_000, n_docs: int = 100,
             "speedup": round(speedup, 1)}
 
 
-def bench_plan_sharing() -> List[Dict]:
+def _plan_row(name: str, systems, topics, optimize: str = "all",
+              sort_check: bool = True) -> Dict:
+    """Run ``systems`` naively and through the planner; assert the
+    transparency invariant; return a row with node counts, optimizer
+    pass times and the canonical result checksum."""
+    t0 = time.perf_counter()
+    naive = [s(topics) for s in systems]
+    t_naive = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    plan = ExecutionPlan(systems, optimize=optimize)
+    outs, stats = plan.run(topics)
+    t_plan = time.perf_counter() - t0
+    for got, want in zip(outs, naive):
+        cols = [c for c in ("qid", "docno", "score") if c in want.columns]
+        if sort_check:
+            assert got.sort_values(["qid", "docno"]).equals(
+                want.sort_values(["qid", "docno"]), cols=cols)
+        else:
+            assert got.equals(want, cols=cols)
+    return {"name": name,
+            "t_naive_s": round(t_naive, 4),
+            "t_plan_s": round(t_plan, 4),
+            "speedup": round(t_naive / max(t_plan, 1e-9), 2),
+            "invocations_naive": stats.nodes_total,
+            "nodes_planned": stats.nodes_planned,
+            "invocations_plan": stats.nodes_executed,
+            "saved": stats.stage_invocations_saved,
+            "nodes_eliminated": stats.nodes_eliminated,
+            "cutoffs_pushed": stats.cutoffs_pushed,
+            "pass_times_s": stats.pass_times_s,
+            "result_checksum": frame_checksum(outs)}
+
+
+def bench_plan_sharing(optimize: str = "all") -> List[Dict]:
     corpus = msmarco_like(1, scale=0.1)
     index = InvertedIndex.build(corpus.get_corpus_iter())
     topics = corpus.get_topics()
@@ -101,43 +160,46 @@ def bench_plan_sharing() -> List[Dict]:
     rerank = GenericTransformer(
         lambda inp: add_ranks(inp.assign(score=inp["score"] * 1.1)), "rerank")
     systems = [bm25 % k >> rerank for k in (20, 50, 100, 200)]
-    t0 = time.perf_counter()
-    naive = [s(topics) for s in systems]
-    t_naive = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    outs, stats = ExecutionPlan(systems).run(topics)
-    t_plan = time.perf_counter() - t0
-    for got, want in zip(outs, naive):        # transparency invariant
-        assert got.equals(want, cols=["qid", "docno", "score"])
-    rows.append({"name": "table2_style_4cutoffs",
-                 "t_naive_s": round(t_naive, 4),
-                 "t_plan_s": round(t_plan, 4),
-                 "speedup": round(t_naive / max(t_plan, 1e-9), 2),
-                 "invocations_naive": stats.nodes_total,
-                 "invocations_plan": stats.nodes_executed,
-                 "saved": stats.stage_invocations_saved})
+    rows.append(_plan_row("table2_style_4cutoffs", systems, topics,
+                          optimize, sort_check=False))
 
     # binary-operator fusion: a shared under +, **, % — opaque to stages_of
     a = index.bm25(num_results=100)
     b = index.bm25(num_results=100, k1=2.0)
-    systems = [a + b, a ** b, a % 10, a]
-    t0 = time.perf_counter()
-    naive = [s(topics) for s in systems]
-    t_naive = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    outs, stats = ExecutionPlan(systems).run(topics)
-    t_plan = time.perf_counter() - t0
-    for got, want in zip(outs, naive):
-        cols = [c for c in ("qid", "docno", "score") if c in want.columns]
-        assert got.sort_values(["qid", "docno"]).equals(
-            want.sort_values(["qid", "docno"]), cols=cols)
-    rows.append({"name": "binary_operator_fusion",
-                 "t_naive_s": round(t_naive, 4),
-                 "t_plan_s": round(t_plan, 4),
-                 "speedup": round(t_naive / max(t_plan, 1e-9), 2),
-                 "invocations_naive": stats.nodes_total,
-                 "invocations_plan": stats.nodes_executed,
-                 "saved": stats.stage_invocations_saved})
+    rows.append(_plan_row("binary_operator_fusion",
+                          [a + b, a ** b, a % 10, a], topics, optimize))
+    return rows
+
+
+def bench_optimizer(optimize: str = "all") -> List[Dict]:
+    """Optimizer-specific workloads: cutoff pushdown into retriever
+    depth, and commutative normalization + CSE (``a + b`` vs ``b + a``)."""
+    corpus = msmarco_like(1, scale=0.1)
+    index = InvertedIndex.build(corpus.get_corpus_iter())
+    topics = corpus.get_topics()
+    rows = []
+
+    # pushdown: a deep retriever whose results are cut before reranking
+    bm25 = index.bm25(num_results=500)
+    rerank = GenericTransformer(
+        lambda inp: add_ranks(inp.assign(score=inp["score"] * 1.1)),
+        "rerank", rank_preserving=True)
+    row = _plan_row("cutoff_pushdown", [bm25 % 10 >> rerank], topics,
+                    optimize)
+    rows.append(row)
+    if optimize == "all":
+        assert row["cutoffs_pushed"] == 1, \
+            f"pushdown did not fire: {row}"
+
+    # commutative sharing: the same reranker over a + b and b + a
+    a = index.bm25(num_results=100)
+    b = index.bm25(num_results=100, k1=2.0)
+    row = _plan_row("commutative_cse",
+                    [(a + b) >> rerank, (b + a) >> rerank], topics, optimize)
+    rows.append(row)
+    if optimize == "all":
+        # a, b, one combine, one rerank — the commuted twin merged away
+        assert row["nodes_planned"] == 4, f"commutative CSE missed: {row}"
     return rows
 
 
@@ -173,7 +235,8 @@ def _simulated_stage(name: str, per_row_s: float, shift: float,
 def bench_concurrent_executor(quick: bool = False,
                               n_shards: int = 4,
                               max_workers: int = 4,
-                              cache_dir: Optional[str] = None) -> Dict:
+                              cache_dir: Optional[str] = None,
+                              optimize: str = "all") -> Dict:
     """2-branch shared-retriever workload: ``retr >> rerankA`` and
     ``retr >> rerankB``.  Sequentially the three nodes serialize; the
     concurrent executor overlaps the two rerankers and all shards.
@@ -195,9 +258,11 @@ def bench_concurrent_executor(quick: bool = False,
     rerank_b = _simulated_stage("sim_rerankB", per_row, 2.0)
     systems = [retr >> rerank_a, retr >> rerank_b]
 
-    with ExecutionPlan(systems, cache_dir=cache_dir) as plan:
+    with ExecutionPlan(systems, cache_dir=cache_dir,
+                       optimize=optimize) as plan:
         seq_out, seq_stats = plan.run(topics)
-    with ExecutionPlan(systems, cache_dir=cache_dir) as plan:
+    with ExecutionPlan(systems, cache_dir=cache_dir,
+                       optimize=optimize) as plan:
         conc_out, conc_stats = plan.run(
             topics, n_shards=n_shards, max_workers=max_workers)
     for got, want in zip(conc_out, seq_out):
@@ -236,13 +301,16 @@ def bench_concurrent_executor(quick: bool = False,
     return row
 
 
-def run(quick: bool = False, cache_dir: Optional[str] = None) -> List[Dict]:
+def run(quick: bool = False, cache_dir: Optional[str] = None,
+        optimize: str = "all") -> List[Dict]:
     if quick:
         rows = [bench_add_ranks(2_000, 50, min_speedup=1.0)]
     else:
         rows = [bench_add_ranks()]
-    rows.extend(bench_plan_sharing())
-    rows.append(bench_concurrent_executor(quick=quick, cache_dir=cache_dir))
+    rows.extend(bench_plan_sharing(optimize=optimize))
+    rows.extend(bench_optimizer(optimize=optimize))
+    rows.append(bench_concurrent_executor(quick=quick, cache_dir=cache_dir,
+                                          optimize=optimize))
     return rows
 
 
@@ -252,11 +320,16 @@ def main(argv: Optional[List[str]] = None):
                     help="shrunk workloads + relaxed floors (CI smoke)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write rows + concurrent PlanStats as JSON")
+    ap.add_argument("--no-optimize", action="store_true",
+                    help="plan with optimize='none' (naive forest) — the "
+                         "CI bench-smoke job diffs node counts and result "
+                         "checksums against the optimized run")
     ap.add_argument("--cache-dir", metavar="DIR", default=None,
                     help="run the concurrent suite against a persistent "
                          "planner cache dir (cold/warm cache-compat CI)")
     args = ap.parse_args(argv)
-    rows = run(quick=args.quick, cache_dir=args.cache_dir)
+    optimize = "none" if args.no_optimize else "all"
+    rows = run(quick=args.quick, cache_dir=args.cache_dir, optimize=optimize)
     plan_stats = None
     for block in rows:
         plan_stats = block.pop("_plan_stats", plan_stats)
@@ -265,7 +338,8 @@ def main(argv: Optional[List[str]] = None):
         print(",".join(str(block[c]) for c in cols))
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"rows": rows, "plan_stats": plan_stats}, f, indent=2)
+            json.dump({"rows": rows, "optimize": optimize,
+                       "plan_stats": plan_stats}, f, indent=2)
         print(f"[wrote {args.json}]")
     return rows
 

@@ -58,3 +58,13 @@ a, b = bm25 % 20, index.bm25(num_results=100, k1=2.0) % 20
 with ExecutionPlan([a + b, a ** b, a]) as plan:
     outs, stats = plan.run(dataset.get_topics())
     print("plan:", stats)
+
+# 8. the plan is a compiled artifact: explain() shows the optimized DAG
+#    — per-node fingerprints, inserted cache families, and which
+#    optimizer pass (normalize / cse / pushdown / cache-prune) touched
+#    each node.  `b + a` below shares the `a + b` node via commutative
+#    normalization + CSE, and the lone `% 5` fuses into the retriever's
+#    num_results via cutoff pushdown.
+with ExecutionPlan([a + b, b + a,
+                    index.bm25(num_results=500, b=0.8) % 5]) as plan:
+    print(plan.explain())

@@ -73,6 +73,34 @@ class RetrieverCache(CacheTransformer):
     def __len__(self) -> int:
         return len(self._backend)
 
+    # -- store-only probe (cache-aware pruning, core/rewrite.py) -----------
+    def serve_from_store(self, inp: ColFrame) -> Optional[ColFrame]:
+        """Serve the full result from cached entries alone, or ``None``
+        when any key misses — never computes.
+
+        Sound as a stand-in for ``transform`` on *any* frame carrying
+        the same key-column values, because the output is assembled
+        purely from stored rows (input columns never leak into it):
+        the planner probes with the input of a deferred augment-only
+        chain and only executes the chain when this returns ``None``.
+        Counts hits only on success (a failed probe is retried by the
+        normal miss path, which does its own accounting).
+        """
+        if len(inp) == 0:
+            return inp
+        if any(c not in inp for c in self.key_cols):
+            return None                  # probe frame lacks key columns
+        key_tuples = inp.key_tuples(list(self.key_cols))
+        hashes = [self._hash_key(k) for k in key_tuples]
+        blobs = self._backend.get_many(hashes)
+        if any(b is None for b in blobs):
+            return None
+        self.stats.add(hits=len(hashes))
+        all_rows: List[dict] = []
+        for b in blobs:
+            all_rows.extend(self._decode_frame(b))
+        return ColFrame.from_dicts(all_rows)
+
     # -- transform ----------------------------------------------------------
     def transform(self, inp: ColFrame) -> ColFrame:
         if len(inp) == 0:

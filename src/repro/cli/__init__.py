@@ -1,9 +1,12 @@
 """``repro`` command line (also invocable as ``python -m repro.cli``).
 
-Subcommands register themselves on the top-level parser; the first one
-is ``repro cache`` (``cli/cache.py``) — inspection, verification,
-garbage collection and export/import of cache directories built on the
-provenance manifests of ``caching/provenance.py``.
+Subcommands register themselves on the top-level parser:
+
+* ``repro cache`` (``cli/cache.py``) — inspection, verification,
+  garbage collection and export/import of cache directories built on
+  the provenance manifests of ``caching/provenance.py``;
+* ``repro plan`` (``cli/plan.py``) — render recorded execution plans
+  with the same ASCII tree as ``ExecutionPlan.explain()``.
 """
 from __future__ import annotations
 
@@ -19,7 +22,9 @@ def build_parser() -> argparse.ArgumentParser:
         description="Precomputation & caching in IR experiments — tooling")
     sub = ap.add_subparsers(dest="command", required=True)
     from . import cache as _cache
+    from . import plan as _plan
     _cache.register(sub)
+    _plan.register(sub)
     return ap
 
 

@@ -10,6 +10,8 @@ from .pipeline import (Transformer, Indexer, Compose, RankCutoff,
 from .precompute import (longest_common_prefix, split_on_prefix,
                          run_with_precompute, PrefixTrie, run_with_trie,
                          PrecomputeStats)
+from .ir import IRNode, PlanGraph, lower, render_explain
+from .rewrite import OPTIMIZER_PASSES, PassStats
 from .plan import ExecutionPlan, PlanNode, PlanStats, plan_size
 from .compile_opt import compile_pipeline
 from .measures import Measure, parse_measure, evaluate
@@ -24,6 +26,8 @@ __all__ = [
     "longest_common_prefix", "split_on_prefix", "run_with_precompute",
     "PrefixTrie", "run_with_trie", "PrecomputeStats",
     "ExecutionPlan", "PlanNode", "PlanStats", "plan_size",
+    "IRNode", "PlanGraph", "lower", "render_explain",
+    "OPTIMIZER_PASSES", "PassStats",
     "compile_pipeline", "Measure", "parse_measure", "evaluate",
     "Experiment", "ExperimentResult",
 ]

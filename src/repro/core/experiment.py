@@ -155,6 +155,7 @@ def Experiment(
     cache_dir: Optional[str] = None,       # plan mode: auto-insert caches
     cache_backend: Optional[str] = None,   # plan mode: backend registry name
     on_stale: str = "error",               # plan mode: stale-cache policy
+    optimize: Any = "all",                 # plan mode: optimizer pass knob
     n_shards: Optional[int] = None,        # plan mode: concurrent executor
     max_workers: Optional[int] = None,
     baseline: Optional[int] = None,
@@ -179,8 +180,9 @@ def Experiment(
     picks the policy when a cache directory's recorded provenance
     fingerprint mismatches — see ``caching/provenance.py``).  In plan mode
     ``n_shards`` / ``max_workers`` enable the concurrent sharded
-    executor.  All three execute through the planner; results are
-    identical.
+    executor and ``optimize`` selects the optimizer passes
+    (``"all"`` / ``"none"`` / list of names — see ``core/rewrite.py``).
+    All three execute through the planner; results are identical.
     """
     topics = ColFrame.coerce(topics)
     qrels = ColFrame.coerce(qrels)
@@ -201,7 +203,7 @@ def Experiment(
             from .plan import ExecutionPlan
             with ExecutionPlan(systems, cache_dir=cache_dir,
                                cache_backend=cache_backend,
-                               on_stale=on_stale) as plan:
+                               on_stale=on_stale, optimize=optimize) as plan:
                 outs, stats = plan.run(topics, batch_size=batch_size,
                                        n_shards=n_shards,
                                        max_workers=max_workers)

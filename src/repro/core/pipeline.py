@@ -179,6 +179,19 @@ class Transformer:
     #: partition the query frame (``core/plan.py``), like ``batch_size``
     #: callers must refuse to batch them.
     shardable: bool = True
+    #: declares that ``RankCutoff`` commutes through this stage: it is a
+    #: per-row mapping (rows 1:1, no reordering) that preserves the
+    #: per-qid ranking — same (qid, docno, rank) — so ``t >> X >> % k``
+    #: equals ``t >> % k >> X``.  The optimizer (``core/rewrite.py``)
+    #: uses this to push rank cutoffs toward retrievers.  Stages whose
+    #: score map can reorder ties must leave this False.
+    rank_preserving: bool = False
+    #: declares that the output is the input frame plus extra columns —
+    #: existing columns, row count and row order are untouched (e.g. a
+    #: text loader).  Implies ``rank_preserving``-like row stability and
+    #: lets cache-aware pruning defer the stage behind a warm
+    #: downstream cache whose keys the stage cannot alter.
+    augment_only: bool = False
 
     # -- execution -----------------------------------------------------
     def transform(self, inp: ColFrame) -> ColFrame:
@@ -215,6 +228,16 @@ class Transformer:
         misses — corpus versions, checkpoint paths, model revisions —
         so caches of this transformer invalidate when they change."""
         return ()
+
+    # -- optimizer hooks (core/rewrite.py) -------------------------------
+    def with_cutoff(self, k: int) -> Optional["Transformer"]:
+        """Absorb a downstream ``RankCutoff(k)``: return a transformer
+        equivalent to ``self >> RankCutoff(k)`` (return ``self`` when
+        this stage already emits at most ``k`` results per query), or
+        ``None`` when the cutoff cannot be absorbed.  Retrievers with a
+        ``num_results`` knob override this so the optimizer's pushdown
+        pass fuses ``% k`` into the retrieval depth itself."""
+        return None
 
     def __eq__(self, other) -> bool:
         return isinstance(other, Transformer) and self.signature() == other.signature()
@@ -331,6 +354,11 @@ class RankCutoff(Transformer):
     def signature(self) -> Tuple:
         return ("RankCutoff", self.k)
 
+    def with_cutoff(self, k: int) -> "RankCutoff":
+        """``% j >> % k`` is ``% min(j, k)``."""
+        return self if min(self.k, int(k)) == self.k \
+            else RankCutoff(min(self.k, int(k)))
+
 
 class _Binary(Transformer):
     """Binary operator node.
@@ -339,7 +367,15 @@ class _Binary(Transformer):
     ``combine(a, b)``; the execution planner (``core/plan.py``) calls
     ``combine`` directly on shared child results, so a retriever shared
     under ``a + b`` and ``a ** c`` executes once.
+
+    ``commutative=True`` declares ``combine(a, b)`` and ``combine(b, a)``
+    produce the same per-qid relation — same (qid, docno) rows with the
+    same scores/ranks, though possibly in a different row order — which
+    lets the optimizer's normalize pass share ``a + b`` with ``b + a``.
     """
+
+    #: combine(a, b) == combine(b, a) up to row order
+    commutative: bool = False
 
     def __init__(self, left: Transformer, right: Transformer):
         self.left = left
@@ -357,6 +393,8 @@ class _Binary(Transformer):
 
 class LinearCombine(_Binary):
     """``+`` — sum query-document scores of the two result lists."""
+
+    commutative = True                   # x + y == y + x per (qid, docno)
 
     def combine(self, a: ColFrame, b: ColFrame) -> ColFrame:
         return _combine_scores(a, b, lambda x, y: x + y)
@@ -395,6 +433,8 @@ class FeatureUnion(_Binary):
 
 class SetUnion(_Binary):
     """``|`` — set union of documents (scores/ranks dropped)."""
+
+    commutative = True                   # same (qid, docno) set either way
 
     def combine(self, a: ColFrame, b: ColFrame) -> ColFrame:
         merged = ColFrame.concat([a, b])
@@ -472,7 +512,8 @@ class GenericTransformer(Transformer):
 
     def __init__(self, fn, name: str, *, key_columns=(), value_columns=(),
                  one_to_many=False, cacheable=True, deterministic=True,
-                 shardable=True, params: Tuple = ()):
+                 shardable=True, rank_preserving=False, augment_only=False,
+                 params: Tuple = ()):
         self.fn = fn
         self.name = name
         self.params = tuple(params)
@@ -482,6 +523,8 @@ class GenericTransformer(Transformer):
         self.cacheable = cacheable
         self.deterministic = deterministic
         self.shardable = shardable
+        self.rank_preserving = rank_preserving
+        self.augment_only = augment_only
 
     def transform(self, inp: ColFrame) -> ColFrame:
         return ColFrame.coerce(self.fn(inp))

@@ -1,70 +1,65 @@
-"""Unified experiment planner: pipelines lowered into one shared DAG.
+"""ExecutionPlan — façade over the plan compiler.
 
 The paper develops two complementary directions: *implicit* prefix
 sharing inside ``Experiment`` (§3 — the LCP of Eq. 2, generalized to a
 prefix trie for the §6 ablation limitation) and *explicit* operation
 caches applied by hand (§4).  ``ExecutionPlan`` unifies both behind a
 single abstraction, following the "Trie-based Experiment Plans"
-follow-up (PAPERS.md): a set of pipelines is **lowered** into one DAG
-whose nodes are deduplicated by structural signature, then executed
-with each node run exactly once.
+follow-up (PAPERS.md), and is now a thin façade over a three-layer
+compiler:
 
-Improvements over the stage-list trie of ``precompute.py``:
+* **logical IR** (``core/ir.py``) — pipelines lower into a DAG forest,
+  one node per operator occurrence, with relation types and
+  ``shardable`` / ``rank_preserving`` / ``augment_only`` metadata
+  lifted from ``Transformer``;
+* **optimizer** (``core/rewrite.py``) — an ordered pass pipeline
+  selected by ``optimize=``: algebraic normalization (commutative
+  operands canonicalized), cross-pipeline CSE (identical subtrees
+  *anywhere* in the DAG execute once — beyond prefixes, the §6
+  resolution), ``RankCutoff`` pushdown into retriever ``num_results``
+  through rank-preserving stages, and cache-aware pruning that consults
+  the provenance manifests to defer work upstream of warm memo nodes;
+* **physical executor** (``core/executor.py``) — the sequential and
+  sharded-wavefront schedulers, semantics unchanged.
 
-* **Sharing through operator nodes** (§6 limitation, resolved): the
-  planner recurses into binary operators (``LinearCombine``,
-  ``FeatureUnion``, ``SetUnion``, ``SetIntersection``, ``Concatenate``)
-  and ``ScalarProduct``, so a retriever shared under ``a + b`` and
-  ``a ** c`` executes once.  ``stages_of`` treats those nodes as opaque
-  and re-executes ``a`` per pipeline.
-* **Planner-inserted memoization** (§4 + §6 future work): with a
-  ``cache_dir``, every node whose transformer declares sufficient
-  ``auto_cache`` metadata gets the matching explicit cache family
-  (KeyValueCache / ScorerCache / RetrieverCache) wrapped around it by
-  the planner — researchers no longer hand-wrap stages (§4's usability
-  caveat).  ``cache_backend`` selects the storage backend
-  (``caching/backends.py``); a custom ``memo_factory`` makes the whole
-  policy pluggable.
-* **Concurrent sharded execution**: once sharing is explicit in a plan,
-  the plan is also the natural unit of parallel scheduling (the
-  trie-based-plans observation).  ``run(..., n_shards=S,
-  max_workers=W)`` partitions the query frame into ``S`` qid-aligned
-  shards and executes the DAG in topological wavefronts on a thread
-  pool: independent branches (both sides of a ``combine``, sibling
-  rerankers over one retrieval) and independent shards run
-  concurrently; per-shard outputs merge back in shard order, so results
-  match sequential execution row-set-for-row-set with identical
-  scores/ranks (the cache-transparency invariant, property-tested in
-  ``tests/test_plan.py``).
-* **Plan-level accounting**: ``PlanStats`` extends ``PrecomputeStats``
-  with planned/executed node counts, cache hit/miss totals, per-node
-  wall times and — under concurrency — per-shard wall times and
-  scheduler occupancy, surfaced through ``Experiment`` results and
-  ``benchmarks/plan_bench.py``.
+``optimize="all"`` (default) preserves the sharing behaviour of earlier
+revisions; ``optimize="none"`` executes the naive forest (the paper's
+baseline); a list of pass names runs exactly those passes in order.
+The hard invariant — property-tested in ``tests/test_rewrite.py`` — is
+that optimizer-on and optimizer-off produce bit-identical per-qid
+results under both schedulers.
 
-``run_with_precompute``, ``run_with_trie`` and ``Experiment`` are thin
-wrappers over this module — the planner is the single execution path.
+``explain()`` renders the optimized plan as an ASCII tree (per-node
+fingerprint, cache family, which pass touched it); the same record is
+persisted in the plan manifest so ``repro plan explain`` round-trips
+the output from disk.
+
+``run_with_precompute``, ``run_with_trie`` and ``Experiment`` remain
+thin wrappers over this module — the planner is the single execution
+path.
 """
 from __future__ import annotations
 
 import hashlib
 import inspect
 import os
-import threading
 import time
-from collections import deque
-from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
-from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
-import numpy as np
-
+from .executor import (_Recorder, resolve_n_shards, run_concurrent,
+                       run_sequential)
 from .frame import ColFrame
-from .pipeline import (Compose, ScalarProduct, Transformer, _Binary,
-                       pipeline_hash)
-from .precompute import (PrecomputeStats, _run_stage, longest_common_prefix)
+from .ir import IRNode, PlanGraph, lower, plan_size, render_explain
+from .pipeline import Transformer, pipeline_hash
+from .precompute import PrecomputeStats, longest_common_prefix
+from .rewrite import (POST_MEMO_PASSES, PassStats, resolve_passes, run_pass)
 
 __all__ = ["ExecutionPlan", "PlanNode", "PlanStats", "plan_size"]
+
+#: backwards-compatible alias — plan nodes are IR nodes now
+PlanNode = IRNode
 
 
 @dataclass
@@ -75,6 +70,12 @@ class PlanStats(PrecomputeStats):
     cache_misses: int = 0
     node_times_s: Dict[str, float] = field(default_factory=dict)
     wall_time_s: float = 0.0
+    # -- optimizer ----------------------------------------------------------
+    optimizer_passes: List[str] = field(default_factory=list)
+    nodes_eliminated: int = 0            # removed by normalize+cse/pushdown
+    cutoffs_pushed: int = 0              # RankCutoffs absorbed or moved
+    nodes_pruned: int = 0                # warm-cache deferred nodes skipped
+    pass_times_s: Dict[str, float] = field(default_factory=dict)
     # -- concurrent executor -------------------------------------------------
     n_shards: int = 1                    # query-frame partitions executed
     n_workers: int = 1                   # thread-pool size
@@ -87,35 +88,17 @@ class PlanStats(PrecomputeStats):
         if self.n_shards > 1 or self.n_workers > 1:
             extra = (f" shards={self.n_shards} workers={self.n_workers} "
                      f"occupancy={self.occupancy:.2f}")
+        opt = ""
+        if self.nodes_eliminated or self.cutoffs_pushed or self.nodes_pruned:
+            opt = (f" eliminated={self.nodes_eliminated} "
+                   f"pushed={self.cutoffs_pushed} "
+                   f"pruned={self.nodes_pruned}")
         return (f"PlanStats(planned={self.nodes_planned} "
                 f"executed={self.nodes_executed} "
                 f"naive={self.nodes_total} "
                 f"saved={self.stage_invocations_saved} "
                 f"cache_hits={self.cache_hits} "
-                f"wall={self.wall_time_s:.3f}s{extra})")
-
-
-@dataclass
-class PlanNode:
-    """One deduplicated unit of work in the DAG."""
-    key: Tuple                           # canonical structural key
-    kind: str                            # "source" | "stage" | "combine" | "scale"
-    stage: Optional[Transformer]         # operator instance (None for source)
-    inputs: List["PlanNode"] = field(default_factory=list)
-    cache: Optional[Transformer] = None  # planner-inserted memo wrapper
-    label: str = ""                      # unique display label (see _label_nodes)
-
-
-def plan_size(expr: Transformer) -> int:
-    """Stage invocations of one *naive* execution of ``expr`` (binary
-    operators expand into 1 + both children, unlike ``stages_of``)."""
-    if isinstance(expr, Compose):
-        return sum(plan_size(s) for s in expr.stages)
-    if isinstance(expr, _Binary):
-        return 1 + plan_size(expr.left) + plan_size(expr.right)
-    if isinstance(expr, ScalarProduct):
-        return 1 + plan_size(expr.inner)
-    return 1
+                f"wall={self.wall_time_s:.3f}s{opt}{extra})")
 
 
 def _accepted_kwargs(factory: Callable[..., Any],
@@ -134,56 +117,8 @@ def _accepted_kwargs(factory: Callable[..., Any],
     return {k: v for k, v in wanted.items() if k in names}
 
 
-def _qid_runs_unique(qids: np.ndarray) -> bool:
-    """True when every qid forms one contiguous run — the property that
-    makes cutting at run boundaries preserve per-qid semantics."""
-    n = len(qids)
-    if n == 0:
-        return True
-    arr = qids
-    if arr.dtype == object or arr.dtype.kind in ("U", "S"):
-        arr = arr.astype(str)
-    change = np.empty(n, dtype=bool)
-    change[0] = True
-    change[1:] = arr[1:] != arr[:-1]
-    return int(change.sum()) == len(np.unique(arr))
-
-
-def _shard_bounds(frame: ColFrame, n_shards: int) -> List[Tuple[int, int]]:
-    """Partition ``frame`` into ≤ ``n_shards`` contiguous row ranges,
-    cutting only at qid-run boundaries so no query straddles a shard."""
-    n = len(frame)
-    if n == 0 or n_shards <= 1:
-        return [(0, n)]
-    if "qid" in frame:
-        q = frame["qid"]
-        arr = q.astype(str) if q.dtype == object or q.dtype.kind in ("U", "S") \
-            else q
-        cuts = np.nonzero(arr[1:] != arr[:-1])[0] + 1
-    else:
-        cuts = np.arange(1, n)
-    sel: List[int] = []
-    prev = 0
-    for i in range(1, n_shards):
-        target = round(i * n / n_shards)
-        j = int(np.searchsorted(cuts, max(target, prev + 1)))
-        cands = []
-        if j < len(cuts):
-            cands.append(int(cuts[j]))
-        if j > 0 and int(cuts[j - 1]) > prev:
-            cands.append(int(cuts[j - 1]))
-        if not cands:
-            continue
-        c = min(cands, key=lambda x: abs(x - target))
-        if prev < c < n:
-            sel.append(c)
-            prev = c
-    bounds = [0] + sel + [n]
-    return list(zip(bounds[:-1], bounds[1:]))
-
-
 class ExecutionPlan:
-    """Lower a pipeline set into a shared DAG and execute it.
+    """Lower a pipeline set into a shared DAG, optimize it, execute it.
 
     Parameters
     ----------
@@ -211,42 +146,89 @@ class ExecutionPlan:
         provenance fingerprint (``caching/provenance.py``): ``"error"``
         (default — raise ``StaleCacheError``), ``"recompute"`` (discard
         the stale entries) or ``"readonly"`` (serve them, never write).
+    optimize:
+        ``"all"`` (default) runs the full pass pipeline of
+        ``core/rewrite.py``; ``"none"`` executes the naive lowered
+        forest; a list of pass names (drawn from
+        ``repro.core.rewrite.OPTIMIZER_PASSES``) runs exactly those, in
+        the given order.
     """
 
     def __init__(self, pipelines: Sequence[Transformer], *,
                  cache_dir: Optional[str] = None,
                  cache_backend: Optional[str] = None,
                  memo_factory: Optional[Callable[..., Any]] = None,
-                 on_stale: str = "error"):
+                 on_stale: str = "error",
+                 optimize: Union[str, Sequence[str], None] = "all"):
         self.pipelines: List[Transformer] = list(pipelines)
         self.cache_dir = cache_dir
         self.cache_backend = cache_backend
         self._memo_factory = memo_factory
         self.on_stale = on_stale
-        self.source = PlanNode(key=("source",), kind="source", stage=None)
-        self.nodes: Dict[Tuple, PlanNode] = {self.source.key: self.source}
-        self.terminals: List[PlanNode] = [
-            self._lower(p, self.source) for p in self.pipelines]
+        self.optimize = optimize
+        passes = resolve_passes(optimize)
+
+        # -- layer 1: lowering ---------------------------------------------
+        self.graph: PlanGraph = lower(self.pipelines)
         self.nodes_total_naive = sum(plan_size(p) for p in self.pipelines)
-        self._all_shardable = all(
-            getattr(n.stage, "shardable", True)
-            for n in self.nodes.values() if n.kind == "stage")
-        self._label_nodes()
-        self._node_fps: Optional[Dict[Tuple, str]] = None
+
+        # -- layer 2: optimizer (pre-memo passes) --------------------------
+        pre = [name for name in passes if name not in POST_MEMO_PASSES]
+        self.pass_stats: List[PassStats] = [
+            run_pass(self.graph, name) for name in pre]
+        if "cse" in pre and any(p.name == "pushdown" and p.cutoffs_pushed
+                                for p in self.pass_stats):
+            # pushdown can make previously distinct subtrees structurally
+            # identical (e.g. `r % 3` fused next to a literal `r(n=3)`);
+            # one more normalize+cse round merges them so the "any
+            # identical subtree executes once" invariant holds
+            self.pass_stats += [run_pass(self.graph, name)
+                                for name in ("normalize", "cse")
+                                if name in pre]
+
+        self._node_fps: Optional[Dict[int, str]] = None
         self._plan_manifest_path: Optional[str] = None
         if (cache_dir is not None or memo_factory is not None
                 or cache_backend is not None):
             self._insert_memos()
+            # post-memo passes consult the freshly opened cache manifests
+            self.pass_stats += [run_pass(self.graph, name)
+                                for name in passes
+                                if name in POST_MEMO_PASSES]
+        self._label_nodes()
+        # the self-describing record is built lazily — fingerprinting
+        # every node is only worth paying for when something consumes it
+        # (explain(), to_record(), or a plan manifest)
+        self._record: Optional[Dict[str, Any]] = None
         if cache_dir is not None:
             self._write_plan_manifest()
         self.stats: Optional[PlanStats] = None   # last run
+
+    # -- compatibility views ------------------------------------------------
+    @property
+    def source(self) -> IRNode:
+        return self.graph.source
+
+    @property
+    def terminals(self) -> List[IRNode]:
+        return self.graph.terminals
+
+    @property
+    def nodes(self) -> Dict[Tuple, IRNode]:
+        """Key-addressed node view.  After CSE keys are unique; under
+        ``optimize="none"`` duplicate subtrees collapse in this *view*
+        only (the executor addresses nodes by instance)."""
+        out: Dict[Tuple, IRNode] = {}
+        for node in self.graph.nodes:
+            out.setdefault(node.key, node)
+        return out
 
     def _label_nodes(self) -> None:
         """Unique display labels: the same stage planned under two
         different prefixes is two nodes and must not share a
         ``node_times_s`` entry."""
         seen: Dict[str, int] = {}
-        for node in self.nodes.values():
+        for node in self.graph.nodes:
             if node.kind == "source":
                 node.label = "<source>"
                 continue
@@ -255,56 +237,27 @@ class ExecutionPlan:
             seen[base] = k + 1
             node.label = base if k == 0 else f"{base}#{k}"
 
-    # -- lowering ----------------------------------------------------------
-    def _node(self, key: Tuple, kind: str, stage: Transformer,
-              inputs: List[PlanNode]) -> PlanNode:
-        node = self.nodes.get(key)
-        if node is None:
-            node = PlanNode(key=key, kind=kind, stage=stage, inputs=inputs)
-            self.nodes[key] = node
-        return node
-
-    def _lower(self, expr: Transformer, inp: PlanNode) -> PlanNode:
-        """Recursively lower ``expr`` applied to ``inp``'s result."""
-        if isinstance(expr, Compose):
-            node = inp
-            for stage in expr.stages:
-                node = self._lower(stage, node)
-            return node
-        if isinstance(expr, _Binary):
-            left = self._lower(expr.left, inp)
-            right = self._lower(expr.right, inp)
-            key = ("combine", type(expr).__name__, left.key, right.key)
-            return self._node(key, "combine", expr, [left, right])
-        if isinstance(expr, ScalarProduct):
-            inner = self._lower(expr.inner, inp)
-            key = ("scale", expr.scalar, inner.key)
-            return self._node(key, "scale", expr, [inner])
-        key = ("stage", expr.signature(), inp.key)
-        return self._node(key, "stage", expr, [inp])
-
     # -- provenance --------------------------------------------------------
-    def node_fingerprints(self) -> Dict[Tuple, str]:
-        """Provenance fingerprint per plan node: the stage's transformer
-        fingerprint folded over the fingerprints of its input nodes, so
-        a config/code change anywhere upstream changes every downstream
-        node's fingerprint (``caching/provenance.py``).  Deterministic
-        across processes."""
+    def node_fingerprints(self) -> Dict[int, str]:
+        """Provenance fingerprint per plan node (id-keyed): the stage's
+        transformer fingerprint folded over the fingerprints of its
+        input nodes, so a config/code change anywhere upstream changes
+        every downstream node's fingerprint (``caching/provenance.py``).
+        Deterministic across processes."""
         if self._node_fps is None:
             from ..caching.auto import derive_fingerprint
             from ..caching.provenance import combine_fingerprints
-            fps: Dict[Tuple, str] = {
-                self.source.key: combine_fingerprints("plan-source")}
-            # self.nodes preserves insertion order, and _lower creates
-            # every input before its consumer — already topological
-            for node in self.nodes.values():
+            fps: Dict[int, str] = {
+                self.graph.source.id: combine_fingerprints("plan-source")}
+            # graph.nodes is topological — every input precedes its consumer
+            for node in self.graph.nodes:
                 if node.kind == "source":
                     continue
                 stage_fp = derive_fingerprint(node.stage) \
                     or combine_fingerprints("sig", repr(node.stage))
-                fps[node.key] = combine_fingerprints(
+                fps[node.id] = combine_fingerprints(
                     "node", node.kind, stage_fp,
-                    *[fps[i.key] for i in node.inputs])
+                    *[fps[i.id] for i in node.inputs])
             self._node_fps = fps
         return self._node_fps
 
@@ -318,7 +271,7 @@ class ExecutionPlan:
         if self.cache_backend is not None:
             kwargs["backend"] = self.cache_backend
         fps = self.node_fingerprints()
-        for node in self.nodes.values():
+        for node in self.graph.nodes:
             if node.kind != "stage":
                 continue
             path = None
@@ -331,48 +284,96 @@ class ExecutionPlan:
                 path = os.path.join(
                     self.cache_dir, pipeline_hash(node.stage) + "-" + digest)
             node.cache = factory(node.stage, path, **_accepted_kwargs(
-                factory, {**kwargs, "fingerprint": fps[node.key],
+                factory, {**kwargs, "fingerprint": fps[node.id],
                           "on_stale": self.on_stale}))
 
-    def _write_plan_manifest(self) -> None:
-        """Record this plan in ``<cache_dir>/plans/<plan_id>.json`` so the
-        cache directory is self-describing: which pipelines used it,
-        which node dirs belong to which DAG position, with what
-        provenance.  ``repro cache ls / gc --orphaned`` consume this."""
+    # -- explain / manifests ------------------------------------------------
+    def _build_record(self) -> Dict[str, Any]:
+        """The plan's self-describing record: structure, provenance,
+        optimizer accounting.  Written to the plan manifest and rendered
+        by ``explain()`` / ``repro plan explain`` (same renderer, so the
+        two round-trip)."""
         from ..caching.provenance import (PLAN_MANIFEST_VERSION,
-                                          combine_fingerprints,
-                                          save_plan_manifest)
+                                          combine_fingerprints)
         fps = self.node_fingerprints()
         plan_id = combine_fingerprints(
-            "plan", *[fps[t.key] for t in self.terminals])
+            "plan", *[fps[t.id] for t in self.graph.terminals])
         nodes = []
-        for node in self.nodes.values():
+        for node in self.graph.nodes:
             if node.kind == "source":
-                continue
+                continue                 # rendered implicitly as <source>
             cache = node.cache
             # custom memo factories may return wrappers without a .path
             cache_path = getattr(cache, "path", None)
             nodes.append({
+                "id": node.id,
                 "label": node.label,
                 "kind": node.kind,
-                "fingerprint": fps[node.key],
+                "relation": node.relation,
+                "fingerprint": fps[node.id],
                 "dir": os.path.basename(cache_path)
                        if cache_path is not None else None,
                 "family": type(cache).__name__ if cache is not None else None,
-                "inputs": [i.label for i in node.inputs],
+                "inputs": [i.id for i in node.inputs],
+                "touched_by": list(node.touched_by),
+                "inlined": node.inlined,
+                "probe_input": node.probe_input.id
+                               if node.probe_input is not None else None,
             })
-        record = {
+        agg = self._aggregate_pass_stats()
+        return {
             "format_version": PLAN_MANIFEST_VERSION,
             "plan_id": plan_id,
             "created_at": time.time(),
             "pipelines": [repr(p) for p in self.pipelines],
             "cache_backend": self.cache_backend,
             "on_stale": self.on_stale,
+            "terminals": [t.id for t in self.graph.terminals],
             "nodes": nodes,
+            "optimizer": {
+                "passes": [p.name for p in self.pass_stats],
+                "nodes_eliminated": agg["nodes_eliminated"],
+                "cutoffs_pushed": agg["cutoffs_pushed"],
+                "nodes_marked_prunable": agg["nodes_marked_prunable"],
+                "pass_stats": [p.as_dict() for p in self.pass_stats],
+            },
             "runs": [],
         }
+
+    def _aggregate_pass_stats(self) -> Dict[str, int]:
+        return {
+            "nodes_eliminated": sum(p.nodes_eliminated
+                                    for p in self.pass_stats),
+            "cutoffs_pushed": sum(p.cutoffs_pushed for p in self.pass_stats),
+            "nodes_marked_prunable": sum(p.nodes_marked_prunable
+                                         for p in self.pass_stats),
+        }
+
+    def explain(self) -> str:
+        """ASCII rendering of the optimized plan: one tree per pipeline
+        with per-node id, relation, provenance fingerprint, cache family
+        and the optimizer passes that touched the node.  Byte-identical
+        to ``repro plan explain`` over this plan's manifest."""
+        return render_explain(self.to_record())
+
+    def to_record(self) -> Dict[str, Any]:
+        """The plan-manifest record (see ``_build_record``), built on
+        first use."""
+        if self._record is None:
+            self._record = self._build_record()
+        return self._record
+
+    def _write_plan_manifest(self) -> None:
+        """Record this plan in ``<cache_dir>/plans/<plan_id>.json`` so the
+        cache directory is self-describing: which pipelines used it,
+        which node dirs belong to which DAG position, with what
+        provenance.  ``repro cache ls / gc --orphaned`` and
+        ``repro plan explain`` consume this."""
+        from ..caching.provenance import save_plan_manifest
+        record = self.to_record()
         # re-planning the same pipeline set keeps its recorded history
-        prior = os.path.join(self.cache_dir, "plans", f"{plan_id}.json")
+        prior = os.path.join(self.cache_dir, "plans",
+                             f"{record['plan_id']}.json")
         if os.path.exists(prior):
             try:
                 import json
@@ -397,6 +398,7 @@ class ExecutionPlan:
             runs.append({
                 "at": time.time(),
                 "nodes_executed": stats.nodes_executed,
+                "nodes_pruned": stats.nodes_pruned,
                 "cache_hits": stats.cache_hits,
                 "cache_misses": stats.cache_misses,
                 "n_shards": stats.n_shards,
@@ -413,7 +415,7 @@ class ExecutionPlan:
 
     def close(self) -> None:
         """Close planner-inserted caches (flushes temporary stores)."""
-        for node in self.nodes.values():
+        for node in self.graph.nodes:
             if node.cache is not None and hasattr(node.cache, "close"):
                 node.cache.close()
 
@@ -426,7 +428,7 @@ class ExecutionPlan:
 
     # -- analysis ----------------------------------------------------------
     def n_nodes(self) -> int:
-        return len(self.nodes) - 1       # exclude the source
+        return self.graph.n_nodes()
 
     # -- execution ---------------------------------------------------------
     def run(self, queries: Any, *, batch_size: Optional[int] = None,
@@ -437,7 +439,7 @@ class ExecutionPlan:
 
         Every node runs at most once per shard; results are identical to
         naive per-pipeline execution (the cache-transparency invariant,
-        asserted in tests/test_plan.py).
+        asserted in tests/test_plan.py and tests/test_rewrite.py).
 
         ``n_shards`` / ``max_workers`` enable the concurrent executor:
         the query frame is partitioned into qid-aligned shards and
@@ -455,182 +457,66 @@ class ExecutionPlan:
         """
         t0 = time.perf_counter()
         frame = ColFrame.coerce(queries)
-        shards = self._resolve_n_shards(frame, batch_size, n_shards,
-                                        max_workers)
+        shards = resolve_n_shards(self.graph, frame, batch_size, n_shards,
+                                  max_workers)
         if max_workers is not None:
             workers = max(1, int(max_workers))
         else:
             workers = min(32, shards) if shards > 1 else 1
+        cache_base = self._cache_counters()
+        stats = self._new_stats()
+        rec = _Recorder()
         if shards <= 1 and workers <= 1:
-            return self._run_sequential(frame, batch_size, t0)
-        return self._run_concurrent(frame, batch_size, shards, workers, t0)
+            outs = run_sequential(self.graph, frame, batch_size, rec)
+        else:
+            outs, bounds = run_concurrent(self.graph, frame, batch_size,
+                                          shards, workers, rec)
+            stats.n_shards = len(bounds)
+            stats.n_workers = workers
+        self._fill_exec_stats(stats, rec)
+        self._finalize_stats(stats, cache_base, t0)
+        if stats.n_shards > 1 or stats.n_workers > 1:
+            busy = sum(b - a for _, _, a, b in rec.records)
+            stats.occupancy = busy / (workers * stats.wall_time_s) \
+                if stats.wall_time_s > 0 else 0.0
+        return outs, stats
 
     def _new_stats(self) -> PlanStats:
+        agg = self._aggregate_pass_stats()
         return PlanStats(
             prefix_len=len(longest_common_prefix(self.pipelines)),
             n_pipelines=len(self.pipelines),
             nodes_total=self.nodes_total_naive,
-            nodes_planned=self.n_nodes())
+            nodes_planned=self.n_nodes(),
+            optimizer_passes=[p.name for p in self.pass_stats],
+            nodes_eliminated=agg["nodes_eliminated"],
+            cutoffs_pushed=agg["cutoffs_pushed"],
+            pass_times_s=self._pass_times())
 
-    def _resolve_n_shards(self, frame: ColFrame,
-                          batch_size: Optional[int],
-                          n_shards: Optional[int],
-                          max_workers: Optional[int]) -> int:
-        n = len(frame)
-        if n == 0:
-            return 1
-        if n_shards is not None:
-            want = int(n_shards)
-        elif max_workers is not None and int(max_workers) > 1:
-            want = -(-n // int(batch_size)) if batch_size else int(max_workers)
-        else:
-            return 1
-        want = max(1, min(want, n))
-        if want > 1 and not self._all_shardable:
-            # a stage declared shardable=False (cross-query statistics);
-            # partitioning the frame would change its results.  Keep one
-            # shard (branch-level parallelism via max_workers still
-            # applies).
-            return 1
-        if want > 1 and "qid" in frame \
-                and not _qid_runs_unique(frame["qid"]):
-            # a qid with non-contiguous rows cannot be cut without
-            # splitting its group; keep one shard
-            return 1
-        return want
+    def _pass_times(self) -> Dict[str, float]:
+        """Per-pass wall time, summed over repeated rounds of a pass."""
+        times: Dict[str, float] = {}
+        for p in self.pass_stats:
+            times[p.name] = round(times.get(p.name, 0.0) + p.time_s, 6)
+        return times
 
-    def _exec_node(self, node: PlanNode, ins: List[ColFrame],
-                   batch_size: Optional[int]) -> ColFrame:
-        if node.kind == "stage":
-            runner = node.cache if node.cache is not None else node.stage
-            if not getattr(node.stage, "shardable", True):
-                # batching partitions the frame exactly like sharding
-                # would — a cross-query stage must see it whole
-                return runner(ins[0])
-            return _run_stage(runner, ins[0], batch_size)
-        if node.kind == "scale":
-            return node.stage.apply(ins[0])
-        return node.stage.combine(ins[0], ins[1])          # combine
-
-    def _run_sequential(self, frame: ColFrame, batch_size: Optional[int],
-                        t0: float) -> Tuple[List[ColFrame], PlanStats]:
-        cache_base = self._cache_counters()
-        results: Dict[Tuple, ColFrame] = {self.source.key: frame}
-        stats = self._new_stats()
-
-        def evaluate(node: PlanNode) -> ColFrame:
-            memo = results.get(node.key)
-            if memo is not None:
-                return memo
-            ins = [evaluate(i) for i in node.inputs]
-            t1 = time.perf_counter()
-            out = self._exec_node(node, ins, batch_size)
-            stats.nodes_executed += 1
-            stats.node_times_s[node.label] = \
-                stats.node_times_s.get(node.label, 0.0) + \
-                (time.perf_counter() - t1)
-            results[node.key] = out
-            return out
-
-        outs = [evaluate(t) for t in self.terminals]
-        self._finalize_stats(stats, cache_base, t0)
-        return outs, stats
-
-    def _run_concurrent(self, frame: ColFrame, batch_size: Optional[int],
-                        n_shards: int, workers: int, t0: float,
-                        ) -> Tuple[List[ColFrame], PlanStats]:
-        """Sharded wavefront execution on a thread pool.
-
-        Each (node, shard) pair is one task; a task becomes ready when
-        its node's inputs have completed *for its shard*, so wavefronts
-        advance independently per shard and independent branches of one
-        shard run in parallel.  Python-level work holds the GIL, but IR
-        stages dominated by I/O, BLAS or accelerator dispatch release
-        it — those are exactly the stages worth sharding.
-        """
-        cache_base = self._cache_counters()
-        stats = self._new_stats()
-        bounds = _shard_bounds(frame, n_shards)
-        n_shards = len(bounds)
-        stats.n_shards = n_shards
-        stats.n_workers = workers
-
-        results: Dict[Tuple[Tuple, int], ColFrame] = {}
-        for s, (lo, hi) in enumerate(bounds):
-            results[(self.source.key, s)] = frame.take(np.arange(lo, hi))
-
-        children: Dict[Tuple, List[PlanNode]] = {}
-        indeg: Dict[Tuple[Tuple, int], int] = {}
-        for node in self.nodes.values():
-            if node.kind == "source":
-                continue
-            for inp in node.inputs:
-                children.setdefault(inp.key, []).append(node)
-            for s in range(n_shards):
-                indeg[(node.key, s)] = len(node.inputs)
-
-        ready: deque = deque()
-
-        def complete(key: Tuple, s: int) -> None:
-            for child in children.get(key, ()):
-                k = (child.key, s)
-                indeg[k] -= 1
-                if indeg[k] == 0:
-                    ready.append((child, s))
-
-        for s in range(n_shards):
-            complete(self.source.key, s)
-
-        records: List[Tuple[str, int, float, float]] = []
-        rec_lock = threading.Lock()
-
-        def exec_task(node: PlanNode, s: int) -> None:
-            ins = [results[(i.key, s)] for i in node.inputs]
-            t1 = time.perf_counter()
-            out = self._exec_node(node, ins, batch_size)
-            t2 = time.perf_counter()
-            results[(node.key, s)] = out
-            with rec_lock:
-                records.append((node.label, s, t1, t2))
-
-        with ThreadPoolExecutor(max_workers=workers) as pool:
-            futures: Dict[Any, Tuple[PlanNode, int]] = {}
-
-            def submit_ready() -> None:
-                while ready:
-                    node, s = ready.popleft()
-                    fut = pool.submit(exec_task, node, s)
-                    futures[fut] = (node, s)
-
-            submit_ready()
-            while futures:
-                done, _ = wait(set(futures), return_when=FIRST_COMPLETED)
-                for fut in done:
-                    node, s = futures.pop(fut)
-                    fut.result()                 # propagate task errors
-                    complete(node.key, s)
-                submit_ready()
-
-        outs = [ColFrame.concat([results[(t.key, s)]
-                                 for s in range(n_shards)])
-                for t in self.terminals]
-
+    def _fill_exec_stats(self, stats: PlanStats, rec: _Recorder) -> None:
         executed = set()
-        for label, s, a, b in records:
+        for label, s, a, b in rec.records:
             executed.add(label)
             stats.node_times_s[label] = \
                 stats.node_times_s.get(label, 0.0) + (b - a)
         stats.nodes_executed = len(executed)
-        for s in range(n_shards):
-            spans = [(a, b) for _, sh, a, b in records if sh == s]
-            stats.shard_times_s.append(
-                max(b for _, b in spans) - min(a for a, _ in spans)
-                if spans else 0.0)
-        busy = sum(b - a for _, _, a, b in records)
-        self._finalize_stats(stats, cache_base, t0)
-        stats.occupancy = busy / (workers * stats.wall_time_s) \
-            if stats.wall_time_s > 0 else 0.0
-        return outs, stats
+        # deferred (cache-prune) nodes whose chain never ran this run
+        stats.nodes_pruned = sum(
+            1 for n in self.graph.nodes
+            if n.inlined and n.label not in executed)
+        if stats.n_shards > 1:
+            for s in range(stats.n_shards):
+                spans = [(a, b) for _, sh, a, b in rec.records if sh == s]
+                stats.shard_times_s.append(
+                    max(b for _, b in spans) - min(a for a, _ in spans)
+                    if spans else 0.0)
 
     def _finalize_stats(self, stats: PlanStats,
                         cache_base: Tuple[int, int], t0: float) -> None:
@@ -645,7 +531,7 @@ class ExecutionPlan:
 
     def _cache_counters(self) -> Tuple[int, int]:
         hits = misses = 0
-        for node in self.nodes.values():
+        for node in self.graph.nodes:
             cs = getattr(node.cache, "stats", None)
             if cs is not None:
                 hits += cs.hits

@@ -136,6 +136,19 @@ class BM25Retriever(Transformer):
         return ("BM25Retriever", self.name, self.k1, self.b,
                 self.num_results, self.index.n_docs)
 
+    def with_cutoff(self, k: int) -> "BM25Retriever":
+        """Absorb a downstream ``RankCutoff(k)`` into the retrieval
+        depth (the optimizer's pushdown pass, ``core/rewrite.py``).
+        Sound because truncation is prefix-closed: the top-k of the
+        top-``num_results`` equals the global top-k for ``k <=
+        num_results`` — ``score_query`` resolves boundary score ties
+        deterministically by doc index, the same order ``lexsort``
+        imposes inside the returned ranking."""
+        if int(k) >= self.num_results:
+            return self                  # already at most k results
+        return BM25Retriever(self.index, k1=self.k1, b=self.b,
+                             num_results=int(k), name=self.name)
+
     def score_query(self, query: str) -> Tuple[np.ndarray, np.ndarray]:
         """Returns (doc_indices, scores) of the top-num_results docs."""
         idx = self.index
@@ -151,8 +164,16 @@ class BM25Retriever(Transformer):
             acc[ids] += w
         nz = np.nonzero(acc)[0]
         if len(nz) > self.num_results:
-            top = np.argpartition(-acc[nz], self.num_results)[:self.num_results]
-            nz = nz[top]
+            k = self.num_results
+            part = np.argpartition(-acc[nz], k - 1)
+            kth = acc[nz[part[k - 1]]]
+            # deterministic boundary: keep everything strictly above the
+            # k-th score, then the smallest doc indices among its ties —
+            # matching the lexsort tie order below, so top-k is a prefix
+            # of top-n for any n >= k (required by `% k` pushdown)
+            above = nz[acc[nz] > kth]
+            ties = np.sort(nz[acc[nz] == kth])
+            nz = np.concatenate([above, ties[:k - len(above)]])
         order = np.lexsort((nz, -acc[nz]))
         nz = nz[order]
         return nz, acc[nz]
@@ -177,6 +198,9 @@ class TextLoader(Transformer):
     input_columns = frozenset({"qid", "docno"})
     key_columns = ("docno",)
     value_columns = ("text",)
+    #: per-row column append: rows, order and existing columns untouched
+    augment_only = True
+    rank_preserving = True
 
     def __init__(self, text_map: Dict[str, str], name: str = "text_loader"):
         self.text_map = text_map

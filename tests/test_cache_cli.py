@@ -232,3 +232,47 @@ def test_python_m_repro_cli_verify(cache_root):
                        capture_output=True, text=True, env=env, timeout=180)
     assert p.returncode == 0, p.stderr[-2000:]
     assert "0 failure(s)" in p.stdout
+
+
+# -- --json scripting contract (stable key order, unchanged exit codes) ------
+
+def _assert_stable_json(raw: str):
+    """Output must be pure JSON with recursively sorted keys, so shell
+    pipelines can diff two invocations without canonicalizing first."""
+    doc = json.loads(raw)
+    assert raw.strip() == json.dumps(doc, indent=2, sort_keys=True)
+    return doc
+
+
+def test_ls_json_is_stable_and_pure(cache_root, capsys):
+    assert main(["cache", "ls", str(cache_root), "--json"]) == 0
+    doc = _assert_stable_json(capsys.readouterr().out)
+    assert set(doc) == {"root", "dirs", "plans"}
+    # repeated invocations are byte-identical (modulo nothing)
+    assert main(["cache", "ls", str(cache_root), "--json"]) == 0
+    assert json.loads(capsys.readouterr().out)["dirs"] == doc["dirs"]
+
+
+def test_verify_json_keeps_exit_codes(cache_root, capsys):
+    assert main(["cache", "verify", str(cache_root), "--json"]) == 0
+    doc = _assert_stable_json(capsys.readouterr().out)
+    assert doc["failed"] == 0 and doc["checked"] >= 4
+    assert all(r["problems"] == [] for r in doc["report"])
+    # corrupt one manifest: exit code flips to 1, report names the dir
+    node = _node_dirs(cache_root)[0]
+    mpath = os.path.join(str(cache_root), node, "manifest.json")
+    with open(mpath) as f:
+        text = f.read()
+    with open(mpath, "w") as f:
+        f.write(text.replace('"entry_count": 3', '"entry_count": 999'))
+    assert main(["cache", "verify", str(cache_root), "--json"]) == 1
+    doc = _assert_stable_json(capsys.readouterr().out)
+    assert doc["failed"] == 1
+    bad = [r for r in doc["report"] if r["problems"]]
+    assert bad[0]["dir"] == node
+
+
+def test_plan_explain_json_is_stable(cache_root, capsys):
+    assert main(["plan", "explain", str(cache_root), "--json"]) == 0
+    docs = _assert_stable_json(capsys.readouterr().out)
+    assert len(docs) == 1 and docs[0]["nodes"]

@@ -254,9 +254,9 @@ def test_node_fingerprints_fold_upstream(tmp_path):
     a = make_retriever("A")
     plan2 = ExecutionPlan([QueryExpander(2) >> a])
     plan3 = ExecutionPlan([QueryExpander(3) >> a])
-    fps2 = {n.label: plan2.node_fingerprints()[n.key]
+    fps2 = {n.label: plan2.node_fingerprints()[n.id]
             for n in plan2.nodes.values()}
-    fps3 = {n.label: plan3.node_fingerprints()[n.key]
+    fps3 = {n.label: plan3.node_fingerprints()[n.id]
             for n in plan3.nodes.values()}
     assert fps2["<source>"] == fps3["<source>"]
     # the expander differs AND the downstream retriever node differs
@@ -266,7 +266,7 @@ def test_node_fingerprints_fold_upstream(tmp_path):
     assert fps2[label_a] != fps3[label_a]
     # replanning is deterministic
     replan = ExecutionPlan([QueryExpander(2) >> a])
-    assert {n.label: replan.node_fingerprints()[n.key]
+    assert {n.label: replan.node_fingerprints()[n.id]
             for n in replan.nodes.values()} == fps2
 
 
