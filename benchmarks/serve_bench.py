@@ -1,0 +1,123 @@
+"""Online-serving benchmark: closed-loop request stream, cold vs warm.
+
+Stands up a :class:`~repro.serve.PipelineService` over the two-stage
+``bm25 % k >> text_loader >> mono_scorer`` pipeline and drives it with
+N closed-loop client threads (each submits one query at a time and
+waits — concurrency equals the client count, the service's
+micro-batching does the coalescing).  Two epochs over one cache
+directory:
+
+* **cold** — a fresh cache directory: every request pays retrieval and
+  the jitted reranker;
+* **warm** — a *new service instance* over the same directory
+  (provenance manifests re-validated once at its start).  Both epochs
+  run in one process, so JAX's compile cache stays warm across them —
+  the latency comparison shows the caching win on top of compilation;
+  the *correctness* gate is the miss count: a warm epoch whose reads
+  actually come from the store misses **zero** times (zipf traffic
+  only repeats topic-pool queries the cold epoch already cached).
+
+Reported per epoch: request p50/p99 latency, throughput, cache
+hits/misses + hit rate, micro-batch occupancy and per-node online
+latency — the request-level view of the paper's Table-2 mechanism.
+The CI ``serve-smoke`` job asserts ``warm p50 < cold p50`` AND
+``warm cache_misses == 0`` from the ``--json`` artifact (the second
+catches a broken warm-restart path that latency alone cannot).
+
+``--quick`` shrinks the workload for CI; ``--json PATH`` writes
+``{"rows": [...]}`` with one row per epoch.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+from typing import Dict, List, Optional
+
+from repro.serve import PipelineService, build_scenario, run_closed_loop
+
+
+def run_epoch(name: str, scenario, cache_dir: str, *, requests: int,
+              clients: int, max_batch: int, max_wait_ms: float,
+              workers: int, seed: int) -> Dict:
+    svc = PipelineService(scenario.pipeline, cache_dir=cache_dir,
+                          max_batch=max_batch, max_wait_ms=max_wait_ms,
+                          max_workers=workers)
+    try:
+        loop = run_closed_loop(svc, scenario, n_requests=requests,
+                               n_clients=clients, seed=seed)
+        summary = svc.stats.summary()
+        online = svc.online_stats.as_dict(svc.max_batch)
+    finally:
+        svc.close()
+    row = {"name": name, **loop,
+           "p50_ms": round(summary["p50_ms"], 4),
+           "p99_ms": round(summary["p99_ms"], 4),
+           "hit_rate": round(summary["hit_rate"], 4),
+           "cache_hits": online["cache_hits"],
+           "cache_misses": online["cache_misses"],
+           "batches": summary["batches"],
+           "batch_occupancy": online["batch_occupancy"],
+           "flush_size": online["flush_size"],
+           "flush_timeout": online["flush_timeout"],
+           "nodes": online["nodes"]}
+    print(f"[{name}] p50={row['p50_ms']}ms p99={row['p99_ms']}ms "
+          f"hit_rate={row['hit_rate']} "
+          f"throughput={row['throughput_rps']} req/s "
+          f"occupancy={row['batch_occupancy']}")
+    return row
+
+
+def main(argv: Optional[List[str]] = None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small workload for the CI smoke job")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write rows as a JSON artifact")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--cutoff", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--cache-dir", default=None,
+                    help="cache root (default: a temp dir per run)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    requests = args.requests or (120 if args.quick else 600)
+    scale = args.scale or (0.02 if args.quick else 0.05)
+
+    scenario = build_scenario("bm25-mono", scale=scale, cutoff=args.cutoff,
+                              num_results=100, seed=args.seed)
+    tmp = None
+    cache_dir = args.cache_dir
+    if cache_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="serve-bench-")
+        cache_dir = tmp.name
+
+    rows = []
+    for epoch in ("serve_cold", "serve_warm"):
+        rows.append(run_epoch(epoch, scenario, cache_dir,
+                              requests=requests, clients=args.clients,
+                              max_batch=args.max_batch,
+                              max_wait_ms=args.max_wait_ms,
+                              workers=args.workers, seed=args.seed))
+    cold, warm = rows
+    print(f"warm/cold p50: {warm['p50_ms']}/{cold['p50_ms']}ms "
+          f"({cold['p50_ms'] / max(warm['p50_ms'], 1e-9):.1f}x)")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "requests": requests, "scale": scale,
+                       "clients": args.clients, "max_batch": args.max_batch,
+                       "max_wait_ms": args.max_wait_ms}, f, indent=2)
+        print(f"[wrote {args.json}]")
+    if tmp is not None:
+        tmp.cleanup()
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -68,3 +68,24 @@ with ExecutionPlan([a + b, a ** b, a]) as plan:
 with ExecutionPlan([a + b, b + a,
                     index.bm25(num_results=500, b=0.8) % 5]) as plan:
     print(plan.explain())
+
+# 9. online serving: the SAME pipeline expression, compiled once and
+#    stood up as a service — concurrent submissions coalesce into
+#    micro-batches (flush on max_batch or max_wait_ms), requests
+#    sharing a query execute it once, and planner caches make repeat
+#    traffic cheap per request (the paper's Table-2 mechanism, online)
+from repro.serve import PipelineService
+
+with PipelineService(pipeline, cache_backend="memory",
+                     max_batch=16, max_wait_ms=2.0) as service:
+    topics = dataset.get_topics()
+    futures = [service.submit(qid, query)          # async submission
+               for qid, query in zip(topics["qid"].tolist(),
+                                     topics["query"].tolist())]
+    futures += [service.submit(topics["qid"][0],   # repeat traffic: hits
+                               topics["query"][0])]
+    for fut in futures:
+        fut.result()
+    print("service:", service.stats.summary())
+    print(service.explain())                       # plan tree + online
+                                                   # p50/p99 per node

@@ -232,6 +232,10 @@ class CacheBackend:
 
     # -- shared ------------------------------------------------------------
     def get(self, key: bytes) -> Optional[bytes]:
+        """Single-key lookup.  The default delegates to ``get_many``;
+        backends override it with a leaner path (one SELECT, one file
+        read) — the read-through fast path the serving layer leans on
+        for per-request lookups."""
         return self.get_many([key])[0]
 
     def put(self, key: bytes, value: bytes) -> None:
@@ -277,6 +281,13 @@ class MemoryLRUBackend(CacheBackend):
                 out.append(v)
             return out
 
+    def get(self, key: bytes) -> Optional[bytes]:
+        with self._lock:
+            v = self._data.get(key)
+            if v is not None:
+                self._data.move_to_end(key)
+            return v
+
     def put_many(self, items: Iterable[Tuple[bytes, bytes]]) -> None:
         with self._lock:
             for k, v in items:
@@ -312,6 +323,13 @@ class PickleDirBackend(CacheBackend):
     def _file_of(self, key: bytes) -> str:
         h = hashlib.sha256(key).hexdigest()
         return os.path.join(self._objdir, h[:2], h[2:] + ".bin")
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        try:
+            with open(self._file_of(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            return None
 
     def get_many(self, keys: Sequence[bytes]) -> List[Optional[bytes]]:
         out: List[Optional[bytes]] = []
@@ -466,6 +484,12 @@ class SQLiteBackend(CacheBackend):
                 for k, v in self._db.execute(q, chunk):
                     out[pos[bytes(k)]] = bytes(v)
         return out
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        with self._conn_lock:
+            row = self._db.execute(
+                "SELECT value FROM kv WHERE key = ?", (key,)).fetchone()
+        return bytes(row[0]) if row is not None else None
 
     def put_many(self, items: Iterable[Tuple[bytes, bytes]]) -> None:
         with self._conn_lock:

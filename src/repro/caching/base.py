@@ -127,6 +127,8 @@ class CacheTransformer(Transformer):
         self.path = path
         os.makedirs(self.path, exist_ok=True)
         self.stats = CacheStats()
+        #: per-call hit/miss counts, thread-local (see call_with_counts)
+        self._call_tls = threading.local()
         self.verify_fraction = float(verify_fraction)
         self.provenance_fingerprint = fingerprint
         self.on_stale = on_stale
@@ -244,6 +246,35 @@ class CacheTransformer(Transformer):
         self._manifest.entry_count = int(n)
         self._manifest.last_used_at = time.time()
         self._manifest.save(self.path)
+
+    # -- per-call accounting -------------------------------------------------
+    # ``stats`` is cumulative and shared: when several threads, shards
+    # or services use one cache, deriving a caller's hits/misses from
+    # counter *deltas* misattributes concurrent calls.  Families instead
+    # note each call's own counts into thread-local storage; callers
+    # that need per-call numbers (the serving layer, the streaming
+    # executor) read them back with ``pop_call_counts`` /
+    # ``call_with_counts`` — race-free because a transform call runs
+    # wholly on the calling thread.
+
+    def _note_call(self, hits: int, misses: int) -> None:
+        prev = getattr(self._call_tls, "counts", (0, 0))
+        self._call_tls.counts = (prev[0] + int(hits), prev[1] + int(misses))
+
+    def pop_call_counts(self) -> Tuple[int, int]:
+        """(hits, misses) accumulated by this thread's calls since the
+        last pop; resets to (0, 0)."""
+        counts = getattr(self._call_tls, "counts", (0, 0))
+        self._call_tls.counts = (0, 0)
+        return counts
+
+    def call_with_counts(self, inp: Any) -> Tuple[Any, int, int]:
+        """Run the cache and return ``(output, hits, misses)`` for THIS
+        call only, regardless of concurrent users of the same cache."""
+        self.pop_call_counts()
+        out = self(inp)
+        hits, misses = self.pop_call_counts()
+        return out, hits, misses
 
     # -- wrapped transformer -------------------------------------------------
     @property

@@ -156,6 +156,7 @@ class DenseScorerCache(CacheTransformer):
             miss_idx.append(i)
         self.stats.add(hits=len(inp) - len(miss_idx),
                        misses=len(miss_idx))
+        self._note_call(len(inp) - len(miss_idx), len(miss_idx))
 
         if miss_idx:
             t = self._require_transformer(len(miss_idx))

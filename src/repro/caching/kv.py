@@ -67,11 +67,42 @@ class KeyValueCache(CacheTransformer):
         cols = [frame[c].tolist() for c in self.key_cols]
         return [pickle_key(t) for t in zip(*cols)] if len(frame) else []
 
+    def _transform_single(self, inp: ColFrame,
+                          key: bytes) -> Optional[ColFrame]:
+        """Single-key read-through fast path (online serving): one
+        ``backend.get``, scalar column assignment — skips the batched
+        lookup plumbing and full-frame value assembly on a hit.
+        Returns ``None`` on a miss (the generic path then handles the
+        compute-once protocol)."""
+        blob = self._backend.get(key)
+        if blob is None:
+            return None
+        vals = unpickle_value(blob)
+        self.stats.add(hits=1)
+        self._note_call(1, 0)
+        out = inp
+        for ci, c in enumerate(self.value_cols):
+            v = vals[ci]
+            if isinstance(v, (int, float, np.floating, np.integer)):
+                col = np.asarray([v], dtype=np.float64)
+            else:
+                col = np.empty(1, dtype=object)
+                col[0] = v
+            out = out.assign(**{c: col})
+        return out
+
     def transform(self, inp: ColFrame) -> ColFrame:
         if len(inp) == 0:
             return inp
         keys = self._keys_of(inp)
-        found = self._backend.get_many(keys)
+        if len(inp) == 1 and self.verify_fraction == 0:
+            hit = self._transform_single(inp, keys[0])
+            if hit is not None:
+                return hit
+            found: List[Optional[bytes]] = [None]   # already probed —
+            # the compute-once recheck under the lock re-queries anyway
+        else:
+            found = self._backend.get_many(keys)
         miss_idx = [i for i, v in enumerate(found) if v is None]
 
         values: List[Optional[Tuple]] = \
@@ -80,6 +111,7 @@ class KeyValueCache(CacheTransformer):
         if miss_idx:
             miss_idx = self._fill_misses(inp, keys, values, miss_idx)
         self.stats.add(hits=len(keys) - len(miss_idx), misses=len(miss_idx))
+        self._note_call(len(keys) - len(miss_idx), len(miss_idx))
 
         if self.verify_fraction > 0 and len(keys) > len(miss_idx):
             self._verify(inp, keys, values, miss_idx)

@@ -96,18 +96,37 @@ class RetrieverCache(CacheTransformer):
         if any(b is None for b in blobs):
             return None
         self.stats.add(hits=len(hashes))
+        self._note_call(len(hashes), 0)
         all_rows: List[dict] = []
         for b in blobs:
             all_rows.extend(self._decode_frame(b))
         return ColFrame.from_dicts(all_rows)
 
     # -- transform ----------------------------------------------------------
+    def _transform_single(self, hashed: bytes) -> Optional[ColFrame]:
+        """Single-key read-through fast path (online serving): one
+        ``backend.get`` and one frame decode — no batched lookup lists,
+        no per-entry result bookkeeping.  ``None`` on a miss."""
+        blob = self._backend.get(hashed)
+        if blob is None:
+            return None
+        self.stats.add(hits=1)
+        self._note_call(1, 0)
+        return ColFrame.from_dicts(self._decode_frame(blob))
+
     def transform(self, inp: ColFrame) -> ColFrame:
         if len(inp) == 0:
             return inp
         key_tuples = inp.key_tuples(list(self.key_cols))
         hashes = [self._hash_key(k) for k in key_tuples]
-        blobs = self._backend.get_many(hashes)
+        if len(inp) == 1:
+            hit = self._transform_single(hashes[0])
+            if hit is not None:
+                return hit
+            blobs: List[Optional[bytes]] = [None]   # already probed —
+            # the compute-once recheck under the lock re-queries anyway
+        else:
+            blobs = self._backend.get_many(hashes)
         results: List[Optional[List[dict]]] = \
             [self._decode_frame(b) if b is not None else None for b in blobs]
         miss_idx = [i for i, b in enumerate(blobs) if b is None]
@@ -117,6 +136,7 @@ class RetrieverCache(CacheTransformer):
                                          miss_idx)
         self.stats.add(hits=len(hashes) - len(miss_idx),
                        misses=len(miss_idx))
+        self._note_call(len(hashes) - len(miss_idx), len(miss_idx))
 
         all_rows: List[dict] = []
         for rows in results:

@@ -6,7 +6,10 @@ Subcommands register themselves on the top-level parser:
   garbage collection and export/import of cache directories built on
   the provenance manifests of ``caching/provenance.py``;
 * ``repro plan`` (``cli/plan.py``) — render recorded execution plans
-  with the same ASCII tree as ``ExecutionPlan.explain()``.
+  with the same ASCII tree as ``ExecutionPlan.explain()``;
+* ``repro serve`` (``cli/serve.py``) — stand up a ``PipelineService``
+  over a registry pipeline and drive it with a closed-loop request
+  stream (micro-batching, planner caches, online latency stats).
 """
 from __future__ import annotations
 
@@ -23,8 +26,10 @@ def build_parser() -> argparse.ArgumentParser:
     sub = ap.add_subparsers(dest="command", required=True)
     from . import cache as _cache
     from . import plan as _plan
+    from . import serve as _serve
     _cache.register(sub)
     _plan.register(sub)
+    _serve.register(sub)
     return ap
 
 

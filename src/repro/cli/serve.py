@@ -1,0 +1,129 @@
+"""``repro serve`` — stand up a PipelineService and drive it.
+
+Builds a named pipeline from the serving registry
+(``repro.serve.registry``), compiles it once through the plan compiler,
+and runs a closed-loop synthetic request stream against it with N
+concurrent client threads — the online analogue of the offline
+benchmarks:
+
+* ``repro serve --pipeline bm25-mono --requests 400 --clients 4``
+* ``repro serve --pipeline bm25 --cache-dir .cache --explain``
+* ``repro serve --pipeline bm25-mono --json stats.json``
+
+With ``--cache-dir`` the planner inserts the §4 cache families per node
+(provenance manifests are validated once, at service start) so a second
+invocation against the same directory starts warm; ``--backend memory``
+alone enables in-process memoization for the run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, Optional
+
+__all__ = ["register", "cmd_serve", "serve_and_drive"]
+
+
+def register(subparsers) -> None:
+    p = subparsers.add_parser(
+        "serve", help="serve a registry pipeline with micro-batching",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    p.add_argument("--pipeline", default="bm25-mono",
+                   help="serving pipeline name (see repro.serve.registry; "
+                        "default: bm25-mono)")
+    p.add_argument("--scale", type=float, default=0.05,
+                   help="synthetic corpus scale (default 0.05)")
+    p.add_argument("--cutoff", type=int, default=10,
+                   help="rank cutoff of the retrieval stage")
+    p.add_argument("--num-results", type=int, default=100,
+                   help="retriever depth before the cutoff (pushdown "
+                        "fuses the two)")
+    p.add_argument("--requests", type=int, default=200)
+    p.add_argument("--clients", type=int, default=4,
+                   help="closed-loop client threads")
+    p.add_argument("--max-batch", type=int, default=16,
+                   help="micro-batch flush threshold")
+    p.add_argument("--max-wait-ms", type=float, default=2.0,
+                   help="micro-batch flush timeout")
+    p.add_argument("--workers", type=int, default=4,
+                   help="executor thread-pool size")
+    p.add_argument("--cache-dir", default=None,
+                   help="planner cache root (persists across runs)")
+    p.add_argument("--backend", default=None,
+                   help="cache backend registry name (memory/pickle/"
+                        "dbm/sqlite)")
+    p.add_argument("--no-optimize", action="store_true",
+                   help="serve the naive lowered plan (baseline)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--explain", action="store_true",
+                   help="print the compiled plan with online latency "
+                        "annotations after the run")
+    p.add_argument("--json", default=None, metavar="PATH", dest="json_out",
+                   help="write run statistics as JSON")
+    p.set_defaults(func=cmd_serve)
+
+
+def serve_and_drive(*, pipeline: str, scale: float, cutoff: int,
+                    num_results: int, requests: int, clients: int,
+                    max_batch: int, max_wait_ms: float, workers: int,
+                    cache_dir: Optional[str] = None,
+                    backend: Optional[str] = None,
+                    optimize: str = "all", seed: int = 0,
+                    explain: bool = False) -> Dict[str, Any]:
+    """Build the scenario, stand the service up, run the closed loop,
+    return a JSON-able stats record.  Shared by the CLI and the launch
+    driver."""
+    from ..serve import PipelineService, build_scenario, run_closed_loop
+
+    scenario = build_scenario(pipeline, scale=scale, cutoff=cutoff,
+                              num_results=num_results, seed=seed)
+    svc = PipelineService(scenario.pipeline, cache_dir=cache_dir,
+                          cache_backend=backend, optimize=optimize,
+                          max_batch=max_batch, max_wait_ms=max_wait_ms,
+                          max_workers=workers)
+    try:
+        loop = run_closed_loop(svc, scenario, n_requests=requests,
+                               n_clients=clients, seed=seed)
+        summary = svc.stats.summary()
+        record = {
+            "pipeline": pipeline,
+            "description": scenario.description,
+            "optimize": optimize,
+            "max_batch": max_batch,
+            "max_wait_ms": max_wait_ms,
+            **loop, **summary,
+            "online": svc.online_stats.as_dict(svc.max_batch),
+        }
+        explained = svc.explain() if explain else None
+    finally:
+        svc.close()
+    if explained is not None:
+        record["_explain"] = explained
+    return record
+
+
+def cmd_serve(args) -> int:
+    record = serve_and_drive(
+        pipeline=args.pipeline, scale=args.scale, cutoff=args.cutoff,
+        num_results=args.num_results, requests=args.requests,
+        clients=args.clients, max_batch=args.max_batch,
+        max_wait_ms=args.max_wait_ms, workers=args.workers,
+        cache_dir=args.cache_dir, backend=args.backend,
+        optimize="none" if args.no_optimize else "all",
+        seed=args.seed, explain=args.explain)
+    explained = record.pop("_explain", None)
+    print(f"served {record['requests']} requests from "
+          f"{record['clients']} clients in {record['wall_s']}s "
+          f"({record['throughput_rps']} req/s)")
+    print(f"p50={record['p50_ms']:.2f}ms p99={record['p99_ms']:.2f}ms "
+          f"hit_rate={record['hit_rate']:.3f} "
+          f"occupancy={record['online']['batch_occupancy']:.2f}")
+    if explained is not None:
+        print()
+        print(explained)
+    if args.json_out:
+        with open(args.json_out, "w", encoding="utf-8") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json_out}")
+    return 0

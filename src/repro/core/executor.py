@@ -1,16 +1,22 @@
 """Physical executors for optimized plan graphs (``core/ir.py``).
 
 The third layer of the plan compiler: schedulers that evaluate a
-:class:`~repro.core.ir.PlanGraph` over a query frame.  Two are
-provided, semantics identical (property-tested):
+:class:`~repro.core.ir.PlanGraph` over a query frame.  Three are
+provided; the offline two have identical semantics (property-tested):
 
 * :func:`run_sequential` — recursive post-order evaluation, one node at
   a time, results memoized per node instance;
 * :func:`run_concurrent` — the sharded wavefront scheduler: the query
   frame is partitioned into qid-aligned shards and (node, shard) tasks
-  run on a thread pool as their per-shard inputs complete.
+  run on a thread pool as their per-shard inputs complete;
+* :class:`StreamingExecutor` — the *online* mode: long-lived, fed by
+  concurrent request submissions that coalesce into micro-batches
+  (bounded queue, flush on ``max_batch`` or ``max_wait_ms``), each
+  flowing through the same DAG wavefront machinery as the offline
+  scheduler — a micro-batch takes the structural place of a shard, so
+  several batches can be in flight at different depths of the DAG.
 
-Both executors understand the ``cache-prune`` annotations of
+All executors understand the ``cache-prune`` annotations of
 ``core/rewrite.py``: a node with a ``probe_input`` is evaluated
 *lookup-first* — its memo cache is probed with the deferred chain's
 input, and the chain (``inline_chain``) only executes when the store
@@ -19,11 +25,13 @@ scheduling; they run inline inside their consumer's task.
 """
 from __future__ import annotations
 
+import queue as queue_mod
+import random
 import threading
 import time
 from collections import deque
-from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
-from typing import Any, Dict, List, Optional, Tuple
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -31,7 +39,9 @@ from .frame import ColFrame
 from .ir import IRNode, PlanGraph
 from .precompute import _run_stage
 
-__all__ = ["run_sequential", "run_concurrent", "resolve_n_shards"]
+__all__ = ["run_sequential", "run_concurrent", "resolve_n_shards",
+           "Reservoir", "NodeOnlineStats", "StreamStats",
+           "StreamingExecutor"]
 
 
 def _qid_runs_unique(qids: np.ndarray) -> bool:
@@ -135,6 +145,40 @@ class _Recorder:
             self.records.append((label, shard, t0, t1))
 
 
+class _NullRecorder(_Recorder):
+    """Drops records — the streaming executor keeps bounded per-node
+    reservoirs instead of an ever-growing record list."""
+
+    def add(self, label: str, shard: int, t0: float, t1: float) -> None:
+        pass
+
+
+_NULL_RECORDER = _NullRecorder()
+
+
+def _effective_inputs(node: IRNode) -> List[IRNode]:
+    """The inputs a scheduler must wait for.  Cache-prune: a probing
+    node waits on the deferred chain's *input*; the chain itself runs
+    inline inside this node's task."""
+    if node.probe_input is not None and node.cache is not None:
+        return [node.probe_input]
+    return node.inputs
+
+
+def _wave_edges(graph: PlanGraph
+                ) -> Tuple[List[IRNode], Dict[int, List[IRNode]]]:
+    """(schedulable nodes, input-id → consumers) — the wavefront edge
+    structure shared by the offline sharded scheduler and the streaming
+    executor.  Nodes are addressed by instance id throughout."""
+    schedulable = [n for n in graph.nodes
+                   if n.kind != "source" and not n.inlined]
+    children: Dict[int, List[IRNode]] = {}
+    for node in schedulable:
+        for inp in _effective_inputs(node):
+            children.setdefault(inp.id, []).append(node)
+    return schedulable, children
+
+
 def _exec_with_probe(node: IRNode, probe_frame: ColFrame,
                      batch_size: Optional[int], shard: int,
                      rec: _Recorder) -> ColFrame:
@@ -206,23 +250,11 @@ def run_concurrent(graph: PlanGraph, frame: ColFrame,
     for s, (lo, hi) in enumerate(bounds):
         results[(graph.source.id, s)] = frame.take(np.arange(lo, hi))
 
-    def effective_inputs(node: IRNode) -> List[IRNode]:
-        # cache-prune: a probing node waits on the chain's *input*; the
-        # deferred chain itself runs inline inside this node's task
-        if node.probe_input is not None and node.cache is not None:
-            return [node.probe_input]
-        return node.inputs
-
-    schedulable = [n for n in graph.nodes
-                   if n.kind != "source" and not n.inlined]
-    children: Dict[int, List[IRNode]] = {}
+    schedulable, children = _wave_edges(graph)
     indeg: Dict[Tuple[int, int], int] = {}
     for node in schedulable:
-        eff = effective_inputs(node)
-        for inp in eff:
-            children.setdefault(inp.id, []).append(node)
         for s in range(n_shards):
-            indeg[(node.id, s)] = len(eff)
+            indeg[(node.id, s)] = len(_effective_inputs(node))
 
     ready: deque = deque()
 
@@ -268,3 +300,553 @@ def run_concurrent(graph: PlanGraph, frame: ColFrame,
     outs = [ColFrame.concat([results[(t.id, s)] for s in range(n_shards)])
             for t in graph.terminals]
     return outs, bounds
+
+
+# ---------------------------------------------------------------------------
+# online / incremental mode — micro-batched streaming execution
+# ---------------------------------------------------------------------------
+
+class Reservoir:
+    """Bounded, thread-safe reservoir sample of a float stream.
+
+    Fixes the unbounded-growth failure mode of keeping every latency in
+    a list: memory is capped at ``capacity`` floats while percentiles
+    stay estimates of the *whole* stream (Algorithm R, deterministic
+    RNG so repeated runs are reproducible)."""
+
+    __slots__ = ("capacity", "count", "_buf", "_rng", "_lock")
+
+    def __init__(self, capacity: int = 2048, seed: int = 0):
+        self.capacity = max(1, int(capacity))
+        self.count = 0
+        self._buf: List[float] = []
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+
+    def add(self, value: float) -> None:
+        with self._lock:
+            self.count += 1
+            if len(self._buf) < self.capacity:
+                self._buf.append(float(value))
+            else:
+                j = self._rng.randrange(self.count)
+                if j < self.capacity:
+                    self._buf[j] = float(value)
+
+    def extend(self, values: Sequence[float]) -> None:
+        for v in values:
+            self.add(v)
+
+    def percentile(self, p: float) -> float:
+        with self._lock:
+            return float(np.percentile(self._buf, p)) if self._buf else 0.0
+
+    @property
+    def mean(self) -> float:
+        with self._lock:
+            return float(np.mean(self._buf)) if self._buf else 0.0
+
+    @property
+    def max(self) -> float:
+        with self._lock:
+            return float(np.max(self._buf)) if self._buf else 0.0
+
+    def snapshot(self) -> List[float]:
+        with self._lock:
+            return list(self._buf)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._buf)
+
+
+class NodeOnlineStats:
+    """Per-node accounting of the streaming executor: execution count,
+    rows processed, and a bounded latency reservoir."""
+
+    __slots__ = ("executions", "rows", "latency_ms", "_lock")
+
+    def __init__(self) -> None:
+        self.executions = 0
+        self.rows = 0
+        self.latency_ms = Reservoir(1024)
+        self._lock = threading.Lock()
+
+    def record(self, dt_ms: float, rows: int) -> None:
+        with self._lock:
+            self.executions += 1
+            self.rows += int(rows)
+        self.latency_ms.add(dt_ms)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"executions": self.executions, "rows": self.rows,
+                "p50_ms": round(self.latency_ms.percentile(50), 4),
+                "p99_ms": round(self.latency_ms.percentile(99), 4)}
+
+
+class StreamStats:
+    """Service-level accounting of the streaming executor: flush
+    triggers, queue depth, micro-batch occupancy, per-node online
+    latency, and cache hit/miss totals built from *per-call* counts."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.requests = 0
+        self.batches = 0
+        self.rows_in = 0                 # rows submitted (pre-coalesce)
+        self.rows_executed = 0           # unique rows after coalescing
+        self.flush_size = 0              # dispatches triggered by max_batch
+        self.flush_timeout = 0           # ... by max_wait_ms
+        self.flush_forced = 0            # ... by flush()/close()
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.queue_depth = Reservoir(1024)
+        self.batch_requests = Reservoir(1024)
+        self.nodes: Dict[str, NodeOnlineStats] = {}
+
+    def node(self, label: str) -> NodeOnlineStats:
+        with self._lock:
+            ns = self.nodes.get(label)
+            if ns is None:
+                ns = self.nodes[label] = NodeOnlineStats()
+            return ns
+
+    def record_batch(self, *, n_requests: int, rows_in: int,
+                     rows_executed: int, cause: str) -> None:
+        with self._lock:
+            self.requests += n_requests
+            self.batches += 1
+            self.rows_in += rows_in
+            self.rows_executed += rows_executed
+            if cause == "size":
+                self.flush_size += 1
+            elif cause == "timeout":
+                self.flush_timeout += 1
+            else:
+                self.flush_forced += 1
+        self.batch_requests.add(n_requests)
+
+    def add_cache_counts(self, hits: int, misses: int) -> None:
+        if hits or misses:
+            with self._lock:
+                self.cache_hits += hits
+                self.cache_misses += misses
+
+    def occupancy(self, max_batch: int) -> float:
+        """Mean micro-batch fill: requests per dispatch / ``max_batch``."""
+        return self.batch_requests.mean / max(1, max_batch)
+
+    def node_dicts(self) -> Dict[str, Dict[str, float]]:
+        with self._lock:
+            labels = list(self.nodes.items())
+        return {label: ns.as_dict() for label, ns in labels}
+
+    def as_dict(self, max_batch: Optional[int] = None) -> Dict[str, Any]:
+        out = {
+            "requests": self.requests, "batches": self.batches,
+            "rows_in": self.rows_in, "rows_executed": self.rows_executed,
+            "flush_size": self.flush_size,
+            "flush_timeout": self.flush_timeout,
+            "flush_forced": self.flush_forced,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "queue_depth_p50": round(self.queue_depth.percentile(50), 2),
+            "queue_depth_p99": round(self.queue_depth.percentile(99), 2),
+            "queue_depth_max": round(self.queue_depth.max, 2),
+            "nodes": self.node_dicts(),
+        }
+        if max_batch is not None:
+            out["batch_occupancy"] = round(self.occupancy(max_batch), 4)
+        return out
+
+
+def _freeze_value(v: Any) -> Any:
+    """A hashable, reliably-comparable stand-in for a row value — row
+    identity drives coalescing, and raw numpy arrays would make the
+    tuple comparison raise ('truth value of an array is ambiguous')."""
+    if isinstance(v, np.ndarray):
+        return ("__ndarray__", v.shape, str(v.dtype), v.tobytes())
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze_value(x) for x in v)
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze_value(x)) for k, x in v.items()))
+    if isinstance(v, np.generic):
+        return v.item()
+    return v
+
+
+class _StreamRequest:
+    __slots__ = ("rows", "qid_rows", "qid_orig", "qid_order", "future",
+                 "t0")
+
+    def __init__(self, rows: List[Dict[str, Any]]):
+        self.rows = rows
+        # per-qid: a frozen content key (drives coalescing comparisons)
+        # plus the ORIGINAL rows (what actually executes); first-seen
+        # qid order preserved
+        self.qid_rows: Dict[str, Tuple] = {}
+        self.qid_orig: Dict[str, List[Dict[str, Any]]] = {}
+        self.qid_order: List[str] = []
+        for r in rows:
+            q = str(r.get("qid"))
+            frozen = tuple(sorted((k, _freeze_value(v))
+                                  for k, v in r.items()))
+            if q not in self.qid_rows:
+                self.qid_rows[q] = (frozen,)
+                self.qid_orig[q] = [r]
+                self.qid_order.append(q)
+            else:
+                self.qid_rows[q] = self.qid_rows[q] + (frozen,)
+                self.qid_orig[q].append(r)
+        self.future: Future = Future()
+        self.t0 = time.perf_counter()
+
+
+class _BatchMeta:
+    __slots__ = ("requests", "cause", "n_rows_in", "failed",
+                 "hits", "misses")
+
+    def __init__(self, requests: List[_StreamRequest], cause: str,
+                 n_rows_in: int):
+        self.requests = requests
+        self.cause = cause
+        self.n_rows_in = n_rows_in
+        self.failed = False
+        self.hits = 0
+        self.misses = 0
+
+
+_STOP = object()
+_FLUSH = object()
+
+
+class StreamingExecutor:
+    """Incremental wavefront scheduler for online serving.
+
+    Long-lived: a dispatcher thread drains a bounded request queue into
+    micro-batches — a batch closes when ``max_batch`` requests are
+    waiting, when ``max_wait_ms`` has elapsed since its first request,
+    or on an explicit :meth:`flush`.  Requests in one batch are
+    *coalesced* per qid (N in-flight requests sharing a query execute
+    its rows once; every requester gets the result), the unique rows
+    execute as ONE frame through the DAG, and the terminal output is
+    demultiplexed back onto the request futures by qid.
+
+    The wavefront machinery (``_wave_edges`` / instance-id addressing /
+    probe-first cache-prune evaluation) is shared with the offline
+    sharded scheduler: a micro-batch occupies the structural slot of a
+    shard, so while batch *k* is in the reranker, batch *k+1* can
+    already be in the retriever on the same thread pool.
+
+    Correctness relies on the same row-local-per-qid contract as
+    sharding (``Transformer.shardable``): when any stage declares
+    ``shardable=False``, requests are NOT coalesced across submissions
+    — each request executes as its own single-request batch.
+    """
+
+    def __init__(self, graph: PlanGraph, *, batch_size: Optional[int] = None,
+                 max_batch: int = 32, max_wait_ms: float = 2.0,
+                 max_workers: int = 4, queue_capacity: int = 1024,
+                 on_batch: Optional[Callable[..., None]] = None):
+        if len(graph.terminals) != 1:
+            raise ValueError(
+                f"StreamingExecutor serves exactly one pipeline; the plan "
+                f"has {len(graph.terminals)} terminals")
+        self.graph = graph
+        self.terminal = graph.terminals[0]
+        self._schedulable, self._children = _wave_edges(graph)
+        self.coalescing = all(n.shardable for n in graph.nodes
+                              if n.kind == "stage")
+        self.batch_size = batch_size
+        self.max_batch = max(1, int(max_batch))
+        self.max_wait_s = max(0.0, float(max_wait_ms) / 1000.0)
+        self.stats = StreamStats()
+        self._on_batch = on_batch
+        self._queue: "queue_mod.Queue" = queue_mod.Queue(
+            maxsize=max(1, int(queue_capacity)))
+        # serializes enqueue against close(): nothing can land behind
+        # the _STOP sentinel, so no future is ever left pending
+        self._submit_lock = threading.Lock()
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(1, int(max_workers)),
+            thread_name_prefix="repro-serve")
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._results: Dict[Tuple[int, int], ColFrame] = {}
+        self._indeg: Dict[Tuple[int, int], int] = {}
+        self._meta: Dict[int, _BatchMeta] = {}
+        self._seq = 0
+        self._inflight = 0
+        self._closed = False
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="repro-serve-dispatch",
+            daemon=True)
+        self._dispatcher.start()
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, rows: List[Dict[str, Any]]) -> Future:
+        """Enqueue one request (one or more query rows, each carrying a
+        ``qid``).  Returns a future resolving to the pipeline output for
+        those rows.  Blocks (backpressure) when the queue is full."""
+        if not rows:
+            fut: Future = Future()
+            fut.set_result(ColFrame())
+            return fut
+        for r in rows:
+            if "qid" not in r:
+                raise ValueError("every request row needs a 'qid'")
+        req = _StreamRequest([dict(r) for r in rows])
+        with self._submit_lock:
+            if self._closed:
+                raise RuntimeError("StreamingExecutor is closed")
+            self._queue.put(req)
+        self.stats.queue_depth.add(self._queue.qsize())
+        return req.future
+
+    def flush(self) -> None:
+        """Dispatch whatever is queued without waiting for the batch
+        window to fill or expire."""
+        with self._submit_lock:
+            if not self._closed:
+                self._queue.put(_FLUSH)
+
+    def close(self, timeout: float = 60.0) -> None:
+        """Dispatch remaining requests, wait for in-flight batches, and
+        shut the pool down."""
+        with self._submit_lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._queue.put(_STOP)
+        self._dispatcher.join(timeout=timeout)
+        with self._idle:
+            self._idle.wait_for(lambda: self._inflight == 0,
+                                timeout=timeout)
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "StreamingExecutor":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # -- dispatcher ----------------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is _STOP:
+                return
+            if item is _FLUSH:
+                continue
+            batch: List[_StreamRequest] = [item]
+            cause = "size"
+            stop = False
+            deadline = time.monotonic() + self.max_wait_s
+            while len(batch) < self.max_batch:
+                remaining = deadline - time.monotonic()
+                try:
+                    # window expired (or max_wait_ms=0): drain whatever
+                    # is already queued without waiting, so backlogged
+                    # submissions still coalesce into one batch
+                    nxt = self._queue.get(timeout=remaining) \
+                        if remaining > 0 else self._queue.get_nowait()
+                except queue_mod.Empty:
+                    cause = "timeout"
+                    break
+                if nxt is _STOP:
+                    stop, cause = True, "forced"
+                    break
+                if nxt is _FLUSH:
+                    cause = "forced"
+                    break
+                batch.append(nxt)
+            try:
+                self._launch(batch, cause)
+            except BaseException as e:     # never kill the dispatcher
+                for req in batch:
+                    try:
+                        req.future.set_exception(e)
+                    except Exception:
+                        pass
+            if stop:
+                return
+
+    def _coalesce(self, batch: List[_StreamRequest]
+                  ) -> List[Tuple[List[_StreamRequest],
+                                  Dict[str, List[Dict[str, Any]]]]]:
+        """Group a dispatch window into sub-batches whose qid → rows
+        maps agree: requests sharing a qid with identical rows merge
+        (the shared query executes once); a request re-using a qid with
+        *different* rows starts a new sub-batch so per-qid semantics
+        stay exact."""
+        if not self.coalescing:
+            return [([req], dict(req.qid_orig)) for req in batch]
+        groups: List[Tuple[List[_StreamRequest],
+                           Dict[str, List[Dict[str, Any]]]]] = []
+        reqs: List[_StreamRequest] = []
+        frozen: Dict[str, Tuple] = {}
+        orig: Dict[str, List[Dict[str, Any]]] = {}
+        for req in batch:
+            conflict = any(frozen.get(q) is not None and frozen[q] != rows
+                           for q, rows in req.qid_rows.items())
+            if conflict and reqs:
+                groups.append((reqs, orig))
+                reqs, frozen, orig = [], {}, {}
+            reqs.append(req)
+            for q, rows in req.qid_rows.items():
+                frozen.setdefault(q, rows)
+                orig.setdefault(q, req.qid_orig[q])
+        if reqs:
+            groups.append((reqs, orig))
+        return groups
+
+    def _launch(self, batch: List[_StreamRequest], cause: str) -> None:
+        # groups are isolated: one group failing to build or launch
+        # fails only ITS requests — other groups of the window proceed
+        for reqs, qid_rows in self._coalesce(batch):
+            try:
+                self._launch_group(reqs, qid_rows, cause)
+            except BaseException as e:
+                for req in reqs:
+                    try:
+                        req.future.set_exception(e)
+                    except Exception:
+                        pass
+
+    def _launch_group(self, reqs: List[_StreamRequest],
+                      qid_rows: Dict[str, List[Dict[str, Any]]],
+                      cause: str) -> None:
+        rows: List[Dict[str, Any]] = []
+        for q in qid_rows:
+            rows.extend(qid_rows[q])
+        frame = ColFrame.from_dicts(rows)   # before any state mutation
+        n_rows_in = sum(len(r.rows) for r in reqs)
+        with self._lock:
+            s = self._seq
+            self._seq += 1
+            self._results[(self.graph.source.id, s)] = frame
+            for node in self._schedulable:
+                self._indeg[(node.id, s)] = len(_effective_inputs(node))
+            self._meta[s] = _BatchMeta(reqs, cause, n_rows_in)
+            self._inflight += 1
+            ready = self._complete_locked(self.graph.source.id, s)
+        self.stats.record_batch(n_requests=len(reqs), rows_in=n_rows_in,
+                                rows_executed=len(frame), cause=cause)
+        try:
+            for node in ready:
+                self._pool.submit(self._run_task, node, s)
+        except BaseException as e:
+            # pool refused (shutdown race): unwind _inflight and fail
+            # this batch's futures so close() never stalls
+            self._fail_batch(s, e)
+
+    # -- wavefront -----------------------------------------------------------
+    def _complete_locked(self, node_id: int, s: int) -> List[IRNode]:
+        ready = []
+        for child in self._children.get(node_id, ()):
+            key = (child.id, s)
+            if key not in self._indeg:
+                continue                 # batch already failed/cleaned
+            self._indeg[key] -= 1
+            if self._indeg[key] == 0:
+                ready.append(child)
+        return ready
+
+    def _run_task(self, node: IRNode, s: int) -> None:
+        with self._lock:
+            meta = self._meta.get(s)
+        if meta is None or meta.failed:
+            return
+        cache = node.cache
+        # hand-wrapped caches arrive as the *stage* (e.g. the legacy
+        # scorer service pipeline `ScorerCache(scorer)`), planner memos
+        # as node.cache — count per-call hits from whichever runs
+        runner = cache if cache is not None else node.stage
+        track = runner is not None and hasattr(runner, "pop_call_counts")
+        if track:
+            runner.pop_call_counts()     # drop stale counts on this thread
+        try:
+            t0 = time.perf_counter()
+            if node.probe_input is not None and cache is not None:
+                out = _exec_with_probe(
+                    node, self._results[(node.probe_input.id, s)],
+                    self.batch_size, s, _NULL_RECORDER)
+            else:
+                ins = [self._results[(i.id, s)] for i in node.inputs]
+                out = _exec_node(node, ins, self.batch_size)
+            dt_ms = (time.perf_counter() - t0) * 1000.0
+        except BaseException as e:
+            self._fail_batch(s, e)
+            return
+        hits = misses = 0
+        if track:
+            hits, misses = runner.pop_call_counts()
+            self.stats.add_cache_counts(hits, misses)
+        with self._lock:
+            if s not in self._meta:      # batch failed & was cleaned up
+                return
+            self._results[(node.id, s)] = out
+            meta.hits += hits
+            meta.misses += misses
+        self.stats.node(node.label).record(dt_ms, rows=len(out))
+        if node is self.terminal:
+            self._finalize(s, out)
+            return
+        with self._lock:
+            ready = self._complete_locked(node.id, s)
+        for child in ready:
+            self._pool.submit(self._run_task, child, s)
+
+    # -- completion ----------------------------------------------------------
+    def _cleanup_locked(self, s: int) -> Optional[_BatchMeta]:
+        meta = self._meta.pop(s, None)
+        for k in [k for k in self._results if k[1] == s]:
+            del self._results[k]
+        for k in [k for k in self._indeg if k[1] == s]:
+            del self._indeg[k]
+        if meta is not None:
+            self._inflight -= 1
+            self._idle.notify_all()
+        return meta
+
+    def _finalize(self, s: int, out: ColFrame) -> None:
+        with self._idle:
+            meta = self._cleanup_locked(s)
+        if meta is None:
+            return
+        groups = {str(k[0]): idx for k, idx in
+                  out.group_indices(["qid"]).items()} if len(out) else {}
+        now = time.perf_counter()
+        latencies = []
+        for req in meta.requests:
+            parts = [out.take(groups[q]) for q in req.qid_order
+                     if q in groups]
+            res = parts[0] if len(parts) == 1 else (
+                ColFrame.concat(parts) if parts else ColFrame())
+            latencies.append((now - req.t0) * 1000.0)
+            try:                         # a caller may have cancelled;
+                req.future.set_result(res)   # never stall its batchmates
+            except Exception:
+                pass
+        if self._on_batch is not None:
+            try:
+                self._on_batch(n_requests=len(meta.requests),
+                               latencies_ms=latencies, cause=meta.cause,
+                               cache_hits=meta.hits,
+                               cache_misses=meta.misses)
+            except Exception:
+                pass
+
+    def _fail_batch(self, s: int, err: BaseException) -> None:
+        with self._idle:
+            meta = self._cleanup_locked(s)
+            if meta is not None:
+                meta.failed = True
+        if meta is None:
+            return
+        for req in meta.requests:
+            try:
+                req.future.set_exception(err)
+            except Exception:            # already resolved/cancelled
+                pass

@@ -244,6 +244,11 @@ def _node_line(rec: Dict[str, Any]) -> str:
     touched = rec.get("touched_by") or []
     if touched:
         parts.append(f"passes={','.join(touched)}")
+    onl = rec.get("online")
+    if onl:
+        parts.append("online[p50=%.2fms p99=%.2fms n=%d]"
+                     % (onl.get("p50_ms", 0.0), onl.get("p99_ms", 0.0),
+                        onl.get("executions", 0)))
     if rec.get("probe_input") is not None:
         parts.append(f"probe=#{rec['probe_input']}")
     if rec.get("inlined"):

@@ -69,7 +69,12 @@ class PlanStats(PrecomputeStats):
     cache_hits: int = 0                  # memo hits across inserted caches
     cache_misses: int = 0
     node_times_s: Dict[str, float] = field(default_factory=dict)
+    node_exec_counts: Dict[str, int] = field(default_factory=dict)
     wall_time_s: float = 0.0
+    # -- online serving (filled by PipelineService, see serve/service.py) ----
+    #: per-node online latency (p50/p99 ms), executions and rows, plus
+    #: service-level queue depth / flush-trigger / batch-occupancy stats
+    online: Dict[str, Any] = field(default_factory=dict)
     # -- optimizer ----------------------------------------------------------
     optimizer_passes: List[str] = field(default_factory=list)
     nodes_eliminated: int = 0            # removed by normalize+cse/pushdown
@@ -506,6 +511,8 @@ class ExecutionPlan:
             executed.add(label)
             stats.node_times_s[label] = \
                 stats.node_times_s.get(label, 0.0) + (b - a)
+            stats.node_exec_counts[label] = \
+                stats.node_exec_counts.get(label, 0) + 1
         stats.nodes_executed = len(executed)
         # deferred (cache-prune) nodes whose chain never ran this run
         stats.nodes_pruned = sum(

@@ -1,50 +1,45 @@
-"""Serving driver: batched neural scoring with ScorerCache.
+"""Serving driver — thin wrapper over ``repro serve``.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 500
 
-Simulates a request stream against the ScoringService (the paper's
-``index.bm25() >> cached_scorer`` composition as a long-lived service)
-and prints latency/hit-rate statistics — the request-level view of the
-paper's Table-2 mechanism.
+Stands up a :class:`~repro.serve.PipelineService` over a registry
+pipeline (default: the two-stage ``bm25-mono`` retrieve-and-rerank
+composition) and drives it with a closed-loop synthetic request stream
+— the request-level view of the paper's Table-2 mechanism, now through
+the full plan compiler instead of a single scorer stage.  All the real
+logic lives in ``repro.cli.serve``; this module only keeps the legacy
+flag surface (``--requests`` / ``--max-batch`` / ``--no-cache``).
 """
 from __future__ import annotations
 
 import argparse
 
-import numpy as np
-
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=400)
-    ap.add_argument("--n-queries", type=int, default=20)
+    ap.add_argument("--pipeline", default="bm25-mono")
+    ap.add_argument("--n-queries", type=int, default=20,
+                    help="(legacy, ignored — the registry scenario "
+                         "defines the topic pool)")
+    ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--no-cache", action="store_true")
     args = ap.parse_args(argv)
 
-    from ..ir import InvertedIndex, msmarco_like
-    from ..models.cross_encoder import EncoderConfig, MonoScorer
-    from ..serve import ScoringService
+    from ..cli.serve import serve_and_drive
 
-    corpus = msmarco_like(1, scale=0.05)
-    scorer = MonoScorer(EncoderConfig(n_layers=2, d_model=64, n_heads=4,
-                                      d_ff=128, vocab_size=8192,
-                                      max_len=32))
-    svc = ScoringService(scorer, max_batch=args.max_batch,
-                         use_cache=not args.no_cache)
-    rng = np.random.default_rng(0)
-    docs = corpus.docs
-    for i in range(args.requests):
-        q = int(rng.integers(0, args.n_queries))
-        d = int(rng.integers(0, min(len(docs), 200)))
-        svc.submit(f"q{q}", f"query about topic {q}",
-                   str(docs["docno"][d]), str(docs["text"][d]))
-        if (i + 1) % args.max_batch == 0:
-            svc.flush()
-    svc.flush()
-    print(svc.stats.summary())
-    svc.close()
-    return svc.stats
+    record = serve_and_drive(
+        pipeline=args.pipeline, scale=args.scale, cutoff=10,
+        num_results=100, requests=args.requests, clients=args.clients,
+        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+        workers=4, cache_dir=None,
+        backend=None if args.no_cache else "memory")
+    print({k: record[k] for k in ("requests", "batches", "hit_rate",
+                                  "p50_ms", "p99_ms", "throughput_rps")})
+    return record
 
 
 if __name__ == "__main__":

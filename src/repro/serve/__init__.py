@@ -1,3 +1,7 @@
-from .service import ScoringService, ServiceStats
+from .registry import (SERVE_PIPELINES, ServeScenario, build_scenario,
+                       run_closed_loop)
+from .service import PipelineService, ScoringService, ServiceStats
 
-__all__ = ["ScoringService", "ServiceStats"]
+__all__ = ["PipelineService", "ScoringService", "ServiceStats",
+           "ServeScenario", "SERVE_PIPELINES", "build_scenario",
+           "run_closed_loop"]

@@ -1,0 +1,173 @@
+"""Named serving scenarios for ``repro serve`` and the serve benchmark.
+
+A *scenario* bundles a pipeline expression with the synthetic corpus /
+topic set it runs against, so the CLI, the launch driver and
+``benchmarks/serve_bench.py`` stand up the same workloads by name:
+
+* ``"bm25"``       — first-stage retrieval only (``bm25 % cutoff``);
+* ``"bm25-mono"``  — the paper's §4.2 two-stage composition
+  (``bm25 % cutoff >> text_loader >> mono_scorer``);
+* ``"mono"``       — the bare pointwise scorer (the legacy
+  ``ScoringService`` workload; requests carry their own text).
+
+``run_closed_loop`` is the shared traffic generator: N closed-loop
+client threads, each submitting one query at a time and waiting for its
+result — the canonical serving-latency measurement loop.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..core.frame import ColFrame
+from ..core.pipeline import Transformer
+
+__all__ = ["ServeScenario", "SERVE_PIPELINES", "build_scenario",
+           "run_closed_loop"]
+
+
+@dataclass
+class ServeScenario:
+    """A servable pipeline plus the topics that generate its traffic."""
+    name: str
+    pipeline: Transformer
+    topics: ColFrame                     # Q(qid, query) request pool
+    description: str = ""
+    #: extra per-request row columns keyed by qid (e.g. doc text for
+    #: scorer-only scenarios); empty for whole-pipeline serving
+    request_extra: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+
+
+def _encoder():
+    from ..models.cross_encoder import EncoderConfig, MonoScorer
+    return MonoScorer(EncoderConfig(n_layers=2, d_model=64, n_heads=4,
+                                    d_ff=128, vocab_size=8192, max_len=32))
+
+
+def _build_bm25(*, scale: float, cutoff: int, num_results: int,
+                seed: int) -> ServeScenario:
+    from ..ir import InvertedIndex, msmarco_like
+    corpus = msmarco_like(1, scale=scale, seed=seed)
+    index = InvertedIndex.build(corpus.get_corpus_iter())
+    return ServeScenario(
+        name="bm25",
+        pipeline=index.bm25(num_results=num_results) % cutoff,
+        topics=corpus.get_topics(),
+        description=f"BM25 retrieval, top-{cutoff} "
+                    f"(num_results={num_results}, pushdown fuses the cutoff)")
+
+
+def _build_bm25_mono(*, scale: float, cutoff: int, num_results: int,
+                     seed: int) -> ServeScenario:
+    from ..ir import InvertedIndex, TextLoader, msmarco_like
+    corpus = msmarco_like(1, scale=scale, seed=seed)
+    index = InvertedIndex.build(corpus.get_corpus_iter())
+    pipeline = (index.bm25(num_results=num_results) % cutoff
+                >> TextLoader(corpus.text_map()) >> _encoder())
+    return ServeScenario(
+        name="bm25-mono",
+        pipeline=pipeline,
+        topics=corpus.get_topics(),
+        description=f"two-stage retrieve-and-rerank: bm25 % {cutoff} "
+                    f">> text_loader >> mono scorer")
+
+
+def _build_mono(*, scale: float, cutoff: int, num_results: int,
+                seed: int) -> ServeScenario:
+    from ..ir import msmarco_like
+    corpus = msmarco_like(1, scale=scale, seed=seed)
+    docs = corpus.docs
+    rng = np.random.default_rng(seed)
+    topics = corpus.get_topics()
+    extra: Dict[str, Dict[str, Any]] = {}
+    n = min(len(docs), 200)
+    for qid in topics["qid"].tolist():
+        d = int(rng.integers(0, n))
+        extra[str(qid)] = {"docno": str(docs["docno"][d]),
+                           "text": str(docs["text"][d])}
+    return ServeScenario(
+        name="mono",
+        pipeline=_encoder(),
+        topics=topics,
+        description="bare pointwise scorer (requests carry doc text)",
+        request_extra=extra)
+
+
+SERVE_PIPELINES: Dict[str, Callable[..., ServeScenario]] = {
+    "bm25": _build_bm25,
+    "bm25-mono": _build_bm25_mono,
+    "mono": _build_mono,
+}
+
+
+def build_scenario(name: str, *, scale: float = 0.05, cutoff: int = 10,
+                   num_results: int = 100, seed: int = 0) -> ServeScenario:
+    """Construct a named serving scenario (see ``SERVE_PIPELINES``)."""
+    try:
+        builder = SERVE_PIPELINES[name]
+    except KeyError:
+        raise KeyError(f"unknown serving pipeline {name!r}; known: "
+                       f"{sorted(SERVE_PIPELINES)}") from None
+    return builder(scale=scale, cutoff=cutoff, num_results=num_results,
+                   seed=seed)
+
+
+def run_closed_loop(service, scenario: ServeScenario, *,
+                    n_requests: int, n_clients: int = 4,
+                    seed: int = 0,
+                    timeout: Optional[float] = 120.0) -> Dict[str, float]:
+    """Closed-loop request stream: ``n_clients`` threads each submit
+    one query at a time (drawn from the scenario's topic pool with a
+    skew toward popular queries) and wait for the result before
+    submitting the next — so concurrency equals the client count and
+    the service's micro-batching does the coalescing.
+
+    Returns wall-clock throughput and request counts; latency
+    percentiles live in ``service.stats``.
+    """
+    qids = scenario.topics["qid"].tolist()
+    queries = scenario.topics["query"].tolist()
+    n_topics = len(qids)
+    n_clients = max(1, n_clients)
+    # distribute the remainder so exactly n_requests are issued
+    per_client = [n_requests // n_clients
+                  + (1 if c < n_requests % n_clients else 0)
+                  for c in range(n_clients)]
+    errors: List[BaseException] = []
+    done = [0]
+    lock = threading.Lock()
+
+    def client(cid: int) -> None:
+        rng = np.random.default_rng(seed * 1009 + cid)
+        for _ in range(per_client[cid]):
+            # zipf-ish skew: repeat traffic is what caching pays for
+            i = int(min(rng.zipf(1.3) - 1, n_topics - 1))
+            qid = str(qids[i])
+            extra = scenario.request_extra.get(qid, {})
+            try:
+                fut = service.submit(qid, queries[i], **extra)
+                fut.result(timeout)
+                with lock:
+                    done[0] += 1
+            except BaseException as e:   # surface, don't hang the loop
+                with lock:
+                    errors.append(e)
+                return
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, args=(c,), daemon=True)
+               for c in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall_s = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return {"requests": done[0], "clients": n_clients,
+            "wall_s": round(wall_s, 4),
+            "throughput_rps": round(done[0] / wall_s, 2) if wall_s else 0.0}
