@@ -1,12 +1,16 @@
 # Explicit caching strategies (paper §4) + TPU adaptations.
 from .backends import (BACKENDS, CacheBackend, DbmBackend, FileLock,
                        MemoryLRUBackend, PickleDirBackend, SQLiteBackend,
-                       atomic_write_bytes, open_backend,
-                       resolve_backend_name)
+                       atomic_write_bytes, backend_store_exists,
+                       open_backend, resolve_backend_name, split_tiered)
+from .tiered import TieredBackend
 from .provenance import (CacheManifest, ManifestError, ProvenanceError,
                          StaleCacheError, combine_fingerprints,
                          transformer_fingerprint)
+from .economics import (AccessStats, CacheBudget, enforce_dir,
+                        evict_entries)
 from .base import CacheMissError, CacheStats, CacheTransformer
+from .warming import warm_scenario
 from .kv import KeyValueCache
 from .scorer import ScorerCache
 from .dense import DenseScorerCache
@@ -27,10 +31,13 @@ for _cls in (KeyValueCache, ScorerCache, DenseScorerCache, RetrieverCache,
 
 __all__ = [
     "BACKENDS", "CacheBackend", "MemoryLRUBackend", "PickleDirBackend",
-    "DbmBackend", "SQLiteBackend", "FileLock", "atomic_write_bytes",
-    "open_backend", "resolve_backend_name",
+    "DbmBackend", "SQLiteBackend", "TieredBackend", "FileLock",
+    "atomic_write_bytes", "backend_store_exists",
+    "open_backend", "resolve_backend_name", "split_tiered",
     "CacheManifest", "ManifestError", "ProvenanceError", "StaleCacheError",
     "combine_fingerprints", "transformer_fingerprint",
+    "AccessStats", "CacheBudget", "enforce_dir", "evict_entries",
+    "warm_scenario",
     "CacheMissError", "CacheStats", "CacheTransformer",
     "KeyValueCache", "ScorerCache", "DenseScorerCache", "RetrieverCache",
     "IndexerCache", "Lazy", "Artifact", "to_hub", "from_hub", "hub_dir",

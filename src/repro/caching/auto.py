@@ -56,13 +56,18 @@ def derive_fingerprint(transformer: Any) -> Optional[str]:
 def auto_cache(transformer: Transformer, path: Optional[str] = None,
                *, backend: Optional[str] = None,
                fingerprint: Optional[str] = None,
-               on_stale: Optional[str] = None, **kwargs):
+               on_stale: Optional[str] = None,
+               budget: Any = None, **kwargs):
     """Pick and construct the right cache family from metadata.
 
     ``backend`` selects the storage implementation by registry name
-    (``"memory"`` / ``"pickle"`` / ``"dbm"`` / ``"sqlite"`` — see
-    ``backends.py``); ``None`` keeps each family's default (SQLite for
-    key-value/scorer caches, dbm for retriever caches, both per §4).
+    (``"memory"`` / ``"pickle"`` / ``"dbm"`` / ``"sqlite"``, plus the
+    ``"tiered[:<disk>]"`` combinator — see ``backends.py``); ``None``
+    keeps each family's default (SQLite for key-value/scorer caches,
+    dbm for retriever caches, both per §4).  ``budget`` bounds the
+    store (``economics.CacheBudget`` / dict / int max-entries) —
+    recorded in the manifest and enforced on ``close()`` or via
+    ``repro cache evict``.
 
     Provenance (``caching/provenance.py``): ``fingerprint`` defaults to
     ``transformer.fingerprint()`` (skipped for unconstructed ``Lazy``
@@ -75,6 +80,8 @@ def auto_cache(transformer: Transformer, path: Optional[str] = None,
         kwargs["backend"] = backend
     if on_stale is not None:
         kwargs["on_stale"] = on_stale
+    if budget is not None:
+        kwargs["budget"] = budget        # size/TTL envelope (economics.py)
     if fingerprint is None:
         fingerprint = derive_fingerprint(transformer)
     if fingerprint is not None:

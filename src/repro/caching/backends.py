@@ -53,7 +53,8 @@ except ImportError:                      # pragma: no cover - linux CI
 
 __all__ = ["CacheBackend", "MemoryLRUBackend", "PickleDirBackend",
            "DbmBackend", "SQLiteBackend", "FileLock", "atomic_write_bytes",
-           "open_backend", "resolve_backend_name", "BACKENDS"]
+           "open_backend", "resolve_backend_name", "BACKENDS",
+           "split_tiered", "backend_store_exists"]
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +221,27 @@ class CacheBackend:
         raise NotImplementedError(
             f"{type(self).__name__} cannot enumerate entries")
 
+    def delete_many(self, keys: Sequence[bytes]) -> int:
+        """Remove entries (eviction / budget enforcement); returns the
+        number actually deleted.  Absent keys are ignored."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support entry deletion")
+
+    def entry_stats(self) -> List[Tuple[bytes, int]]:
+        """``(key, value_size_bytes)`` for every entry — the eviction
+        pass ranks these by recency.  Backends that cannot enumerate
+        keys raise ``NotImplementedError`` (same contract as
+        ``items()``); the default derives sizes from ``items()``."""
+        return [(k, len(v)) for k, v in self.items()]
+
+    def stat_entries(self, keys: Sequence[bytes]
+                     ) -> List[Optional[int]]:
+        """Value sizes for the given keys (``None`` = absent).  Works on
+        every backend — including ones whose stores cannot enumerate —
+        at the cost of reading the values."""
+        return [len(v) if v is not None else None
+                for v in self.get_many(keys)]
+
     @classmethod
     def store_exists(cls, path: str) -> bool:
         """Whether ``path`` already holds this backend's store files —
@@ -304,6 +326,10 @@ class MemoryLRUBackend(CacheBackend):
         with self._lock:
             return list(self._data.items())
 
+    def delete_many(self, keys: Sequence[bytes]) -> int:
+        with self._lock:
+            return sum(self._data.pop(k, None) is not None for k in keys)
+
 
 class PickleDirBackend(CacheBackend):
     """One file per entry, named by the SHA-256 of the key, written with
@@ -359,6 +385,25 @@ class PickleDirBackend(CacheBackend):
         raise NotImplementedError(
             "PickleDirBackend stores hashed keys only; export the cache "
             "directory as raw files")
+
+    def delete_many(self, keys: Sequence[bytes]) -> int:
+        n = 0
+        for k in keys:
+            try:
+                os.unlink(self._file_of(k))
+                n += 1
+            except FileNotFoundError:
+                pass
+        return n
+
+    def stat_entries(self, keys: Sequence[bytes]) -> List[Optional[int]]:
+        out: List[Optional[int]] = []
+        for k in keys:
+            try:
+                out.append(os.path.getsize(self._file_of(k)))
+            except OSError:
+                out.append(None)
+        return out
 
     @classmethod
     def store_exists(cls, path: str) -> bool:
@@ -432,6 +477,19 @@ class DbmBackend(CacheBackend):
             finally:
                 db.close()
 
+    def delete_many(self, keys: Sequence[bytes]) -> int:
+        n = 0
+        with self._lock:
+            db = self._dbm.open(self._file, "w")
+            try:
+                for k in keys:
+                    if k in db:
+                        del db[k]
+                        n += 1
+            finally:
+                db.close()
+        return n
+
     @classmethod
     def store_exists(cls, path: str) -> bool:
         return _legacy_store_exists(os.path.join(path, "cache.dbm")) or \
@@ -475,14 +533,22 @@ class SQLiteBackend(CacheBackend):
     def get_many(self, keys: Sequence[bytes]) -> List[Optional[bytes]]:
         out: List[Optional[bytes]] = [None] * len(keys)
         CHUNK = 900                          # sqlite var limit is 999
-        pos: Dict[bytes, int] = {k: i for i, k in enumerate(keys)}
+        # a key may occur several times in one lookup batch (e.g. a
+        # micro-batch coalescing concurrent requests for the same hot
+        # query) — every occurrence must resolve, not just the last
+        pos: Dict[bytes, List[int]] = {}
+        for i, k in enumerate(keys):
+            pos.setdefault(k, []).append(i)
+        uniq = list(pos)
         with self._conn_lock:
-            for lo in range(0, len(keys), CHUNK):
-                chunk = list(keys[lo:lo + CHUNK])
+            for lo in range(0, len(uniq), CHUNK):
+                chunk = uniq[lo:lo + CHUNK]
                 q = ("SELECT key, value FROM kv WHERE key IN (%s)"
                      % ",".join("?" * len(chunk)))
                 for k, v in self._db.execute(q, chunk):
-                    out[pos[bytes(k)]] = bytes(v)
+                    blob = bytes(v)
+                    for i in pos[bytes(k)]:
+                        out[i] = blob
         return out
 
     def get(self, key: bytes) -> Optional[bytes]:
@@ -508,6 +574,24 @@ class SQLiteBackend(CacheBackend):
             return [(bytes(k), bytes(v)) for k, v in
                     self._db.execute("SELECT key, value FROM kv")]
 
+    def delete_many(self, keys: Sequence[bytes]) -> int:
+        CHUNK = 900
+        n = 0
+        with self._conn_lock:
+            with self._db:
+                for lo in range(0, len(keys), CHUNK):
+                    chunk = list(keys[lo:lo + CHUNK])
+                    cur = self._db.execute(
+                        "DELETE FROM kv WHERE key IN (%s)"
+                        % ",".join("?" * len(chunk)), chunk)
+                    n += cur.rowcount
+        return n
+
+    def entry_stats(self) -> List[Tuple[bytes, int]]:
+        with self._conn_lock:
+            return [(bytes(k), int(n)) for k, n in self._db.execute(
+                "SELECT key, length(value) FROM kv")]
+
     @classmethod
     def store_exists(cls, path: str) -> bool:
         return os.path.exists(os.path.join(path, "cache.sqlite3")) or \
@@ -531,11 +615,38 @@ BACKENDS: Dict[str, Type[CacheBackend]] = {
     "sqlite": SQLiteBackend,
 }
 
+#: default disk tier of the bare ``"tiered"`` selector
+TIERED_DEFAULT_DISK = "sqlite"
+
+
+def split_tiered(name: str) -> Optional[str]:
+    """The disk-tier registry name of a ``"tiered"`` /
+    ``"tiered:<disk>"`` selector, validated; ``None`` when ``name`` is
+    not a tiered selector at all.  Raises ``ValueError`` for a tiered
+    selector over an unknown or non-persistent disk tier."""
+    if not isinstance(name, str) or \
+            not (name == "tiered" or name.startswith("tiered:")):
+        return None
+    disk = name.partition(":")[2] or TIERED_DEFAULT_DISK
+    if disk not in BACKENDS or not BACKENDS[disk].persistent:
+        known = ", ".join(f"'tiered:{n}'" for n in sorted(BACKENDS)
+                          if BACKENDS[n].persistent)
+        raise ValueError(
+            f"unknown tiered cache selector {name!r}; the disk tier must "
+            f"be a persistent registry backend — valid selectors are "
+            f"{known} (bare 'tiered' means 'tiered:{TIERED_DEFAULT_DISK}')")
+    return disk
+
 
 def resolve_backend_name(spec: Union[str, CacheBackend, None],
                          default: str = "sqlite") -> str:
     """The registry name a ``backend=`` selector resolves to, validated
     *without* opening a store (so callers can check manifests first).
+
+    Besides the registry names, ``"tiered"`` / ``"tiered:<disk>"``
+    selects :class:`~repro.caching.tiered.TieredBackend` — a memory-LRU
+    front tier over the named disk backend — and normalizes to the
+    explicit ``"tiered:<disk>"`` form (what manifests record).
 
     Raises ``TypeError`` for selectors that are neither a name, an
     instance nor ``None``, and ``ValueError`` (listing every registered
@@ -551,19 +662,46 @@ def resolve_backend_name(spec: Union[str, CacheBackend, None],
             f"({', '.join(repr(n) for n in sorted(BACKENDS))}), a "
             f"CacheBackend instance, or None — got "
             f"{type(spec).__name__}: {spec!r}")
+    disk = split_tiered(spec)
+    if disk is not None:
+        return f"tiered:{disk}"
     if spec not in BACKENDS:
         known = ", ".join(repr(n) for n in sorted(BACKENDS))
         raise ValueError(
             f"unknown cache backend {spec!r}; registered backends are "
-            f"{known} (pass a CacheBackend instance for a custom store)")
+            f"{known}, plus 'tiered:<disk>' for a memory-LRU front over "
+            f"a disk backend (pass a CacheBackend instance for a custom "
+            f"store)")
     return spec
 
 
 def open_backend(spec: Union[str, CacheBackend, None], path: Optional[str],
                  default: str = "sqlite") -> CacheBackend:
     """Resolve a ``backend=`` argument: an instance passes through, a
-    name is looked up in ``BACKENDS``, ``None`` means ``default``.
-    Unknown selectors raise with the registered names spelled out."""
+    name is looked up in ``BACKENDS``, ``None`` means ``default``, and
+    ``"tiered[:<disk>]"`` builds a ``TieredBackend`` over the named
+    disk backend.  Unknown selectors raise with the registered names
+    spelled out."""
     if isinstance(spec, CacheBackend):
         return spec
-    return BACKENDS[resolve_backend_name(spec, default)](path)
+    name = resolve_backend_name(spec, default)
+    disk = split_tiered(name)
+    if disk is not None:
+        from .tiered import TieredBackend   # deferred: tiered imports us
+        return TieredBackend(path, disk=disk)
+    return BACKENDS[name](path)
+
+
+def backend_store_exists(name: Optional[str], path: str) -> bool:
+    """``store_exists`` by resolved backend *name*, understanding the
+    ``tiered:<disk>`` combinator (whose on-disk footprint is its disk
+    tier's) — for offline inspection without opening a store."""
+    try:
+        disk = split_tiered(name) if isinstance(name, str) else None
+    except ValueError:
+        return False
+    if disk is not None:
+        return BACKENDS[disk].store_exists(path)
+    if name in BACKENDS:
+        return BACKENDS[name].store_exists(path)
+    return False

@@ -23,9 +23,10 @@ import tempfile
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from ..core.pipeline import Transformer
+from .economics import AccessStats, CacheBudget, evict_entries
 from .provenance import CacheManifest, ManifestError, StaleCacheError
 
 __all__ = ["CacheMissError", "CacheStats", "CacheTransformer",
@@ -116,11 +117,17 @@ class CacheTransformer(Transformer):
     def __init__(self, path: Optional[str], transformer: Any = None,
                  *, verify_fraction: float = 0.0,
                  fingerprint: Optional[str] = None,
-                 on_stale: str = "error"):
+                 on_stale: str = "error",
+                 budget: Any = None):
         if on_stale not in ON_STALE_POLICIES:
             raise ValueError(f"on_stale must be one of {ON_STALE_POLICIES}, "
                              f"got {on_stale!r}")
         self._transformer_raw = transformer
+        self._budget = CacheBudget.coerce(budget)
+        #: in-memory {backend key: [last_used_ts, hits]} deltas, merged
+        #: into the directory's access.json sidecar by _flush_access
+        self._access_pending: Dict[bytes, List[float]] = {}
+        self._access_lock = threading.Lock()
         self._temporary = path is None
         if path is None:
             path = tempfile.mkdtemp(prefix="repro-cache-")
@@ -190,6 +197,12 @@ class CacheTransformer(Transformer):
                 existing.fingerprint = self.provenance_fingerprint
                 existing.save(self.path)
             self._manifest = existing
+        # record a constructor-passed budget so offline enforcement
+        # (`repro cache evict`, close()) sees it without this process
+        if not self._budget.empty() and not self.readonly:
+            if self._budget.record_in(self._manifest) \
+                    and not self._temporary:
+                self._manifest.save(self.path)
 
     def _stale_reasons(self, m: CacheManifest, backend: Optional[str],
                        key_columns: Sequence[str],
@@ -247,6 +260,68 @@ class CacheTransformer(Transformer):
         self._manifest.last_used_at = time.time()
         self._manifest.save(self.path)
 
+    # -- cache economics: budgets, access stats, eviction --------------------
+    @property
+    def budget(self) -> CacheBudget:
+        """Effective budget: the constructor's, else the manifest's."""
+        if not self._budget.empty():
+            return self._budget
+        return CacheBudget.from_manifest(self._manifest)
+
+    def _note_access(self, keys: Sequence[bytes]) -> None:
+        """Record that ``keys`` were read/written now — feeds the LRU
+        eviction pass via the access.json sidecar (flushed on close /
+        evict, not per call)."""
+        if self._temporary or not keys:
+            return
+        now = time.time()
+        with self._access_lock:
+            pend = self._access_pending
+            for k in keys:
+                cur = pend.get(k)
+                if cur is None:
+                    pend[k] = [now, 1]
+                else:
+                    cur[0] = now
+                    cur[1] += 1
+
+    def _flush_access(self) -> None:
+        with self._access_lock:
+            pending, self._access_pending = self._access_pending, {}
+        if not pending or self._temporary or self.readonly:
+            return
+        stats = AccessStats.load(self.path)
+        stats.merge_pending(pending)
+        stats.save(self.path)
+
+    def evict(self, budget: Any = None, *,
+              now: Optional[float] = None) -> Dict[str, Any]:
+        """Bring the store within ``budget`` (default: the recorded /
+        constructor budget): TTL-expired entries first, then LRU.
+        Returns the eviction report (see ``economics.evict_entries``).
+
+        The manifest's entry count is refreshed *immediately* — not
+        only on ``close()`` — so ``repro cache verify`` stays truthful
+        against a still-open backend."""
+        eff = CacheBudget.coerce(budget)
+        if eff.empty():
+            eff = self.budget
+        if eff.empty():
+            return {"skipped": "no budget (none passed, none recorded)"}
+        if self.readonly:
+            return {"skipped": "readonly cache (stale-readonly policy)"}
+        backend = getattr(self, "_backend", None)
+        if backend is None:
+            raise NotImplementedError(
+                f"{type(self).__name__} does not support budget eviction")
+        self._flush_access()
+        created = self._manifest.created_at \
+            if self._manifest is not None else 0.0
+        report = evict_entries(backend, self.path, eff,
+                               created_at=created, now=now)
+        self._update_manifest()
+        return report
+
     # -- per-call accounting -------------------------------------------------
     # ``stats`` is cumulative and shared: when several threads, shards
     # or services use one cache, deriving a caller's hits/misses from
@@ -294,7 +369,13 @@ class CacheTransformer(Transformer):
     def close(self) -> None:
         if self._closed:
             return
+        if not self.budget.empty() and not self.readonly:
+            try:
+                self.evict()             # automatic budget enforcement
+            except Exception:
+                pass
         try:
+            self._flush_access()
             self._update_manifest()
         except Exception:
             pass                         # manifest refresh is best-effort

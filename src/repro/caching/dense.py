@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -33,6 +34,7 @@ from ..core.frame import ColFrame
 from ..core.pipeline import add_ranks
 from .backends import FileLock, atomic_write_bytes
 from .base import CacheTransformer
+from .economics import AccessStats, CacheBudget
 
 __all__ = ["DenseScorerCache"]
 
@@ -46,9 +48,11 @@ class DenseScorerCache(CacheTransformer):
                  *, docnos: Optional[Sequence[str]] = None,
                  verify_fraction: float = 0.0,
                  fingerprint: Optional[str] = None,
-                 on_stale: str = "error"):
+                 on_stale: str = "error",
+                 budget: Any = None):
         super().__init__(path, transformer, verify_fraction=verify_fraction,
-                         fingerprint=fingerprint, on_stale=on_stale)
+                         fingerprint=fingerprint, on_stale=on_stale,
+                         budget=budget)
         self._npids_path = os.path.join(self.path, "npids.json")
         # the docno enumeration is the cache's key space, not a cached
         # value: keep it across an on_stale="recompute" wipe so the
@@ -101,7 +105,11 @@ class DenseScorerCache(CacheTransformer):
     def _row_for(self, query: str, create: bool) -> Optional[int]:
         row = self._query_rows.get(query)
         if row is None and create:
-            row = len(self._query_rows)
+            # first *free* row index, not len(): eviction leaves gaps in
+            # the occupied-row set, and reusing len() would collide with
+            # a still-occupied row
+            used = set(self._query_rows.values())
+            row = next(i for i in range(len(used) + 1) if i not in used)
             if row >= self._mat.shape[0]:
                 self._grow(row + 1)
             self._query_rows[query] = row
@@ -157,6 +165,7 @@ class DenseScorerCache(CacheTransformer):
         self.stats.add(hits=len(inp) - len(miss_idx),
                        misses=len(miss_idx))
         self._note_call(len(inp) - len(miss_idx), len(miss_idx))
+        self._note_access(sorted({q.encode("utf-8") for q in queries}))
 
         if miss_idx:
             t = self._require_transformer(len(miss_idx))
@@ -180,3 +189,71 @@ class DenseScorerCache(CacheTransformer):
                 self.stats.add(inserts=len(miss_idx))
 
         return add_ranks(inp.assign(score=scores))
+
+    # -- cache economics: row-granular eviction ------------------------------
+    def evict(self, budget: Any = None, *,
+              now: Optional[float] = None) -> Dict[str, Any]:
+        """Row-level eviction: the unit of storage is a query row, so
+        TTL/LRU victims are whole rows (NaN-ed out and their row index
+        returned to the free pool).  ``max_entries``/``max_bytes``
+        budget the non-NaN *cells* (matching ``__len__``) at 4 bytes
+        per stored score."""
+        eff = CacheBudget.coerce(budget)
+        if eff.empty():
+            eff = self.budget
+        if eff.empty():
+            return {"skipped": "no budget (none passed, none recorded)"}
+        if self.readonly:
+            return {"skipped": "readonly cache (stale-readonly policy)"}
+        now = time.time() if now is None else float(now)
+        self._flush_access()
+        access = AccessStats.load(self.path)
+        created = self._manifest.created_at \
+            if self._manifest is not None else 0.0
+        rows = []                        # (last_used, key, query, row, cells)
+        for q, r in self._query_rows.items():
+            key = q.encode("utf-8")
+            cells = int(np.sum(~np.isnan(self._mat[r])))
+            rows.append((access.last_used(key, created), key, q, r, cells))
+        rows.sort(key=lambda t: (t[0], t[1]))
+        n_cells = sum(t[4] for t in rows)
+
+        victims = []
+        survivors = rows
+        if eff.ttl_seconds is not None:
+            cutoff = now - float(eff.ttl_seconds)
+            expired = [t for t in rows if t[0] <= cutoff]
+            survivors = rows[len(expired):]
+            victims.extend(expired)
+        n_expired = len(victims)
+        left = n_cells - sum(t[4] for t in victims)
+        i = 0
+        while i < len(survivors) and (
+                (eff.max_entries is not None and left > eff.max_entries)
+                or (eff.max_bytes is not None and left * 4 > eff.max_bytes)):
+            victims.append(survivors[i])
+            left -= survivors[i][4]
+            i += 1
+
+        evicted_cells = n_cells - left
+        if victims:
+            with self._write_lock:
+                for _, _, q, r, _ in victims:
+                    self._mat[r] = np.nan
+                    self._query_rows.pop(q, None)
+                self._mat.flush()
+                atomic_write_bytes(self._queries_path,
+                                   json.dumps(self._query_rows).encode())
+            access.forget([t[1] for t in victims])
+            access.save(self.path)
+        # refresh counts immediately (not only on close) so a verify
+        # against the still-open cache sees the post-eviction truth
+        self._update_manifest()
+        return {"examined": len(rows), "expired": n_expired,
+                "evicted": len(victims),
+                "evicted_bytes": int(evicted_cells * 4),
+                "entries_before": int(n_cells),
+                "entries_after": int(left),
+                "bytes_after": int(left * 4),
+                "bytes_approximate": True,
+                "unevictable": 0}

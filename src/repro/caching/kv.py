@@ -36,9 +36,11 @@ class KeyValueCache(CacheTransformer):
                  verify_fraction: float = 0.0,
                  backend: Any = None,
                  fingerprint: Optional[str] = None,
-                 on_stale: str = "error"):
+                 on_stale: str = "error",
+                 budget: Any = None):
         super().__init__(path, transformer, verify_fraction=verify_fraction,
-                         fingerprint=fingerprint, on_stale=on_stale)
+                         fingerprint=fingerprint, on_stale=on_stale,
+                         budget=budget)
         self.key_cols: Tuple[str, ...] = \
             (key,) if isinstance(key, str) else tuple(key)
         self.value_cols: Tuple[str, ...] = \
@@ -80,6 +82,7 @@ class KeyValueCache(CacheTransformer):
         vals = unpickle_value(blob)
         self.stats.add(hits=1)
         self._note_call(1, 0)
+        self._note_access([key])
         out = inp
         for ci, c in enumerate(self.value_cols):
             v = vals[ci]
@@ -112,6 +115,7 @@ class KeyValueCache(CacheTransformer):
             miss_idx = self._fill_misses(inp, keys, values, miss_idx)
         self.stats.add(hits=len(keys) - len(miss_idx), misses=len(miss_idx))
         self._note_call(len(keys) - len(miss_idx), len(miss_idx))
+        self._note_access(keys)          # hits + fresh inserts alike
 
         if self.verify_fraction > 0 and len(keys) > len(miss_idx):
             self._verify(inp, keys, values, miss_idx)

@@ -57,7 +57,11 @@ __all__ = [
 ]
 
 MANIFEST_NAME = "manifest.json"
-MANIFEST_VERSION = 1
+#: v2 adds the optional cache-economics budget fields (max_entries /
+#: max_bytes / ttl_seconds).  v1 manifests load unchanged — absent
+#: fields keep their defaults — and are upgraded in place on the next
+#: save (backward adoption; asserted in tests/test_economics.py).
+MANIFEST_VERSION = 2
 PLAN_MANIFEST_VERSION = 1
 PLANS_SUBDIR = "plans"
 
@@ -272,12 +276,20 @@ class CacheManifest:
     created_at: float = 0.0
     last_used_at: float = 0.0
     entry_count: int = 0
+    # -- cache-economics budgets (v2; all optional, None = unbounded) ------
+    max_entries: Optional[int] = None      # entry-count budget
+    max_bytes: Optional[int] = None        # store-size budget (bytes)
+    ttl_seconds: Optional[float] = None    # entry time-to-live
     format_version: int = MANIFEST_VERSION
 
     @classmethod
     def new(cls, **kw) -> "CacheManifest":
         now = time.time()
         return cls(created_at=now, last_used_at=now, **kw)
+
+    def has_budget(self) -> bool:
+        return (self.max_entries is not None or self.max_bytes is not None
+                or self.ttl_seconds is not None)
 
     # -- integrity ---------------------------------------------------------
     def body(self) -> Dict[str, Any]:
@@ -288,6 +300,11 @@ class CacheManifest:
 
     # -- io ----------------------------------------------------------------
     def save(self, dirpath: str) -> str:
+        # older schemas upgrade to the current one on write (v1 dirs
+        # adopt v2 the first time a v2 build touches them); a *future*
+        # version is left intact so load() still rejects it
+        if self.format_version < MANIFEST_VERSION:
+            self.format_version = MANIFEST_VERSION
         doc = self.body()
         doc["checksum"] = self.checksum()
         path = manifest_path(dirpath)

@@ -38,9 +38,11 @@ class RetrieverCache(CacheTransformer):
                  verify_fraction: float = 0.0,
                  backend: Any = None,
                  fingerprint: Optional[str] = None,
-                 on_stale: str = "error"):
+                 on_stale: str = "error",
+                 budget: Any = None):
         super().__init__(path, retriever, verify_fraction=verify_fraction,
-                         fingerprint=fingerprint, on_stale=on_stale)
+                         fingerprint=fingerprint, on_stale=on_stale,
+                         budget=budget)
         self.key_cols: Tuple[str, ...] = \
             (key,) if isinstance(key, str) else tuple(key)
         self._open_manifest(
@@ -97,6 +99,7 @@ class RetrieverCache(CacheTransformer):
             return None
         self.stats.add(hits=len(hashes))
         self._note_call(len(hashes), 0)
+        self._note_access(hashes)
         all_rows: List[dict] = []
         for b in blobs:
             all_rows.extend(self._decode_frame(b))
@@ -112,6 +115,7 @@ class RetrieverCache(CacheTransformer):
             return None
         self.stats.add(hits=1)
         self._note_call(1, 0)
+        self._note_access([hashed])
         return ColFrame.from_dicts(self._decode_frame(blob))
 
     def transform(self, inp: ColFrame) -> ColFrame:
@@ -137,6 +141,7 @@ class RetrieverCache(CacheTransformer):
         self.stats.add(hits=len(hashes) - len(miss_idx),
                        misses=len(miss_idx))
         self._note_call(len(hashes) - len(miss_idx), len(miss_idx))
+        self._note_access(hashes)        # hits + fresh inserts alike
 
         all_rows: List[dict] = []
         for rows in results:

@@ -1,0 +1,111 @@
+"""Speculative cache warming — precomputation as an operational tool.
+
+The paper's central device is *precomputation*: express the pipeline
+end-to-end, compute the expensive stages ahead of time, serve the rest
+from caches.  ``warm_scenario`` packages that as an offline job
+(`repro cache warm SCENARIO`): it builds the named serving scenario
+(``serve/registry.py``), compiles its pipeline through the same plan
+stack a :class:`~repro.serve.service.PipelineService` would — identical
+expression, identical node fingerprints, identical cache directories —
+and drives :meth:`~repro.core.plan.ExecutionPlan.warm` over the
+scenario's expected traffic distribution (``warming_frame`` simulates
+the closed-loop generator's zipf draws).  A service later opened over
+the same ``cache_dir`` with matching scenario parameters starts warm:
+its first requests are all cache hits, collapsing cold-start tail
+latency (asserted by ``benchmarks/serve_bench.py``'s warmed-start epoch
+and the cache-lifecycle CI job).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+__all__ = ["warm_scenario"]
+
+
+def warm_scenario(scenario: Any, cache_dir: str, *,
+                  queries: Any = None,
+                  budget: Optional[int] = None,
+                  backend: Optional[str] = None,
+                  cache_budget: Any = None,
+                  requests: int = 512, clients: int = 4,
+                  scale: float = 0.05, cutoff: int = 10,
+                  num_results: int = 100, seed: int = 0,
+                  batch_size: Optional[int] = None,
+                  chunk_rows: Optional[int] = None,
+                  on_stale: str = "error") -> Dict[str, Any]:
+    """Precompute a serving scenario's caches offline.
+
+    Parameters
+    ----------
+    scenario:
+        A scenario name (``"bm25"`` / ``"bm25-mono"`` / ``"mono"``) or
+        an already-built :class:`~repro.serve.registry.ServeScenario`.
+        Names are built with ``scale``/``cutoff``/``num_results``/
+        ``seed`` — these MUST match the later serve invocation, or the
+        node fingerprints (and hence cache directories) will differ.
+    cache_dir / backend:
+        Where the planner-inserted caches live and which store backs
+        them — again forwarded exactly as ``repro serve`` would.
+    queries:
+        Optional explicit warming frame (anything
+        ``ColFrame.coerce`` accepts, rows of qid/query[/extras]).
+        Default: ``warming_frame(...)`` — the scenario's own expected
+        traffic distribution, hottest queries first.
+    budget:
+        Warm only the ``budget`` most-expected queries (``None`` =
+        the whole topic pool, guaranteeing a subsequent matching serve
+        run has zero misses).
+    cache_budget:
+        Optional per-node size/TTL envelope recorded into the freshly
+        warmed manifests (``economics.CacheBudget`` / dict / int).
+    chunk_rows:
+        Warm in qid-aligned chunks of at most this many rows
+        (bounded-memory warming of large logs).
+
+    Returns a report dict (queries warmed, per-run cache hit/miss
+    counts, wall time) suitable for ``--json`` output.
+    """
+    # imports deferred: this module is reachable from `repro.caching`,
+    # which core/plan itself imports — resolving the plan/serve stack
+    # lazily keeps the package import-cycle free
+    from ..core.frame import ColFrame
+    from ..core.plan import ExecutionPlan
+    from ..serve.registry import ServeScenario, build_scenario, \
+        warming_frame
+
+    if not isinstance(scenario, ServeScenario):
+        scenario = build_scenario(str(scenario), scale=scale,
+                                  cutoff=cutoff,
+                                  num_results=num_results, seed=seed)
+    if queries is None:
+        frame = warming_frame(scenario, budget=budget,
+                              n_requests=requests, n_clients=clients,
+                              seed=seed)
+    else:
+        frame = ColFrame.coerce(queries)
+        if budget is not None:
+            frame = frame.take(np.arange(min(int(budget), len(frame))))
+
+    t0 = time.perf_counter()
+    plan = ExecutionPlan([scenario.pipeline], cache_dir=cache_dir,
+                         cache_backend=backend, on_stale=on_stale,
+                         cache_budget=cache_budget)
+    try:
+        stats = plan.warm(frame, batch_size=batch_size,
+                          chunk_rows=chunk_rows)
+    finally:
+        plan.close()
+    wall = time.perf_counter() - t0
+    return {
+        "scenario": scenario.name,
+        "cache_dir": cache_dir,
+        "backend": backend,
+        "queries_warmed": int(len(frame)),
+        "cache_hits": int(stats.cache_hits),
+        "cache_misses": int(stats.cache_misses),
+        "nodes_executed": int(stats.nodes_executed),
+        "wall_s": round(wall, 4),
+    }

@@ -5,11 +5,23 @@ Every cache directory carries a checksummed ``manifest.json``
 carry per-plan manifests under ``plans/``; this tool consumes both:
 
 * ``ls ROOT``        — list cache dirs (family, backend, entries,
-  fingerprint, last use) and the plans that reference them;
+  budgets + utilization, fingerprint, last use) and the plans that
+  reference them; ``--sort size|age|hits`` orders the listing,
+  ``--json`` emits the same record machine-readably;
 * ``verify ROOT``    — integrity check: manifest checksums, format
   versions, store presence, recorded-vs-actual entry counts, and
   plan-manifest ↔ dir-manifest fingerprint consistency (exit 1 on any
   failure — a hand-edited manifest is detected by its checksum);
+* ``warm SCENARIO``  — speculative precomputation: compile the named
+  serving scenario through the plan stack and precompute its caches
+  offline over the expected traffic distribution (``--queries F`` for
+  an explicit qid/query log, ``--budget N`` for the N hottest), so a
+  later ``repro serve`` over the same ``--cache-dir`` starts warm;
+* ``evict ROOT``     — enforce per-family budgets: TTL-expired entries
+  first, then least-recently-used, until every dir is within
+  ``--budget`` entries / ``--max-bytes`` / ``--ttl``; ``--record``
+  writes the budget into the manifests so ``close()`` re-enforces it
+  automatically;
 * ``gc ROOT``        — prune dirs unused for ``--older-than`` and/or
   ``--orphaned`` dirs no plan manifest references (dry-run unless
   ``--yes``);
@@ -37,13 +49,14 @@ import tempfile
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
-from ..caching.backends import BACKENDS
+from ..caching.backends import (BACKENDS, backend_store_exists,
+                                split_tiered)
 from ..caching.provenance import (MANIFEST_NAME, PLAN_MANIFEST_VERSION,
                                   CacheManifest, ManifestError,
                                   iter_plan_manifests, manifest_path)
 
-__all__ = ["register", "cmd_ls", "cmd_verify", "cmd_gc", "cmd_export",
-           "cmd_import"]
+__all__ = ["register", "cmd_ls", "cmd_verify", "cmd_warm", "cmd_evict",
+           "cmd_gc", "cmd_export", "cmd_import"]
 
 EXPORT_FORMAT_VERSION = 1
 
@@ -62,6 +75,11 @@ def register(subparsers) -> None:
     ls = sub.add_parser("ls", help="list cache dirs and plan manifests")
     ls.add_argument("root", help="cache root (a planner cache_dir) or "
                                  "a single cache directory")
+    ls.add_argument("--sort", choices=("name", "size", "age", "hits"),
+                    default="name",
+                    help="order dirs by store size (desc), last use "
+                         "(oldest first) or recorded hits (desc); "
+                         "default: name")
     ls.add_argument("--json", action="store_true", dest="as_json")
     ls.set_defaults(func=cmd_ls)
 
@@ -69,6 +87,55 @@ def register(subparsers) -> None:
     vf.add_argument("root")
     vf.add_argument("--json", action="store_true", dest="as_json")
     vf.set_defaults(func=cmd_verify)
+
+    wm = sub.add_parser(
+        "warm", help="speculatively precompute a serving scenario's caches")
+    wm.add_argument("scenario",
+                    help="serving scenario name (see `repro serve "
+                         "--list-pipelines`): bm25, bm25-mono, mono")
+    wm.add_argument("--cache-dir", required=True,
+                    help="cache root to precompute into (pass the same "
+                         "directory to `repro serve` later)")
+    wm.add_argument("--queries", default=None, metavar="FILE",
+                    help="explicit warming log: TSV 'qid<TAB>query' lines "
+                         "or a .json list of row objects; default is the "
+                         "scenario's expected traffic distribution")
+    wm.add_argument("--budget", type=int, default=None, metavar="N",
+                    help="warm only the N most-expected queries")
+    wm.add_argument("--backend", default=None,
+                    help="cache backend selector (e.g. sqlite, "
+                         "tiered:sqlite); default: per-family defaults")
+    wm.add_argument("--requests", type=int, default=512,
+                    help="simulated request count for the traffic "
+                         "distribution (default 512)")
+    wm.add_argument("--clients", type=int, default=4,
+                    help="simulated closed-loop clients (default 4; match "
+                         "the serve invocation)")
+    wm.add_argument("--scale", type=float, default=0.05)
+    wm.add_argument("--cutoff", type=int, default=10)
+    wm.add_argument("--num-results", type=int, default=100)
+    wm.add_argument("--seed", type=int, default=0)
+    wm.add_argument("--batch-size", type=int, default=None)
+    wm.add_argument("--chunk-rows", type=int, default=None,
+                    help="warm in qid-aligned chunks of at most this many "
+                         "rows (bounded memory for large logs)")
+    wm.add_argument("--json", action="store_true", dest="as_json")
+    wm.set_defaults(func=cmd_warm)
+
+    ev = sub.add_parser(
+        "evict", help="enforce entry/size/TTL budgets (LRU eviction)")
+    ev.add_argument("root", help="cache root or a single cache directory")
+    ev.add_argument("--budget", type=int, default=None, metavar="N",
+                    help="max entries per cache dir")
+    ev.add_argument("--max-bytes", default=None, metavar="SIZE",
+                    help="max store bytes per dir (K/M/G suffixes ok)")
+    ev.add_argument("--ttl", default=None, metavar="AGE",
+                    help="evict entries unused for AGE (e.g. 30s, 12h, 7d)")
+    ev.add_argument("--record", action="store_true",
+                    help="also record this budget in each dir's manifest "
+                         "so close() re-enforces it automatically")
+    ev.add_argument("--json", action="store_true", dest="as_json")
+    ev.set_defaults(func=cmd_evict)
 
     gc = sub.add_parser("gc", help="prune stale / orphaned cache dirs")
     gc.add_argument("root")
@@ -122,25 +189,38 @@ def _cache_dirs(root: str) -> List[str]:
     return out
 
 
+def _disk_name(backend: Optional[str]) -> Optional[str]:
+    """Resolve a ``tiered[:<disk>]`` selector to its disk tier name;
+    pass plain registry names through; ``None`` for anything else."""
+    try:
+        disk = split_tiered(backend) if isinstance(backend, str) else None
+    except ValueError:
+        return None
+    if disk is not None:
+        return disk
+    return backend if backend in BACKENDS else None
+
+
 def _store_exists(dirpath: str, backend: Optional[str]) -> bool:
-    if backend in BACKENDS:              # registry backends know their files
-        return BACKENDS[backend].store_exists(dirpath)
     if backend == "dense":               # DenseScorerCache layout
         return os.path.exists(os.path.join(dirpath, "scores.npy"))
     if backend == "log":                 # IndexerCache layout
         return os.path.exists(os.path.join(dirpath, "offsets.npy"))
-    return False
+    # registry backends (incl. tiered:<disk>) know their own files
+    return backend_store_exists(backend, dirpath)
 
 
 def _actual_entries(dirpath: str, backend: Optional[str]) -> Optional[int]:
     """Count the entries actually present in a directory's store;
-    ``None`` when the backend cannot be counted offline."""
+    ``None`` when the backend cannot be counted offline.  Tiered
+    selectors count their disk tier (the source of truth)."""
+    disk = _disk_name(backend)
     if backend == "memory":
         return None                      # in-process only; nothing on disk
     if not _store_exists(dirpath, backend):
         return 0
-    if backend in BACKENDS:
-        b = BACKENDS[backend](dirpath)
+    if disk is not None:
+        b = BACKENDS[disk](dirpath)
         try:
             return len(b)
         finally:
@@ -194,6 +274,20 @@ def _parse_age(text: str) -> float:
                          f"(expected e.g. 30s, 12h, 7d)")
 
 
+def _parse_size(text: str) -> int:
+    text = text.strip().lower()
+    units = {"k": 1024, "m": 1024 ** 2, "g": 1024 ** 3}
+    mult = 1
+    if text and text[-1] in units:
+        mult = units[text[-1]]
+        text = text[:-1]
+    try:
+        return int(float(text) * mult)
+    except ValueError:
+        raise SystemExit(f"repro cache: invalid size {text!r} "
+                         f"(expected e.g. 4096, 64K, 2M, 1G)")
+
+
 def _load_manifest_doc(dirpath: str) -> Tuple[Optional[CacheManifest],
                                               Optional[str]]:
     try:
@@ -206,6 +300,41 @@ def _load_manifest_doc(dirpath: str) -> Tuple[Optional[CacheManifest],
 # ls
 # ---------------------------------------------------------------------------
 
+def _access_hits(dirpath: str) -> int:
+    """Total recorded hits from the dir's access-stats sidecar."""
+    from ..caching.economics import AccessStats
+    return AccessStats.load(dirpath).total_hits()
+
+
+def _budget_utilization(m: CacheManifest,
+                        size_bytes: int) -> Optional[Dict[str, Any]]:
+    """Fraction of each recorded budget in use (``None`` when the dir
+    has no budget).  ``entries`` is manifest count / ``max_entries``;
+    ``bytes`` is on-disk size / ``max_bytes``."""
+    if not m.has_budget():
+        return None
+    out: Dict[str, Any] = {}
+    if m.max_entries is not None:
+        out["entries"] = round(m.entry_count / m.max_entries, 4) \
+            if m.max_entries > 0 else None
+    if m.max_bytes is not None:
+        out["bytes"] = round(size_bytes / m.max_bytes, 4) \
+            if m.max_bytes > 0 else None
+    return out
+
+
+def _sort_dirs(dirs: List[Dict[str, Any]], key: str) -> List[Dict[str, Any]]:
+    if key == "size":
+        return sorted(dirs, key=lambda r: (-r.get("size_bytes", 0),
+                                           r["dir"]))
+    if key == "age":                     # oldest last-use first
+        return sorted(dirs, key=lambda r: (r.get("last_used_at", 0.0),
+                                           r["dir"]))
+    if key == "hits":
+        return sorted(dirs, key=lambda r: (-r.get("hits", 0), r["dir"]))
+    return dirs                          # "name": _cache_dirs order
+
+
 def _collect(root: str) -> Dict[str, Any]:
     root = os.path.abspath(root)
     dirs = []
@@ -216,6 +345,7 @@ def _collect(root: str) -> Dict[str, Any]:
         if err is not None:
             rec["error"] = err
         else:
+            size = _dir_size(d)
             rec.update(family=m.family, backend=m.backend,
                        fingerprint=m.fingerprint,
                        transformer=m.transformer,
@@ -224,7 +354,12 @@ def _collect(root: str) -> Dict[str, Any]:
                        entry_count=m.entry_count,
                        created_at=m.created_at,
                        last_used_at=m.last_used_at,
-                       size_bytes=_dir_size(d))
+                       size_bytes=size,
+                       max_entries=m.max_entries,
+                       max_bytes=m.max_bytes,
+                       ttl_seconds=m.ttl_seconds,
+                       hits=_access_hits(d),
+                       budget_utilization=_budget_utilization(m, size))
         dirs.append(rec)
     plans = []
     for path, doc, err in iter_plan_manifests(root):
@@ -243,6 +378,7 @@ def _collect(root: str) -> Dict[str, Any]:
 
 def cmd_ls(args) -> int:
     info = _collect(args.root)
+    info["dirs"] = _sort_dirs(info["dirs"], getattr(args, "sort", "name"))
     if args.as_json:
         print(json.dumps(info, indent=2, sort_keys=True))
         return 0
@@ -253,9 +389,16 @@ def cmd_ls(args) -> int:
             print(f"{rec['dir']}: UNREADABLE ({rec['error']})")
             continue
         fp = rec["fingerprint"] or "-"
+        budget = ""
+        util = rec.get("budget_utilization")
+        if util:
+            parts = [f"{k}={v:.0%}" for k, v in sorted(util.items())
+                     if v is not None]
+            budget = f" budget[{' '.join(parts)}]" if parts else ""
         print(f"{rec['dir']}: {rec['family']}[{rec['backend']}] "
               f"entries={rec['entry_count']} "
-              f"size={rec['size_bytes'] / 1024:.1f}KiB fp={fp} "
+              f"size={rec['size_bytes'] / 1024:.1f}KiB "
+              f"hits={rec.get('hits', 0)}{budget} fp={fp} "
               f"last_used={_fmt_time(rec['last_used_at'])}")
         if rec.get("transformer"):
             print(f"    transformer: {rec['transformer']}")
@@ -337,6 +480,98 @@ def cmd_verify(args) -> int:
                 print(f"OK   {r['dir']}")
         print(f"verified {len(report)} item(s), {len(failed)} failure(s)")
     return 1 if failed else 0
+
+
+# ---------------------------------------------------------------------------
+# warm (speculative precomputation)
+# ---------------------------------------------------------------------------
+
+def _load_queries_file(path: str) -> List[Dict[str, Any]]:
+    """Rows for an explicit warming log: a ``.json`` list of row
+    objects, or TSV ``qid<TAB>query`` lines."""
+    if path.endswith(".json"):
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+        rows = doc if isinstance(doc, list) else doc.get("rows")
+        if not isinstance(rows, list):
+            raise SystemExit(f"repro cache warm: {path!r} must hold a JSON "
+                             f"list of row objects (or {{'rows': [...]}})")
+        return rows
+    rows = []
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.rstrip("\n")
+            if not line:
+                continue
+            qid, sep, query = line.partition("\t")
+            if not sep:
+                raise SystemExit(f"repro cache warm: {path!r} line "
+                                 f"{line!r} is not 'qid<TAB>query'")
+            rows.append({"qid": qid, "query": query})
+    return rows
+
+
+def cmd_warm(args) -> int:
+    from ..caching.warming import warm_scenario
+    queries = _load_queries_file(args.queries) if args.queries else None
+    rep = warm_scenario(
+        args.scenario, os.path.abspath(args.cache_dir),
+        queries=queries, budget=args.budget, backend=args.backend,
+        requests=args.requests, clients=args.clients, scale=args.scale,
+        cutoff=args.cutoff, num_results=args.num_results, seed=args.seed,
+        batch_size=args.batch_size, chunk_rows=args.chunk_rows)
+    if args.as_json:
+        print(json.dumps(rep, indent=2, sort_keys=True))
+    else:
+        print(f"warmed {rep['queries_warmed']} query(s) for scenario "
+              f"{rep['scenario']!r} into {rep['cache_dir']} "
+              f"(precomputed={rep['cache_misses']} "
+              f"already-cached={rep['cache_hits']}, "
+              f"{rep['wall_s']:.2f}s)")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# evict (budget enforcement)
+# ---------------------------------------------------------------------------
+
+def cmd_evict(args) -> int:
+    from ..caching.economics import CacheBudget, enforce_dir
+    root = os.path.abspath(args.root)
+    budget = CacheBudget(
+        max_entries=args.budget,
+        max_bytes=_parse_size(args.max_bytes)
+        if args.max_bytes is not None else None,
+        ttl_seconds=_parse_age(args.ttl)
+        if args.ttl is not None else None)
+    dirs = _cache_dirs(root)
+    if not dirs:
+        print(f"no cache directories under {root}")
+        return 0
+    report = []
+    for d in dirs:
+        rel = os.path.relpath(d, root) if d != root else "."
+        if args.record and not budget.empty():
+            m, err = _load_manifest_doc(d)
+            if m is not None and budget.record_in(m):
+                m.save(d)
+        rep = enforce_dir(d, None if budget.empty() else budget)
+        report.append({"dir": rel, **rep})
+    if args.as_json:
+        print(json.dumps({"root": root, "dirs": report},
+                         indent=2, sort_keys=True))
+        return 0
+    for rec in report:
+        if "skipped" in rec:
+            print(f"{rec['dir']}: skipped ({rec['skipped']})")
+            continue
+        print(f"{rec['dir']}: evicted {rec['evicted']} "
+              f"({rec['expired']} expired), {rec['entries_before']} -> "
+              f"{rec['entries_after']} entrie(s), "
+              f"{rec['evicted_bytes'] / 1024:.1f}KiB freed"
+              + (f", {rec['unevictable']} unevictable"
+                 if rec.get("unevictable") else ""))
+    return 0
 
 
 # ---------------------------------------------------------------------------

@@ -39,9 +39,9 @@ from .frame import ColFrame
 from .ir import IRNode, PlanGraph
 from .precompute import _run_stage
 
-__all__ = ["run_sequential", "run_concurrent", "resolve_n_shards",
-           "Reservoir", "NodeOnlineStats", "StreamStats",
-           "StreamingExecutor"]
+__all__ = ["run_sequential", "run_concurrent", "run_warm",
+           "resolve_n_shards", "Reservoir", "NodeOnlineStats",
+           "StreamStats", "StreamingExecutor"]
 
 
 def _qid_runs_unique(qids: np.ndarray) -> bool:
@@ -226,6 +226,41 @@ def run_sequential(graph: PlanGraph, frame: ColFrame,
         return out
 
     return [evaluate(t) for t in graph.terminals]
+
+
+def run_warm(graph: PlanGraph, frame: ColFrame,
+             batch_size: Optional[int] = None, *,
+             chunk_rows: Optional[int] = None,
+             rec: Optional[_Recorder] = None) -> int:
+    """Offline cache warming: evaluate every terminal over ``frame``
+    purely for the side effect of populating memo caches; outputs are
+    discarded chunk by chunk.
+
+    With ``chunk_rows``, the frame is cut into qid-aligned chunks of
+    roughly that many rows (the same boundary logic as the sharded
+    scheduler), so warming an arbitrarily large query log holds at most
+    one chunk of intermediates in memory.  Chunking is skipped — one
+    full pass — when a stage declares ``shardable=False`` or qid runs
+    are non-contiguous, exactly mirroring ``resolve_n_shards``.
+    Returns the number of chunks executed.
+    """
+    rec = rec if rec is not None else _Recorder()
+    n = len(frame)
+    if n == 0:
+        return 0
+    bounds = [(0, n)]
+    if chunk_rows is not None and 0 < int(chunk_rows) < n:
+        want = -(-n // int(chunk_rows))
+        if all(node.shardable for node in graph.nodes
+               if node.kind == "stage") \
+                and ("qid" not in frame
+                     or _qid_runs_unique(frame["qid"])):
+            bounds = _shard_bounds(frame, want)
+    for lo, hi in bounds:
+        chunk = frame if (lo, hi) == (0, n) \
+            else frame.take(np.arange(lo, hi))
+        run_sequential(graph, chunk, batch_size, rec)
+    return len(bounds)
 
 
 def run_concurrent(graph: PlanGraph, frame: ColFrame,

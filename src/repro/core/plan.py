@@ -49,7 +49,7 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
                     Union)
 
 from .executor import (_Recorder, resolve_n_shards, run_concurrent,
-                       run_sequential)
+                       run_sequential, run_warm)
 from .frame import ColFrame
 from .ir import IRNode, PlanGraph, lower, plan_size, render_explain
 from .pipeline import Transformer, pipeline_hash
@@ -151,6 +151,12 @@ class ExecutionPlan:
         provenance fingerprint (``caching/provenance.py``): ``"error"``
         (default — raise ``StaleCacheError``), ``"recompute"`` (discard
         the stale entries) or ``"readonly"`` (serve them, never write).
+    cache_budget:
+        Optional per-node size/TTL envelope for planner-inserted caches
+        (``caching/economics.py``: a ``CacheBudget``, a dict of
+        ``max_entries``/``max_bytes``/``ttl_seconds``, or a bare int
+        entry budget).  Recorded in each node directory's manifest and
+        enforced on ``close()`` / via ``repro cache evict``.
     optimize:
         ``"all"`` (default) runs the full pass pipeline of
         ``core/rewrite.py``; ``"none"`` executes the naive lowered
@@ -164,10 +170,12 @@ class ExecutionPlan:
                  cache_backend: Optional[str] = None,
                  memo_factory: Optional[Callable[..., Any]] = None,
                  on_stale: str = "error",
+                 cache_budget: Any = None,
                  optimize: Union[str, Sequence[str], None] = "all"):
         self.pipelines: List[Transformer] = list(pipelines)
         self.cache_dir = cache_dir
         self.cache_backend = cache_backend
+        self.cache_budget = cache_budget
         self._memo_factory = memo_factory
         self.on_stale = on_stale
         self.optimize = optimize
@@ -275,6 +283,8 @@ class ExecutionPlan:
         kwargs: Dict[str, Any] = {}
         if self.cache_backend is not None:
             kwargs["backend"] = self.cache_backend
+        if self.cache_budget is not None:
+            kwargs["budget"] = self.cache_budget
         fps = self.node_fingerprints()
         for node in self.graph.nodes:
             if node.kind != "stage":
@@ -485,6 +495,32 @@ class ExecutionPlan:
             stats.occupancy = busy / (workers * stats.wall_time_s) \
                 if stats.wall_time_s > 0 else 0.0
         return outs, stats
+
+    def warm(self, queries: Any, *, batch_size: Optional[int] = None,
+             chunk_rows: Optional[int] = None) -> PlanStats:
+        """Speculative precomputation: execute the DAG over ``queries``
+        purely to populate the planner-inserted caches, discarding the
+        outputs (the paper's precomputation idea as an offline tool —
+        `repro cache warm` drives this).
+
+        The query frame is processed in qid-aligned chunks of at most
+        ``chunk_rows`` rows (default: one chunk), so arbitrarily large
+        warming logs run in bounded memory; chunking reuses the offline
+        scheduler's shard machinery, so results in the caches are
+        identical to a single full run.  Returns the usual
+        :class:`PlanStats` (``cache_misses`` counts entries actually
+        precomputed; a second warm over the same frame is all hits).
+        """
+        t0 = time.perf_counter()
+        frame = ColFrame.coerce(queries)
+        cache_base = self._cache_counters()
+        stats = self._new_stats()
+        rec = _Recorder()
+        run_warm(self.graph, frame, batch_size, chunk_rows=chunk_rows,
+                 rec=rec)
+        self._fill_exec_stats(stats, rec)
+        self._finalize_stats(stats, cache_base, t0)
+        return stats
 
     def _new_stats(self) -> PlanStats:
         agg = self._aggregate_pass_stats()

@@ -27,7 +27,7 @@ from ..core.frame import ColFrame
 from ..core.pipeline import Transformer
 
 __all__ = ["ServeScenario", "SERVE_PIPELINES", "build_scenario",
-           "run_closed_loop"]
+           "run_closed_loop", "warming_frame"]
 
 
 @dataclass
@@ -114,6 +114,48 @@ def build_scenario(name: str, *, scale: float = 0.05, cutoff: int = 10,
                        f"{sorted(SERVE_PIPELINES)}") from None
     return builder(scale=scale, cutoff=cutoff, num_results=num_results,
                    seed=seed)
+
+
+def warming_frame(scenario: ServeScenario, *,
+                  budget: Optional[int] = None,
+                  n_requests: int = 512, n_clients: int = 4,
+                  seed: int = 0) -> ColFrame:
+    """The scenario's expected traffic as a query frame for offline
+    cache warming (``repro cache warm`` / ``ExecutionPlan.warm``).
+
+    Simulates the *exact* per-client zipf draws of ``run_closed_loop``
+    (same rng seeding, same index formula) to rank topics by expected
+    request frequency, then appends the never-drawn tail in topic
+    order — so ``budget=None`` covers the whole pool (a subsequent
+    serve epoch with matching ``seed``/``scale`` has zero misses) and
+    ``budget=N`` precomputes the N most valuable queries first.
+    Request-extra columns (e.g. the doc text of scorer-only scenarios)
+    are merged per qid, mirroring what ``run_closed_loop`` submits.
+    """
+    qids = [str(q) for q in scenario.topics["qid"].tolist()]
+    queries = scenario.topics["query"].tolist()
+    n_topics = len(qids)
+    counts = np.zeros(n_topics, dtype=np.int64)
+    n_clients = max(1, n_clients)
+    per_client = [n_requests // n_clients
+                  + (1 if c < n_requests % n_clients else 0)
+                  for c in range(n_clients)]
+    for cid in range(n_clients):
+        rng = np.random.default_rng(seed * 1009 + cid)
+        for _ in range(per_client[cid]):
+            i = int(min(rng.zipf(1.3) - 1, n_topics - 1))
+            counts[i] += 1
+    # hottest first; zero-count tail keeps topic order (stable sort on
+    # -count), so the full-pool warm is deterministic
+    order = np.argsort(-counts, kind="stable")
+    if budget is not None:
+        order = order[:max(0, int(budget))]
+    rows: List[Dict[str, Any]] = []
+    for i in order.tolist():
+        row = {"qid": qids[i], "query": queries[i]}
+        row.update(scenario.request_extra.get(qids[i], {}))
+        rows.append(row)
+    return ColFrame.from_dicts(rows)
 
 
 def run_closed_loop(service, scenario: ServeScenario, *,

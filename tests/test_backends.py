@@ -409,3 +409,50 @@ def test_pickle_backend_items_unsupported(tmp_path):
     with pytest.raises(NotImplementedError, match="raw files"):
         b.items()
     b.close()
+
+
+# -- duplicate keys in one lookup batch ---------------------------------------
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_get_many_resolves_every_duplicate_occurrence(name, tmp_path):
+    """Regression: a micro-batch coalescing concurrent requests for the
+    same hot query hands get_many duplicate keys — every occurrence
+    must resolve (the sqlite backend used to fill only one slot per
+    unique key, turning repeat traffic into spurious misses and
+    recomputation)."""
+    b = open_backend(name, str(tmp_path))
+    b.put_many([(b"a", b"1"), (b"b", b"2")])
+    assert b.get_many([b"a", b"a", b"b", b"nope", b"a", b"b"]) == \
+        [b"1", b"1", b"2", None, b"1", b"2"]
+    b.close()
+
+
+# -- eviction-facing protocol (delete_many / entry_stats / stat_entries) ------
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_backend_delete_many(name, tmp_path):
+    b = open_backend(name, str(tmp_path))
+    b.put_many([(f"k{i}".encode(), f"v{i}".encode()) for i in range(4)])
+    assert b.delete_many([b"k0", b"k2", b"missing"]) == 2
+    assert b.get_many([b"k0", b"k1", b"k2", b"k3"]) == \
+        [None, b"v1", None, b"v3"]
+    assert len(b) == 2
+    b.close()
+
+
+@pytest.mark.parametrize("name", ["memory", "dbm", "sqlite"])
+def test_backend_entry_stats_and_stat_entries(name, tmp_path):
+    b = open_backend(name, str(tmp_path))
+    b.put_many([(b"k1", b"v"), (b"k2", b"vv")])
+    assert sorted(b.entry_stats()) == [(b"k1", 1), (b"k2", 2)]
+    assert b.stat_entries([b"k2", b"nope", b"k1"]) == [2, None, 1]
+    b.close()
+
+
+def test_pickle_entry_stats_unsupported_but_stat_entries_works(tmp_path):
+    b = open_backend("pickle", str(tmp_path))
+    b.put(b"k", b"val")
+    with pytest.raises(NotImplementedError):
+        b.entry_stats()
+    assert b.stat_entries([b"k", b"nope"]) == [3, None]
+    b.close()

@@ -1,0 +1,412 @@
+"""Cache economics (caching/economics.py): budgets, access stats, the
+LRU/TTL eviction pass, close-time enforcement, offline `repro cache
+evict` / speculative `repro cache warm`, and the entry_count-refresh
+regression (manifests must stay truthful against a still-open
+backend)."""
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.caching import (AccessStats, CacheBudget, CacheManifest,
+                           DenseScorerCache, KeyValueCache, enforce_dir,
+                           evict_entries, open_backend, warm_scenario)
+from repro.caching import provenance as prov
+from repro.cli import main
+from repro.core import ColFrame, ExecutionPlan, GenericTransformer
+
+# ruff: noqa: E402
+from repro.caching.economics import open_family_for_dir
+
+
+def _expander():
+    return GenericTransformer(
+        lambda inp: inp.assign(query=np.array(
+            [q + "!" for q in inp["query"].tolist()], dtype=object)),
+        "expander", key_columns=("qid", "query"), value_columns=("query",))
+
+
+def _topics(n=8):
+    return ColFrame({"qid": [f"q{i}" for i in range(n)],
+                     "query": [f"terms {i}" for i in range(n)]})
+
+
+# -- CacheBudget --------------------------------------------------------------
+
+def test_budget_coerce():
+    assert CacheBudget.coerce(None).empty()
+    assert CacheBudget.coerce(5) == CacheBudget(max_entries=5)
+    b = CacheBudget(max_bytes=1024)
+    assert CacheBudget.coerce(b) is b
+    assert CacheBudget.coerce({"max_entries": 3, "ttl_seconds": 60.0}) == \
+        CacheBudget(max_entries=3, ttl_seconds=60.0)
+    with pytest.raises(TypeError, match="bool"):
+        CacheBudget.coerce(True)
+    with pytest.raises(ValueError, match="unknown cache budget"):
+        CacheBudget.coerce({"max_rows": 3})
+    with pytest.raises(TypeError, match="CacheBudget"):
+        CacheBudget.coerce("3")
+
+
+def test_budget_manifest_roundtrip(tmp_path):
+    m = CacheManifest.new(family="KeyValueCache", backend="sqlite",
+                          fingerprint="aa" * 8)
+    assert not m.has_budget()
+    budget = CacheBudget(max_entries=10, ttl_seconds=3600.0)
+    assert budget.record_in(m)                   # changed
+    assert not budget.record_in(m)               # idempotent
+    m.save(str(tmp_path))
+    loaded = CacheManifest.load(str(tmp_path))
+    assert loaded.format_version == prov.MANIFEST_VERSION
+    assert loaded.has_budget()
+    assert CacheBudget.from_manifest(loaded) == budget
+
+
+def test_v1_manifest_adopts_v2_schema(tmp_path):
+    """A pre-economics (v1) manifest loads with an empty budget and is
+    upgraded in place the next time it is saved."""
+    m = CacheManifest.new(family="KeyValueCache", backend="sqlite",
+                          fingerprint="bb" * 8)
+    doc = m.body()
+    doc["format_version"] = 1
+    for k in ("max_entries", "max_bytes", "ttl_seconds"):
+        del doc[k]
+    doc["checksum"] = prov._body_checksum(doc)
+    with open(os.path.join(tmp_path, "manifest.json"), "w") as f:
+        json.dump(doc, f)
+    loaded = CacheManifest.load(str(tmp_path))
+    assert loaded.format_version == 1
+    assert not loaded.has_budget()
+    assert CacheBudget.from_manifest(loaded).empty()
+    loaded.save(str(tmp_path))                   # upgrade-on-write
+    assert CacheManifest.load(str(tmp_path)).format_version == \
+        prov.MANIFEST_VERSION
+
+
+# -- AccessStats --------------------------------------------------------------
+
+def test_access_stats_merge_forget_persist(tmp_path):
+    a = AccessStats()
+    a.merge_pending({b"k1": [100.0, 2], b"k2": [50.0, 1]})
+    a.merge_pending({b"k1": [80.0, 3]})          # older ts, more hits
+    assert a.last_used(b"k1") == 100.0           # later timestamp wins
+    assert a.hits(b"k1") == 5                    # hit counts add
+    assert a.total_hits() == 6
+    a.save(str(tmp_path))
+    b = AccessStats.load(str(tmp_path))
+    assert b.last_used(b"k1") == 100.0 and b.hits(b"k2") == 1
+    assert sorted(b.keys_bytes()) == [b"k1", b"k2"]
+    b.forget([b"k1", b"unknown"])
+    assert len(b) == 1 and b.last_used(b"k1", -1.0) == -1.0
+
+
+def test_access_stats_corrupt_file_loads_empty(tmp_path):
+    with open(AccessStats.path_of(str(tmp_path)), "w") as f:
+        f.write("{not json")
+    assert len(AccessStats.load(str(tmp_path))) == 0
+
+
+# -- evict_entries (the pass itself, deterministic inputs) --------------------
+
+def _filled_backend(tmp_path, n=6):
+    b = open_backend("sqlite", str(tmp_path))
+    b.put_many([(b"k%d" % i, b"v" * (i + 1)) for i in range(n)])
+    return b
+
+
+def test_evict_lru_order_and_entry_budget(tmp_path):
+    b = _filled_backend(tmp_path)
+    access = AccessStats()
+    # recency: k3 and k5 most recent; the rest in key order at t=10
+    access.merge_pending({b"k%d" % i: [10.0, 1] for i in range(6)})
+    access.merge_pending({b"k3": [99.0, 1], b"k5": [98.0, 1]})
+    access.save(str(tmp_path))
+    rep = evict_entries(b, str(tmp_path), CacheBudget(max_entries=2),
+                        access=access, now=100.0)
+    assert rep["evicted"] == 4 and rep["entries_after"] == 2
+    assert rep["expired"] == 0 and rep["unevictable"] == 0
+    assert b.get(b"k3") and b.get(b"k5")         # most recent survive
+    assert b.get(b"k0") is None
+    # the sidecar forgot the victims
+    assert sorted(AccessStats.load(str(tmp_path)).keys_bytes()) == \
+        [b"k3", b"k5"]
+    b.close()
+
+
+def test_evict_ttl_before_lru(tmp_path):
+    b = _filled_backend(tmp_path)
+    access = AccessStats()
+    access.merge_pending({b"k%d" % i: [float(i * 10), 1] for i in range(6)})
+    # ttl 25s at now=60: k0 (t=0), k1 (t=10), k2 (t=20), k3 (t=30 > 35? no)
+    rep = evict_entries(b, str(tmp_path), CacheBudget(ttl_seconds=25.0),
+                        access=access, now=60.0)
+    assert rep["expired"] == 4                   # t in {0,10,20,30} <= 35
+    assert rep["evicted"] == 4 and rep["entries_after"] == 2
+    assert b.get(b"k4") and b.get(b"k5")
+    b.close()
+
+
+def test_evict_byte_budget(tmp_path):
+    b = _filled_backend(tmp_path)                # sizes 1..6, total 21
+    access = AccessStats()
+    access.merge_pending({b"k%d" % i: [float(i), 1] for i in range(6)})
+    rep = evict_entries(b, str(tmp_path), CacheBudget(max_bytes=12),
+                        access=access, now=100.0)
+    assert rep["bytes_after"] <= 12
+    assert not rep["bytes_approximate"]
+    assert b.get(b"k5") == b"v" * 6              # most recent survives
+    b.close()
+
+
+def test_evict_unknown_entries_age_as_the_directory(tmp_path):
+    """Entries the sidecar never saw must be evictable (treated as old
+    as created_at), not immortal."""
+    b = _filled_backend(tmp_path)
+    access = AccessStats()
+    access.merge_pending({b"k5": [50.0, 1]})     # only k5 is known
+    rep = evict_entries(b, str(tmp_path), CacheBudget(max_entries=1),
+                        access=access, created_at=1.0, now=100.0)
+    assert rep["evicted"] == 5
+    assert b.get(b"k5") == b"v" * 6
+    b.close()
+
+
+def test_evict_pickle_fallback_uses_sidecar_pool(tmp_path):
+    """Backends that cannot enumerate (pickle) evict from the sidecar's
+    key set; unknown entries are reported unevictable."""
+    b = open_backend("pickle", str(tmp_path))
+    b.put_many([(b"k%d" % i, b"v%d" % i) for i in range(4)])
+    access = AccessStats()
+    access.merge_pending({b"k0": [1.0, 1], b"k1": [2.0, 1]})  # 2 of 4 known
+    rep = evict_entries(b, str(tmp_path), CacheBudget(max_entries=1),
+                        access=access, now=100.0)
+    assert rep["bytes_approximate"]
+    assert rep["evicted"] == 2                   # only the known ones
+    assert rep["entries_after"] == 2 and rep["unevictable"] == 1
+    assert b.get(b"k0") is None and b.get(b"k1") is None
+    b.close()
+
+
+# -- family-level eviction + the entry_count-refresh regression ---------------
+
+def test_kv_evict_refreshes_manifest_before_close(tmp_path):
+    """THE PR-6 bugfix: after evict() the on-disk manifest must reflect
+    the new entry count immediately (verify runs against still-open
+    backends), not only at close()."""
+    kv = KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="sqlite")
+    kv(_topics(8))
+    rep = kv.evict(3)
+    assert rep["entries_after"] == 3 and len(kv.backend) == 3
+    # manifest refreshed NOW, while the cache is still open
+    assert CacheManifest.load(str(tmp_path)).entry_count == 3
+    assert main(["cache", "verify", str(tmp_path)]) == 0
+    kv.close()
+
+
+def test_close_enforces_constructor_budget(tmp_path):
+    with KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="sqlite", budget=3) as kv:
+        kv(_topics(8))
+        assert len(kv.backend) == 8              # not enforced mid-run
+    m = CacheManifest.load(str(tmp_path))
+    assert m.entry_count == 3 and m.max_entries == 3
+    b = open_backend("sqlite", str(tmp_path))
+    assert len(b) == 3
+    b.close()
+
+
+def test_close_enforces_recorded_budget_without_constructor(tmp_path):
+    """The budget outlives the process that configured it: a later
+    opener without budget= still enforces what the manifest records."""
+    with KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="sqlite", budget=4) as kv:
+        kv(_topics(4))
+    with KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="sqlite") as kv2:
+        assert kv2.budget == CacheBudget(max_entries=4)
+        kv2(_topics(8))                          # 4 hits + 4 new = 8 entries
+    b = open_backend("sqlite", str(tmp_path))
+    assert len(b) == 4
+    b.close()
+
+
+def test_evict_without_budget_is_skipped_and_memory_raises(tmp_path):
+    kv = KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="sqlite")
+    kv(_topics(4))
+    assert "skipped" in kv.evict()
+    assert kv.evict(2)["entries_after"] == 2
+    kv.close()
+
+
+def test_dense_evict_nans_rows_and_reuses_row_slots(tmp_path):
+    scorer = GenericTransformer(
+        lambda inp: inp.assign(score=np.arange(len(inp), dtype=np.float64)),
+        "scorer", key_columns=("query", "docno"), value_columns=("score",))
+    docnos = [f"d{i}" for i in range(4)]
+
+    def frame(queries):
+        rows = [{"qid": q, "query": q, "docno": d, "score": 0.0, "rank": 0}
+                for q in queries for d in docnos]
+        return ColFrame.from_dicts(rows)
+
+    dc = DenseScorerCache(str(tmp_path), scorer, docnos=docnos)
+    dc(frame(["qa", "qb", "qc"]))
+    assert len(dc) == 12                         # 3 queries x 4 docs
+    rep = dc.evict({"max_entries": 4})           # keep one query row
+    assert rep["entries_after"] == 4
+    assert CacheManifest.load(str(tmp_path)).entry_count == 4
+    # the freed row indices are reused, not appended past the matrix
+    dc(frame(["qd"]))
+    assert len(dc) == 8
+    assert max(dc._query_rows.values()) <= 2
+    out = dc(frame(["qd"]))                      # replay is a pure hit
+    assert dc.stats.misses == 12 + 4             # qa..qc cold + qd, no more
+    assert dc.stats.hits == 4                    # the qd replay
+    assert np.all(np.asarray(out["score"]) == np.arange(4, dtype=float))
+    dc.close()
+
+
+# -- offline enforcement (enforce_dir / repro cache evict) --------------------
+
+def test_enforce_dir_offline(tmp_path):
+    with KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="sqlite") as kv:
+        kv(_topics(8))
+    assert enforce_dir(str(tmp_path))["skipped"].startswith("no budget")
+    rep = enforce_dir(str(tmp_path), 2)
+    assert rep["entries_after"] == 2
+    assert CacheManifest.load(str(tmp_path)).entry_count == 2
+    assert enforce_dir(str(tmp_path / "nope")) == {"skipped": "no manifest"}
+
+
+def test_open_family_for_dir_reconstructs_from_manifest(tmp_path):
+    with KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="dbm") as kv:
+        kv(_topics(3))
+    m = CacheManifest.load(str(tmp_path))
+    fam = open_family_for_dir(str(tmp_path), m)
+    assert isinstance(fam, KeyValueCache)
+    assert len(fam.backend) == 3
+    fam.close()
+
+
+# -- the CLI lifecycle: warm -> ls -> evict -> verify -------------------------
+
+@pytest.fixture(scope="module")
+def warmed_root(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("warmed") / "cache")
+    rep = warm_scenario("bm25", root, scale=0.02, requests=64, seed=0)
+    return root, rep
+
+
+def test_warm_scenario_precomputes_cold_dir(warmed_root):
+    root, rep = warmed_root
+    assert rep["queries_warmed"] > 0
+    assert rep["cache_misses"] > 0 and rep["cache_hits"] == 0
+    # idempotent: a second warm is all hits
+    rep2 = warm_scenario("bm25", root, scale=0.02, requests=64, seed=0)
+    assert rep2["cache_misses"] == 0
+    assert rep2["cache_hits"] == rep["cache_misses"]
+
+
+def test_warm_budget_caps_queries(tmp_path):
+    rep = warm_scenario("bm25", str(tmp_path / "c"), scale=0.02,
+                        requests=64, budget=5, seed=0)
+    assert rep["queries_warmed"] == 5
+
+
+def test_cli_ls_sort_and_budget_utilization(warmed_root, capsys):
+    root, _ = warmed_root
+    assert main(["cache", "ls", root, "--json", "--sort", "hits"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert set(doc) == {"root", "dirs", "plans"}
+    assert doc["dirs"]
+    hits = [d["hits"] for d in doc["dirs"]]
+    assert hits == sorted(hits, reverse=True)
+    assert all(d["budget_utilization"] is None for d in doc["dirs"])
+    assert main(["cache", "ls", root, "--json", "--sort", "size"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    sizes = [d["size_bytes"] for d in doc["dirs"]]
+    assert sizes == sorted(sizes, reverse=True)
+
+
+def test_cli_evict_records_and_enforces(warmed_root, capsys):
+    root, rep = warmed_root
+    budget = max(1, rep["queries_warmed"] // 2)
+    assert main(["cache", "evict", root, "--budget", str(budget),
+                 "--record", "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert any(r.get("evicted", 0) > 0 for r in doc["dirs"])
+    assert main(["cache", "ls", root, "--json"]) == 0
+    ls = json.loads(capsys.readouterr().out)
+    for d in ls["dirs"]:
+        assert d["entry_count"] <= budget
+        assert d["max_entries"] == budget        # --record persisted it
+        assert d["budget_utilization"]["entries"] <= 1.0
+    assert main(["cache", "verify", root]) == 0
+
+
+def test_cli_evict_ttl_and_size_args(tmp_path, capsys):
+    with KeyValueCache(str(tmp_path / "d"), _expander(),
+                       key=("qid", "query"), value=("query",),
+                       backend="sqlite") as kv:
+        kv(_topics(4))
+    time.sleep(0.01)
+    assert main(["cache", "evict", str(tmp_path), "--ttl", "0s",
+                 "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    (rec,) = doc["dirs"]
+    assert rec["evicted"] == 4 and rec["entries_after"] == 0
+
+
+# -- plan-level warm (ExecutionPlan.warm / run_warm) --------------------------
+
+def _plan_pipeline():
+    def retr_fn(inp):
+        from repro.core import add_ranks
+        rows = [{"qid": q, "query": t, "docno": f"d{i}", "score": 9.0 - i}
+                for q, t in zip(inp["qid"].tolist(), inp["query"].tolist())
+                for i in range(3)]
+        return add_ranks(ColFrame.from_dicts(rows))
+    return GenericTransformer(retr_fn, "retr", one_to_many=True,
+                              key_columns=("qid", "query"))
+
+
+def test_plan_warm_populates_and_chunk_equivalence(tmp_path):
+    topics = _topics(9)
+    with ExecutionPlan([_plan_pipeline()],
+                       cache_dir=str(tmp_path / "whole")) as p1:
+        s1 = p1.warm(topics)
+    with ExecutionPlan([_plan_pipeline()],
+                       cache_dir=str(tmp_path / "chunked")) as p2:
+        s2 = p2.warm(topics, chunk_rows=4)
+    assert s1.cache_misses == s2.cache_misses == 9
+    # identical stored state either way
+    def keys(d):
+        (sub,) = [x for x in os.listdir(d) if x != "plans"]
+        b = open_backend("dbm", os.path.join(str(d), sub))
+        try:
+            return sorted(k for k, _ in b.items())
+        finally:
+            b.close()
+    assert keys(tmp_path / "whole") == keys(tmp_path / "chunked")
+    # a warmed plan replays without recomputation
+    with ExecutionPlan([_plan_pipeline()],
+                       cache_dir=str(tmp_path / "whole")) as p3:
+        s3 = p3.warm(topics)
+    assert s3.cache_misses == 0 and s3.cache_hits == 9
+
+
+def test_plan_cache_budget_flows_to_families(tmp_path):
+    topics = _topics(8)
+    with ExecutionPlan([_plan_pipeline()], cache_dir=str(tmp_path),
+                       cache_budget=3) as p:
+        p.warm(topics)
+    (sub,) = [x for x in os.listdir(tmp_path) if x != "plans"]
+    m = CacheManifest.load(os.path.join(str(tmp_path), sub))
+    assert m.max_entries == 3
+    assert m.entry_count == 3                    # enforced at close

@@ -1,0 +1,232 @@
+"""TieredBackend (caching/tiered.py): memory-LRU front over a disk
+backend — selector plumbing, write-through puts, promote-on-hit reads,
+parity views, and observational equivalence with the bare disk backend
+under random operation sequences (property-tested, including across a
+close/reopen cycle)."""
+import os
+import tempfile
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.caching import (BACKENDS, KeyValueCache, MemoryLRUBackend,
+                           TieredBackend, backend_store_exists,
+                           open_backend, resolve_backend_name, split_tiered)
+from repro.core import ColFrame, GenericTransformer
+
+import numpy as np
+
+DISK_BACKENDS = ["pickle", "dbm", "sqlite"]
+
+
+# -- selector plumbing --------------------------------------------------------
+
+def test_split_tiered_selector():
+    assert split_tiered("tiered") == "sqlite"            # default disk
+    assert split_tiered("tiered:dbm") == "dbm"
+    assert split_tiered("sqlite") is None                # not tiered
+    with pytest.raises(ValueError, match="persistent"):
+        split_tiered("tiered:memory")                    # front over front
+    with pytest.raises(ValueError, match="tiered"):
+        split_tiered("tiered:redis")
+
+
+def test_resolve_backend_name_normalizes_tiered():
+    assert resolve_backend_name("tiered", "sqlite") == "tiered:sqlite"
+    assert resolve_backend_name("tiered:dbm", "sqlite") == "tiered:dbm"
+
+
+def test_tiered_not_a_registry_entry():
+    """The combinator composes registered backends; it is not itself
+    one (the registry stays exactly the four base stores)."""
+    assert "tiered" not in BACKENDS
+
+
+def test_open_backend_tiered(tmp_path):
+    b = open_backend("tiered:dbm", str(tmp_path))
+    assert isinstance(b, TieredBackend)
+    assert b.name == "tiered:dbm"
+    assert b.disk.name == "dbm"
+    assert b.persistent
+    b.close()
+    b.close()                                            # idempotent
+    b2 = open_backend("tiered", str(tmp_path / "x"))
+    assert b2.disk.name == "sqlite"
+    b2.close()
+
+
+def test_backend_store_exists_dispatches_on_disk_tier(tmp_path):
+    assert not backend_store_exists("tiered:sqlite", str(tmp_path))
+    b = open_backend("tiered:sqlite", str(tmp_path))
+    b.put(b"k", b"v")
+    b.close()
+    assert backend_store_exists("tiered:sqlite", str(tmp_path))
+    assert backend_store_exists("sqlite", str(tmp_path))
+
+
+# -- tier semantics -----------------------------------------------------------
+
+def test_write_through_and_persistence(tmp_path):
+    b = open_backend("tiered:sqlite", str(tmp_path))
+    b.put_many([(b"k1", b"v1"), (b"k2", b"v2")])
+    assert b.front.get(b"k1") == b"v1"                   # front has it now
+    assert b.disk.get(b"k1") == b"v1"                    # ... and so does disk
+    b.close()
+    bare = open_backend("sqlite", str(tmp_path))         # reopen WITHOUT front
+    assert bare.get_many([b"k1", b"k2"]) == [b"v1", b"v2"]
+    bare.close()
+
+
+def test_promote_on_hit(tmp_path):
+    bare = open_backend("sqlite", str(tmp_path))
+    bare.put(b"k", b"v")
+    bare.close()
+    t = open_backend("tiered:sqlite", str(tmp_path))
+    assert t.front.get(b"k") is None                     # cold front
+    assert t.get(b"k") == b"v"                           # disk hit ...
+    assert t.front.get(b"k") == b"v"                     # ... promoted
+    t.close()
+
+
+def test_get_many_promotes_and_preserves_duplicates(tmp_path):
+    bare = open_backend("sqlite", str(tmp_path))
+    bare.put_many([(b"a", b"1"), (b"b", b"2")])
+    bare.close()
+    t = open_backend("tiered:sqlite", str(tmp_path))
+    assert t.get_many([b"a", b"b", b"a", b"nope", b"a"]) == \
+        [b"1", b"2", b"1", None, b"1"]
+    assert t.front.get(b"a") == b"1" and t.front.get(b"b") == b"2"
+    # second lookup is served entirely from the front
+    assert t.get_many([b"a", b"b"]) == [b"1", b"2"]
+    t.close()
+
+
+def test_front_capacity_bounds_memory_not_disk(tmp_path):
+    t = TieredBackend(str(tmp_path), disk="sqlite", front_capacity=2)
+    t.put_many([(b"a", b"1"), (b"b", b"2"), (b"c", b"3")])
+    assert len(t) == 3                                   # disk keeps all
+    assert len(t.front) == 2                             # front is bounded
+    assert t.get_many([b"a", b"b", b"c"]) == [b"1", b"2", b"3"]
+    t.close()
+
+
+def test_delete_many_hits_both_tiers(tmp_path):
+    t = open_backend("tiered:sqlite", str(tmp_path))
+    t.put_many([(b"a", b"1"), (b"b", b"2")])
+    assert t.delete_many([b"a", b"missing"]) == 1
+    assert t.get(b"a") is None                           # not resurrected
+    assert t.front.get(b"a") is None
+    assert len(t) == 1
+    t.close()
+
+
+def test_parity_views_delegate_to_disk(tmp_path):
+    t = open_backend("tiered:sqlite", str(tmp_path))
+    pairs = [(b"k%d" % i, b"v%d" % i) for i in range(5)]
+    t.put_many(pairs)
+    assert sorted(t.items()) == sorted(pairs)
+    assert sorted(t.entry_stats()) == \
+        sorted((k, len(v)) for k, v in pairs)
+    assert t.stat_entries([b"k0", b"nope"]) == [2, None]
+    t.close()
+
+
+def test_lock_delegates_to_disk_and_allows_nested_puts(tmp_path):
+    """The compute-once critical section must be able to write while
+    held (the kv miss path runs put_many inside lock())."""
+    t = open_backend("tiered:sqlite", str(tmp_path))
+    with t.lock():
+        with t.lock():                                   # re-entrant
+            t.put(b"k", b"v")
+    assert t.get(b"k") == b"v"
+    t.close()
+
+
+# -- cache families over the tiered selector ----------------------------------
+
+def _expander():
+    return GenericTransformer(
+        lambda inp: inp.assign(query=np.array(
+            [q + "!" for q in inp["query"].tolist()], dtype=object)),
+        "expander", key_columns=("qid", "query"), value_columns=("query",))
+
+
+TOPICS = ColFrame({"qid": [f"q{i}" for i in range(6)],
+                   "query": [f"terms {i}" for i in range(6)]})
+
+
+def test_kv_cache_over_tiered_backend(tmp_path):
+    with KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="tiered:sqlite") as kv:
+        assert kv._manifest.backend == "tiered:sqlite"
+        cold = kv(TOPICS)
+        assert kv.stats.misses == len(TOPICS)
+        hot = kv(TOPICS)
+        assert kv.stats.hits == len(TOPICS)
+        direct = _expander()(TOPICS)
+        assert cold.equals(direct) and hot.equals(direct)
+    # a fresh open over the same dir replays from the disk tier
+    with KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="tiered:sqlite") as kv2:
+        assert kv2(TOPICS).equals(_expander()(TOPICS))
+        assert kv2.stats.misses == 0
+
+
+# -- observational equivalence (property test) --------------------------------
+
+_OPS = st.lists(
+    st.tuples(st.integers(0, 3),          # 0/1: put, 2: delete, 3: get
+              st.integers(0, 9),          # key id (small space -> collisions)
+              st.integers(0, 99)),        # value id
+    min_size=1, max_size=40)
+
+
+def _apply(backend, ops):
+    """Drive one op sequence, returning every observable result."""
+    seen = []
+    for op, k, v in ops:
+        key = b"key-%d" % k
+        if op in (0, 1):
+            backend.put_many([(key, b"val-%d" % v)])
+        elif op == 2:
+            seen.append(("del", backend.delete_many([key])))
+        else:
+            seen.append(("get", backend.get(key)))
+    keys = [b"key-%d" % i for i in range(10)]
+    seen.append(("get_many", backend.get_many(keys)))
+    seen.append(("len", len(backend)))
+    return seen
+
+
+@given(ops=_OPS)
+@settings(max_examples=15, deadline=None)
+def test_tiered_observationally_equivalent_to_bare_disk(ops):
+    """For any put/get/delete sequence, a TieredBackend over disk
+    backend X is indistinguishable from X alone — including after a
+    close/reopen cycle (the front tier must add speed, never state)."""
+    for disk in DISK_BACKENDS:
+        _check_equivalence(disk, ops)
+
+
+def _check_equivalence(disk, ops):
+    with tempfile.TemporaryDirectory(prefix="tiered-prop-") as tmp:
+        p_tiered = os.path.join(tmp, "tiered")
+        p_bare = os.path.join(tmp, "bare")
+        t = open_backend(f"tiered:{disk}", p_tiered)
+        b = open_backend(disk, p_bare)
+        try:
+            assert _apply(t, ops) == _apply(b, ops)
+        finally:
+            t.close()
+            b.close()
+        # reopen both: the surviving state must match too
+        t2 = open_backend(f"tiered:{disk}", p_tiered)
+        b2 = open_backend(disk, p_bare)
+        try:
+            keys = [b"key-%d" % i for i in range(10)]
+            assert t2.get_many(keys) == b2.get_many(keys)
+            assert len(t2) == len(b2)
+            assert _apply(t2, ops) == _apply(b2, ops)
+        finally:
+            t2.close()
+            b2.close()
