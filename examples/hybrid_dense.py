@@ -1,0 +1,44 @@
+"""Hybrid sparse+dense retrieval through the plan compiler (quickstart
+step 10; docs/architecture.md).
+
+The scenario is ``(bm25 % k | dense % k) >> text_loader >> mono``: the
+optimizer fuses each ``% k`` into its retriever — BM25's ``num_results``
+and the dense stage's per-block kernel k (``kernels/dense_topk``) —
+CSE's the shared spine, and the same caches serve offline runs, warming
+and online traffic.
+"""
+import tempfile
+
+from repro.core import ExecutionPlan
+from repro.serve import PipelineService
+from repro.serve.registry import (build_scenario, run_closed_loop,
+                                  warming_frame)
+
+# 1. build the named hybrid scenario (serve/registry.py): synthetic
+#    corpus, a BM25 index, a dense index over the Pallas dense_topk
+#    stage, and the mono reranker on top of their candidate union
+scenario = build_scenario("hybrid", scale=0.02, cutoff=5, num_results=50)
+
+# 2. compile + explain: no residual RankCutoff nodes — both cutoffs are
+#    fused into retrieval depth (DenseRetriever shows num_results=5)
+cache_dir = tempfile.mkdtemp(prefix="hybrid-dense-")
+with ExecutionPlan([scenario.pipeline], cache_dir=cache_dir) as plan:
+    print(plan.explain())
+
+    # 3. warm the planner-inserted caches with the scenario's expected
+    #    traffic (the closed-loop generator's exact zipf draws), so the
+    #    serve epoch below starts hot
+    stats = plan.warm(warming_frame(scenario, budget=16))
+    print(f"warmed: {stats.cache_misses} entries precomputed, "
+          f"{stats.nodes_executed} nodes executed")
+
+# 4. serve the same expression from the same cache directory: the
+#    streaming executor coalesces concurrent requests into micro-batches
+#    and the warmed caches absorb the repeat traffic
+with PipelineService(scenario.pipeline, cache_dir=cache_dir,
+                     max_batch=8, max_wait_ms=2.0) as service:
+    result = run_closed_loop(service, scenario, n_requests=24,
+                             n_clients=3)
+    print(f"served {result['requests']} requests at "
+          f"{result['throughput_rps']:.1f} rps; "
+          f"cache hits={service.stats.cache_hits}")

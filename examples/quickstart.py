@@ -89,3 +89,10 @@ with PipelineService(pipeline, cache_backend="memory",
     print("service:", service.stats.summary())
     print(service.explain())                       # plan tree + online
                                                    # p50/p99 per node
+
+# 10. hybrid sparse+dense retrieval: `(bm25 % k | dense % k)` fans out
+#     over the inverted index AND the Pallas dense_topk kernel stage
+#     (kernels/dense_topk), with both cutoffs fused into retrieval
+#     depth by the optimizer — the full walkthrough (explain, cache
+#     warming, then serving from the warmed store) lives in
+#     examples/hybrid_dense.py and docs/architecture.md.

@@ -13,7 +13,7 @@ Our Transformer base class carries exactly that metadata
 * ``cacheable=False``  → refuse (pairwise/listwise scorers, adaptive
   rerankers — §5's DuoT5 caveat);
 * ``one_to_many=True`` → RetrieverCache keyed by ``key_columns``;
-* value ``score`` with ``docno`` in keys → ScorerCache;
+* ``score`` among the value columns → ScorerCache (re-ranks after merge);
 * otherwise            → KeyValueCache on (key_columns → value_columns).
 
 The same metadata powers ``typecheck_pipeline`` — the "added benefit"
@@ -103,7 +103,10 @@ def auto_cache(transformer: Transformer, path: Optional[str] = None,
     if getattr(transformer, "one_to_many", False):
         return RetrieverCache(path, transformer,
                               key=keys or ("qid", "query"), **kwargs)
-    if "docno" in keys or vals == ("score",):
+    if "score" in vals or (not vals and "docno" in keys):
+        # only stages that *produce* a score are scorers — a docno-keyed
+        # augmenter (TextLoader: docno → text) must not be re-ranked, and
+        # after SetUnion its input has no score column to fall back on
         return ScorerCache(path, transformer,
                            key=keys or ("query", "docno"),
                            value=vals or ("score",), **kwargs)

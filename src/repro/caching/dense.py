@@ -11,15 +11,31 @@ functionally identical layout:
 * ``npids.json`` — the docno enumeration (docno → column index);
 * ``queries.json`` — query string → row index (grown on demand).
 
+Like every cache family here, the directory is provenance-managed: a
+checksummed ``manifest.json`` records the wrapped transformer's
+fingerprint (``on_stale`` = ``error``/``recompute``/``readonly``
+applies as usual), budgets from ``caching/economics.py`` are enforced
+row-granularly by :meth:`DenseScorerCache.evict`, and an
+``access.json`` sidecar feeds TTL-then-LRU victim selection.  The
+plan compiler does *not* select this family automatically:
+``auto_cache`` routes one-to-many retriever nodes — including the
+kernel-backed ``ir/dense.py`` ``DenseRetriever`` — to
+``RetrieverCache`` (whole rankings, any registry backend) and
+pointwise scorers to ``ScorerCache``; ``DenseScorerCache`` is the
+hand-placed alternative for exhaustive (query × docno) scoring
+studies where per-row backend overheads dominate.
+
 The sidecar JSON files are written with the shared atomic-rename
 primitive and row allocation / matrix growth happen under the shared
 ``FileLock`` (``backends.py``), so concurrent shards/threads *of one
 process* never observe a torn sidecar or clobber each other's row
-assignments.  Concurrent **writer processes** are not supported: each
-process holds its own in-memory row map and memmap handle, which the
-lock cannot reconcile (readers of a warm cache are fine).  For a cache
-directory shared by concurrent writers use ``ScorerCache`` with a
-``pickle``/``dbm``/``sqlite`` backend instead.
+assignments.  Concurrent **writer processes** remain unsupported for
+this family specifically: each process holds its own in-memory row
+map and memmap handle, which the lock cannot reconcile (readers of a
+warm cache are fine).  For a directory shared by concurrent writers
+use ``ScorerCache`` with any registry backend that does cross-process
+locking (``"dbm"``, ``"sqlite"``, or ``"tiered:<disk>"`` —
+``caching/backends.py``, ``caching/tiered.py``).
 """
 from __future__ import annotations
 

@@ -30,10 +30,12 @@ class ScorerCache(KeyValueCache):
     def __init__(self, path: Optional[str] = None, transformer: Any = None,
                  *, key: Any = ("query", "docno"), value: Any = ("score",),
                  verify_fraction: float = 0.0, backend: Any = None,
-                 fingerprint: Optional[str] = None, on_stale: str = "error"):
+                 fingerprint: Optional[str] = None, on_stale: str = "error",
+                 budget: Any = None):
         super().__init__(path, transformer, key=key, value=value,
                          verify_fraction=verify_fraction, backend=backend,
-                         fingerprint=fingerprint, on_stale=on_stale)
+                         fingerprint=fingerprint, on_stale=on_stale,
+                         budget=budget)
 
     def transform(self, inp: ColFrame) -> ColFrame:
         if len(inp) == 0:

@@ -22,6 +22,17 @@ All executors understand the ``cache-prune`` annotations of
 input, and the chain (``inline_chain``) only executes when the store
 cannot serve every key.  Deferred nodes are excluded from normal
 scheduling; they run inline inside their consumer's task.
+
+Scheduling invariants: every node runs **at most once per shard**
+(results are memoized per node instance, never recomputed for a second
+consumer); tasks are dispatched in **topological wavefronts**, so a
+node's inputs are complete frames before it runs; and the query frame
+is partitioned only along **qid-aligned boundaries** and only when
+every stage in the graph is ``shardable`` (row-local per qid) — a
+single non-shardable stage collapses execution to one shard, leaving
+branch parallelism only.  Under these rules the sequential and
+concurrent schedulers are observationally identical (property-tested
+in ``tests/test_rewrite.py``).
 """
 from __future__ import annotations
 

@@ -25,6 +25,19 @@ Nodes are value-like: the structural fields (``key``, ``kind``,
 passes build *new* nodes instead of editing structure in place; only
 annotations (labels, memo caches, pass markers) are added after the
 fact.
+
+Invariants this layer guarantees (what the optimizer passes rely on):
+
+* **one node per syntactic occurrence** — lowering never merges, so
+  every unit of sharing is attributable to a named pass;
+* **keys are structural identity** — two nodes with equal ``key``
+  compute bit-identical frames from equal inputs (transformer equality
+  is ``signature()`` equality and transformers are deterministic),
+  which is the entire soundness argument of CSE;
+* **metadata is lifted once and never edited** — ``rank_preserving``
+  licenses pushdown to climb an edge, ``with_cutoff`` to absorb,
+  ``augment_only`` licenses cache-prune to defer, ``shardable``
+  licenses the executor to partition the query frame.
 """
 from __future__ import annotations
 

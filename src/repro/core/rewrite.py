@@ -19,9 +19,14 @@ through ``ExecutionPlan(optimize=...)``:
 * ``"pushdown"`` — ``RankCutoff`` (``% k``) pushdown: a cutoff climbs
   through ``rank_preserving`` single-consumer stages and, when it
   reaches a stage that can absorb it (``Transformer.with_cutoff``,
-  e.g. a retriever's ``num_results``), is fused away entirely.
-  Applied only off the shared spine (every rewritten node must have a
-  single consumer), so pushdown never duplicates work that CSE shares.
+  e.g. a retriever's ``num_results`` or the dense stage's per-block
+  kernel k), is fused away entirely.  Invariant: **pushdown only
+  climbs rank-preserving sole-consumer edges** — a shared (multi-
+  consumer) node is never rewritten, so pushdown cannot duplicate
+  work that CSE shares or deepen another pipeline's view of the node;
+  and absorption is sound only because ``with_cutoff`` implementations
+  guarantee a deterministic total order (score desc, then doc index),
+  making every top-k a prefix of the top-n.
 * ``"cache-prune"`` — cache-aware pruning (runs after planner memo
   insertion): consults the provenance manifests (``caching/provenance``)
   of planner-inserted caches and, for memo nodes whose store is warm
@@ -29,6 +34,10 @@ through ``ExecutionPlan(optimize=...)``:
   (``serve_from_store``), marks exclusive ``augment_only`` upstream
   stages as *deferred*: the executor probes the cache with the
   upstream chain's input first and only executes the chain on a miss.
+  Invariant: only **exclusive, augment-only** upstream chains are
+  deferred — augment-only stages cannot alter the keys the memo is
+  probed with, and exclusivity guarantees no other consumer observes
+  the skipped intermediate.
 
 Invariant (property-tested): for any pipeline algebra, results with
 ``optimize="all"`` and ``optimize="none"`` are bit-identical per qid —

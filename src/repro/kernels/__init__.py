@@ -1,7 +1,8 @@
 # Pallas TPU kernels for the perf-critical compute layers, each with a
 # pure-jnp oracle (ref.py) and a jitted wrapper (ops.py).  Validated in
 # interpret mode on CPU; TPU is the compilation target.
-from . import flash_attention, embedding_bag, cachekey_hash, bm25_block
+from . import (flash_attention, embedding_bag, cachekey_hash, bm25_block,
+               dense_topk)
 
 __all__ = ["flash_attention", "embedding_bag", "cachekey_hash",
-           "bm25_block"]
+           "bm25_block", "dense_topk"]

@@ -1,0 +1,63 @@
+"""Jitted wrapper for dense_topk: tile padding + interpret dispatch.
+
+The dispatch convention for kernel-backed pipeline stages: callers pass
+``interpret=None`` and the wrapper resolves it from the runtime —
+compiled Mosaic on TPU, interpret-mode fallback everywhere else — so
+the same call site works on the CPU-only CI container and on real
+hardware (docs/kernels.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import dense_topk
+
+__all__ = ["dense_topk_op"]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "k_pad", "block_q",
+                                             "block_d", "nd_valid",
+                                             "interpret"))
+def _padded(q, c, *, k: int, k_pad: int, block_q: int, block_d: int,
+            nd_valid: int, interpret: bool):
+    vals, idxs = dense_topk(q, c, k=k_pad, nd_valid=nd_valid,
+                            block_q=block_q, block_d=block_d,
+                            interpret=interpret)
+    return vals[:, :k], idxs[:, :k]
+
+
+def dense_topk_op(q, c, *, k: int = 100, block_q: int = 8,
+                  block_d: int = 128, interpret: Optional[bool] = None):
+    """q [Q, d]; c [N, d] -> (vals [Q, k], idxs [Q, k]).
+
+    Pads Q to the block_q multiple, N to the block_d multiple and d to
+    the 128-lane multiple (zero feature columns contribute exactly 0 to
+    the inner products; padded doc rows are masked in-kernel via
+    ``nd_valid``).  k is clamped to N and, when compiling for hardware,
+    rounded up to the lane multiple in-kernel then sliced back.
+    """
+    q = jnp.asarray(q)
+    c = jnp.asarray(c)
+    Q, d = q.shape
+    N = c.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    k = int(min(max(1, k), N)) if N else 0
+    if Q == 0 or N == 0:
+        return (jnp.zeros((Q, k), jnp.float32),
+                jnp.zeros((Q, k), jnp.int32))
+    # rank k only needs lane alignment when Mosaic lays out the block
+    k_pad = k if interpret else k + ((-k) % 128)
+    pad_q = (-Q) % block_q
+    pad_n = (-N) % block_d
+    pad_f = (-d) % 128
+    qp = jnp.pad(q, ((0, pad_q), (0, pad_f)))
+    cp = jnp.pad(c, ((0, pad_n), (0, pad_f)))
+    vals, idxs = _padded(qp, cp, k=k, k_pad=k_pad, block_q=block_q,
+                         block_d=block_d, nd_valid=N,
+                         interpret=interpret)
+    return vals[:Q], idxs[:Q]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the dense_topk kernel.
+
+``lax.top_k`` breaks score ties by ascending index — the same total
+order the kernel's masked-min selection applies — so kernel and oracle
+agree on indices, not just values.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_topk_ref"]
+
+
+def dense_topk_ref(q: jnp.ndarray, c: jnp.ndarray, *, k: int):
+    """q [Q, d]; c [N, d] -> (vals [Q, k] f32, idxs [Q, k] i32)."""
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), c.astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    vals, idxs = jax.lax.top_k(s, k)
+    return vals, idxs.astype(jnp.int32)

@@ -8,7 +8,12 @@ topic set it runs against, so the CLI, the launch driver and
 * ``"bm25-mono"``  — the paper's §4.2 two-stage composition
   (``bm25 % cutoff >> text_loader >> mono_scorer``);
 * ``"mono"``       — the bare pointwise scorer (the legacy
-  ``ScoringService`` workload; requests carry their own text).
+  ``ScoringService`` workload; requests carry their own text);
+* ``"dense"``      — neural first-stage retrieval over the Pallas
+  ``dense_topk`` stage (``dense % cutoff``, cutoff fused into the
+  kernel's per-block k by the optimizer);
+* ``"hybrid"``     — sparse+dense candidate union reranked by the mono
+  scorer (``(bm25 % cutoff | dense % cutoff) >> text_loader >> mono``).
 
 ``run_closed_loop`` is the shared traffic generator: N closed-loop
 client threads, each submitting one query at a time and waiting for its
@@ -97,10 +102,54 @@ def _build_mono(*, scale: float, cutoff: int, num_results: int,
         request_extra=extra)
 
 
+def _dense_retriever(corpus, *, num_results: int, seed: int):
+    from ..ir.dense import DenseEncoder, DenseIndex
+    from ..models.cross_encoder import EncoderConfig
+    cfg = EncoderConfig(name="dense-serve", n_layers=1, d_model=32,
+                        n_heads=2, d_ff=64, vocab_size=2048, max_len=16)
+    index = DenseIndex(DenseEncoder(cfg, seed=seed + 7)).index(
+        corpus.get_corpus_iter())
+    return index.retriever(num_results=num_results)
+
+
+def _build_dense(*, scale: float, cutoff: int, num_results: int,
+                 seed: int) -> ServeScenario:
+    from ..ir import msmarco_like
+    corpus = msmarco_like(1, scale=scale, seed=seed)
+    dense = _dense_retriever(corpus, num_results=num_results, seed=seed)
+    return ServeScenario(
+        name="dense",
+        pipeline=dense % cutoff,
+        topics=corpus.get_topics(),
+        description=f"dense retrieval over the fused dense_topk stage, "
+                    f"top-{cutoff} (num_results={num_results}, pushdown "
+                    f"fuses the cutoff into the kernel's per-block k)")
+
+
+def _build_hybrid(*, scale: float, cutoff: int, num_results: int,
+                  seed: int) -> ServeScenario:
+    from ..ir import InvertedIndex, TextLoader, msmarco_like
+    corpus = msmarco_like(1, scale=scale, seed=seed)
+    index = InvertedIndex.build(corpus.get_corpus_iter())
+    dense = _dense_retriever(corpus, num_results=num_results, seed=seed)
+    pipeline = ((index.bm25(num_results=num_results) % cutoff
+                 | dense % cutoff)
+                >> TextLoader(corpus.text_map()) >> _encoder())
+    return ServeScenario(
+        name="hybrid",
+        pipeline=pipeline,
+        topics=corpus.get_topics(),
+        description=f"sparse+dense candidate union reranked by the mono "
+                    f"scorer: (bm25 % {cutoff} | dense % {cutoff}) "
+                    f">> text_loader >> mono")
+
+
 SERVE_PIPELINES: Dict[str, Callable[..., ServeScenario]] = {
     "bm25": _build_bm25,
     "bm25-mono": _build_bm25_mono,
     "mono": _build_mono,
+    "dense": _build_dense,
+    "hybrid": _build_hybrid,
 }
 
 

@@ -1,0 +1,215 @@
+"""Dense retrieval as a compiler-native node (ir/dense.py + the plan
+stack): pushdown fusion into the kernel's per-block k, hybrid
+sparse+dense bit-identity under both schedulers, cold→warm planner
+caching, and the query-embedding memo."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ColFrame, ExecutionPlan
+from repro.ir import InvertedIndex, TextLoader, msmarco_like
+from repro.ir.dense import DenseEncoder, DenseIndex, DenseRetriever
+from repro.models.cross_encoder import EncoderConfig, MonoScorer
+
+CORPUS = msmarco_like(1, scale=0.02)
+CE = EncoderConfig(name="dense-ce", n_layers=1, d_model=32, n_heads=2,
+                   d_ff=64, vocab_size=2048, max_len=16)
+MONO = EncoderConfig(name="mono-ce", n_layers=1, d_model=32, n_heads=2,
+                     d_ff=64, vocab_size=2048, max_len=16)
+
+
+@pytest.fixture(scope="module")
+def dense_index():
+    return DenseIndex(DenseEncoder(CE)).index(CORPUS.get_corpus_iter())
+
+
+@pytest.fixture(scope="module")
+def bm25():
+    return InvertedIndex.build(CORPUS.get_corpus_iter()).bm25(
+        num_results=100)
+
+
+def _hybrid(bm25, dense_index, k=10, num_results=100):
+    dense = dense_index.retriever(num_results=num_results)
+    return ((bm25 % k | dense % k)
+            >> TextLoader(CORPUS.text_map()) >> MonoScorer(MONO))
+
+
+def _dense_nodes(plan):
+    return [n for n in plan.graph.nodes
+            if isinstance(n.stage, DenseRetriever)]
+
+
+def _cutoff_nodes(plan):
+    return [n for n in plan.graph.nodes
+            if n.stage is not None
+            and type(n.stage).__name__ == "RankCutoff"]
+
+
+def assert_bit_identical(outs_a, outs_b):
+    assert len(outs_a) == len(outs_b)
+    for got, want in zip(outs_a, outs_b):
+        cols = [c for c in ("qid", "docno", "score", "rank")
+                if c in want.columns and c in got.columns]
+        by = [c for c in ("qid", "docno") if c in want.columns]
+        g = got.sort_values(by) if by else got
+        w = want.sort_values(by) if by else want
+        assert g.equals(w, cols=cols, rtol=0, atol=0), \
+            "optimizer changed results"
+
+
+# -- pushdown fusion ----------------------------------------------------------
+
+def test_pushdown_fuses_cutoff_into_dense_k(dense_index):
+    plan = ExecutionPlan([dense_index.retriever(num_results=100) % 7])
+    nodes = _dense_nodes(plan)
+    assert len(nodes) == 1
+    assert nodes[0].stage.num_results == 7
+    assert not _cutoff_nodes(plan)
+
+
+def test_pushdown_fuses_both_hybrid_branches(bm25, dense_index):
+    plan = ExecutionPlan([_hybrid(bm25, dense_index, k=10)])
+    assert not _cutoff_nodes(plan)
+    (dn,) = _dense_nodes(plan)
+    assert dn.stage.num_results == 10
+    assert any(getattr(n.stage, "num_results", None) == 10
+               for n in plan.graph.nodes
+               if type(n.stage).__name__ == "BM25Retriever")
+
+
+def test_with_cutoff_is_prefix_of_deeper_run(dense_index):
+    """The soundness condition pushdown relies on: top-k is a prefix of
+    top-n under the deterministic (score desc, docno idx asc) order."""
+    topics = CORPUS.get_topics().head(8)
+    deep = dense_index.retriever(num_results=20)(topics)
+    shallow = dense_index.retriever(num_results=20).with_cutoff(6)(topics)
+    prefix = deep.take(np.where(deep["rank"] < 6)[0])
+    assert shallow.sort_values(["qid", "rank"]).equals(
+        prefix.sort_values(["qid", "rank"]),
+        cols=["qid", "docno", "rank", "score"], rtol=0, atol=0)
+
+
+def test_hybrid_explain_has_fused_dense_no_cutoff(tmp_path, capsys,
+                                                  bm25, dense_index):
+    """`repro plan explain` over the hybrid plan's manifest shows the
+    cutoff fused into the dense node (no residual RankCutoff)."""
+    from repro.cli import main
+    with ExecutionPlan([_hybrid(bm25, dense_index, k=10)],
+                       cache_dir=str(tmp_path)) as plan:
+        expected = plan.explain()
+    assert main(["plan", "explain", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert out.strip() == expected.strip()
+    assert "DenseRetriever('dense-ce', 7, 180, 10)" in out
+    # no node renders a RankCutoff stage (the token only appears inside
+    # structural signatures of downstream operators, if at all)
+    record_nodes = plan.to_record()["nodes"]
+    assert all(not n["label"].startswith("RankCutoff")
+               for n in record_nodes)
+
+
+# -- the hard invariant, dense edition ---------------------------------------
+
+def _run_both(pipelines, queries, **run_kw):
+    outs_opt, stats_opt = ExecutionPlan(pipelines, optimize="all").run(
+        queries, **run_kw)
+    outs_ref, stats_ref = ExecutionPlan(pipelines, optimize="none").run(
+        queries, **run_kw)
+    assert_bit_identical(outs_opt, outs_ref)
+    assert stats_opt.nodes_executed <= stats_ref.nodes_executed
+    return stats_opt
+
+
+def test_hybrid_bit_identical_sequential(bm25, dense_index):
+    _run_both([_hybrid(bm25, dense_index, k=5)],
+              CORPUS.get_topics().head(6))
+
+
+def test_hybrid_bit_identical_sharded(bm25, dense_index):
+    _run_both([_hybrid(bm25, dense_index, k=5)],
+              CORPUS.get_topics().head(6), n_shards=2, max_workers=2)
+
+
+_SHARED = {}
+
+
+def _shared():
+    """Module-level lazy singletons for the property test (the
+    hypothesis fallback shim can't draw pytest fixtures)."""
+    if not _SHARED:
+        _SHARED["bm25"] = InvertedIndex.build(
+            CORPUS.get_corpus_iter()).bm25(num_results=100)
+        _SHARED["dense"] = DenseIndex(DenseEncoder(CE)).index(
+            CORPUS.get_corpus_iter())
+    return _SHARED["bm25"], _SHARED["dense"]
+
+
+@given(k=st.integers(1, 12), sharded=st.booleans())
+@settings(max_examples=6, deadline=None)
+def test_hybrid_bit_identical_property(k, sharded):
+    bm25, dense_index = _shared()
+    kw = {"n_shards": 2, "max_workers": 2} if sharded else {}
+    _run_both([_hybrid(bm25, dense_index, k=k)],
+              CORPUS.get_topics().head(4), **kw)
+
+
+# -- planner-inserted caching -------------------------------------------------
+
+def test_dense_cold_warm_restart_zero_misses(tmp_path, dense_index):
+    topics = CORPUS.get_topics().head(8)
+    pipe = dense_index.retriever(num_results=100) % 5
+    with ExecutionPlan([pipe], cache_dir=str(tmp_path)) as plan:
+        _, cold = plan.run(topics)
+    assert cold.cache_misses > 0
+    # fresh process restart, same cache dir: all hits, zero misses
+    with ExecutionPlan([pipe], cache_dir=str(tmp_path)) as plan2:
+        outs, warm = plan2.run(topics)
+    assert warm.cache_misses == 0
+    assert warm.cache_hits == len(topics)
+    assert len(outs[0]) == 5 * len(topics)
+
+
+def test_dense_fingerprint_tracks_corpus_and_backend(dense_index):
+    r = dense_index.retriever(num_results=5)
+    fp = r.fingerprint()
+    assert fp == dense_index.retriever(num_results=5).fingerprint()
+    other = DenseIndex(dense_index.encoder).index(
+        list(CORPUS.get_corpus_iter())[:50])
+    assert other.retriever(num_results=5).fingerprint() != fp
+    assert dense_index.retriever(
+        num_results=5, backend="pallas").fingerprint() != fp
+
+
+# -- query-embedding memo -----------------------------------------------------
+
+def test_dense_encodes_each_unique_query_once():
+    """Two dense nodes that survive CSE as distinct (different retrieval
+    depths) still encode each unique query once — the re-encoding fix."""
+    index = DenseIndex(DenseEncoder(CE)).index(CORPUS.get_corpus_iter())
+    topics = CORPUS.get_topics().head(6)
+    plan = ExecutionPlan([index.retriever(num_results=3),
+                          index.retriever(num_results=8)])
+    labels = sorted(n.label for n in _dense_nodes(plan))
+    assert len(labels) == 2              # distinct signatures, no CSE
+    base = index.encoder.encoded_texts
+    _, stats = plan.run(topics)
+    # both nodes executed (the savings came from the memo, not CSE) ...
+    for lbl in labels:
+        assert stats.node_exec_counts[lbl] == 1
+    # ... yet the backbone saw each unique query exactly once
+    assert index.encoder.encoded_texts - base == len(topics)
+    # and a second run over the same traffic encodes nothing
+    plan.run(topics)
+    assert index.encoder.encoded_texts - base == len(topics)
+
+
+def test_dense_kernel_backend_matches_xla(dense_index):
+    topics = CORPUS.get_topics().head(4)
+    a = dense_index.retriever(num_results=7)(topics)
+    b = dense_index.retriever(num_results=7, backend="pallas")(topics)
+    assert a.sort_values(["qid", "rank"]).equals(
+        b.sort_values(["qid", "rank"]), cols=["qid", "docno", "rank"])
+    np.testing.assert_allclose(
+        a.sort_values(["qid", "rank"])["score"],
+        b.sort_values(["qid", "rank"])["score"], atol=2e-5)

@@ -9,6 +9,7 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels.bm25_block import bm25_block_op, bm25_block_ref
 from repro.kernels.cachekey_hash import cachekey_hash_op, cachekey_hash_ref
 from repro.kernels.cachekey_hash.ops import host_cachekey
+from repro.kernels.dense_topk import dense_topk_op, dense_topk_ref
 from repro.kernels.embedding_bag import embedding_bag_op, embedding_bag_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention_op
 
@@ -128,6 +129,71 @@ def test_cachekey_hash_sensitivity():
     a = np.asarray(cachekey_hash_op(toks))
     b = np.asarray(cachekey_hash_op(toks.at[0, 5].add(1)))
     assert (a != b).any()
+
+
+# -- dense topk ----------------------------------------------------------------
+
+DENSE_SWEEP = [
+    # Q, N, d, k, dtype — aligned, ragged final blocks, ragged features
+    (8, 256, 32, 10, jnp.float32),
+    (5, 300, 33, 7, jnp.float32),        # ragged everything -> pad+mask
+    (16, 1024, 64, 100, jnp.float32),
+    (3, 130, 128, 130, jnp.float32),     # k == N, one ragged doc block
+    (8, 512, 64, 16, jnp.bfloat16),
+    (1, 8, 16, 3, jnp.float32),          # corpus smaller than one block
+]
+
+
+@pytest.mark.parametrize("Q,N,d,k,dtype", DENSE_SWEEP)
+def test_dense_topk_sweep(Q, N, d, k, dtype):
+    RNG = np.random.default_rng(Q * 131 + N + d + k)
+    q = jnp.array(RNG.normal(size=(Q, d)), dtype)
+    c = jnp.array(RNG.normal(size=(N, d)), dtype)
+    vals, idxs = dense_topk_op(q, c, k=k)
+    rv, ri = dense_topk_ref(q, c, k=k)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv), atol=tol)
+    np.testing.assert_array_equal(np.asarray(idxs), np.asarray(ri))
+
+
+def test_dense_topk_tie_break_is_lower_index():
+    """Duplicate corpus rows score identically; the kernel and the
+    oracle both emit the lower doc index first — the total order that
+    makes RankCutoff fusion sound."""
+    RNG = np.random.default_rng(11)
+    q = jnp.array(RNG.normal(size=(4, 32)), jnp.float32)
+    base = jnp.array(RNG.normal(size=(20, 32)), jnp.float32)
+    c = jnp.concatenate([base, base])            # every doc duplicated
+    vals, idxs = dense_topk_op(q, c, k=40)
+    rv, ri = dense_topk_ref(q, c, k=40)
+    np.testing.assert_array_equal(np.asarray(idxs), np.asarray(ri))
+    arr = np.asarray(idxs)
+    for row in arr:
+        pos = {int(dd): p for p, dd in enumerate(row)}
+        for dd in range(20):
+            assert pos[dd] < pos[dd + 20]
+
+
+def test_dense_topk_block_shape_invariance():
+    RNG = np.random.default_rng(2)
+    q = jnp.array(RNG.normal(size=(8, 64)), jnp.float32)
+    c = jnp.array(RNG.normal(size=(512, 64)), jnp.float32)
+    outs = [dense_topk_op(q, c, k=20, block_q=bq, block_d=bd)
+            for bq, bd in [(8, 128), (8, 256), (4, 128)]]
+    for v, i in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0][0]), np.asarray(v),
+                                   atol=2e-5)
+        np.testing.assert_array_equal(np.asarray(outs[0][1]),
+                                      np.asarray(i))
+
+
+def test_dense_topk_k_clamps_to_corpus():
+    RNG = np.random.default_rng(3)
+    q = jnp.array(RNG.normal(size=(2, 16)), jnp.float32)
+    c = jnp.array(RNG.normal(size=(6, 16)), jnp.float32)
+    vals, idxs = dense_topk_op(q, c, k=50)
+    assert vals.shape == (2, 6)
+    assert sorted(np.asarray(idxs)[0].tolist()) == list(range(6))
 
 
 # -- bm25 block -------------------------------------------------------------------

@@ -1,0 +1,134 @@
+"""Documentation gauntlet (CI `docs` job).
+
+Two checks over the markdown docs:
+
+1. **Links and anchors** — every relative link in `docs/*.md` and
+   `README.md` must resolve to a file in the repository, and every
+   `#fragment` on a markdown target must match a heading in that file
+   (GitHub anchor-style slugs). External (`http[s]://`) links are not
+   fetched.
+2. **Executable examples** — the fenced ```python blocks of the docs
+   listed in ``EXECUTABLE_DOCS`` are concatenated top-to-bottom per
+   file and executed; a doc whose examples don't run is treated as
+   broken. Blocks fenced with any other info string (```text,
+   ```console, ...) are prose.
+
+Run from the repository root:
+
+    PYTHONPATH=src python tools/docs_check.py
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: docs whose ```python blocks must execute (concatenated per file)
+EXECUTABLE_DOCS = ("docs/architecture.md", "docs/caching.md")
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^```(\S*)\s*$")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+
+
+def _strip_code(text: str) -> str:
+    """Markdown with fenced code blocks blanked (links inside code are
+    not links)."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        out.append("" if in_fence else line)
+    return "\n".join(out)
+
+
+def _anchor(heading: str) -> str:
+    """GitHub-style slug: lowercase, drop punctuation, spaces → dashes."""
+    slug = re.sub(r"[`*_]", "", heading.strip().lower())
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set:
+    with open(path, encoding="utf-8") as fh:
+        text = _strip_code(fh.read())
+    return {_anchor(m.group(2)) for m in map(_HEADING.match,
+                                             text.splitlines()) if m}
+
+
+def check_links(md_path: str) -> list:
+    errors = []
+    base = os.path.dirname(md_path)
+    with open(md_path, encoding="utf-8") as fh:
+        text = _strip_code(fh.read())
+    rel = os.path.relpath(md_path, ROOT)
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, frag = target.partition("#")
+        dest = md_path if not path_part else \
+            os.path.normpath(os.path.join(base, path_part))
+        if not os.path.exists(dest):
+            errors.append(f"{rel}: broken link -> {target}")
+            continue
+        if frag and dest.endswith(".md"):
+            if _anchor(frag) not in anchors_of(dest):
+                errors.append(f"{rel}: missing anchor -> {target}")
+    return errors
+
+
+def python_blocks(md_path: str) -> list:
+    blocks, cur = [], None
+    with open(md_path, encoding="utf-8") as fh:
+        for line in fh:
+            m = _FENCE.match(line)
+            if m:
+                if cur is None and m.group(1) == "python":
+                    cur = []
+                elif cur is not None:
+                    blocks.append("".join(cur))
+                    cur = None
+                continue
+            if cur is not None:
+                cur.append(line)
+    return blocks
+
+
+def run_examples(md_path: str) -> list:
+    blocks = python_blocks(md_path)
+    rel = os.path.relpath(md_path, ROOT)
+    if not blocks:
+        return [f"{rel}: no executable python blocks found"]
+    src = "\n".join(blocks)
+    print(f"  executing {len(blocks)} python block(s) from {rel}")
+    try:
+        exec(compile(src, rel, "exec"), {"__name__": f"docs:{rel}"})
+    except Exception as exc:                       # noqa: BLE001
+        import traceback
+        traceback.print_exc()
+        return [f"{rel}: examples failed: {type(exc).__name__}: {exc}"]
+    return []
+
+
+def main() -> int:
+    docs = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    docs.append(os.path.join(ROOT, "README.md"))
+    errors = []
+    for path in docs:
+        errors.extend(check_links(path))
+    print(f"checked links in {len(docs)} file(s)")
+    for rel in EXECUTABLE_DOCS:
+        errors.extend(run_examples(os.path.join(ROOT, rel)))
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print("docs check:", "FAIL" if errors else "ok")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
