@@ -33,19 +33,36 @@ catches a broken warm-restart path that latency alone cannot); the
 misses zero times with first-epoch p50 within 1.3x of the organic
 warm epoch's.
 
+With ``--fleet`` two additional epochs measure the multi-process serve
+fleet (``repro.serve.FleetService``) on the ``bm25-sim`` scenario —
+bm25 served from a warmed shared cache (``mmap:sqlite`` read-mostly
+tier) followed by an *uncacheable* simulated per-row device latency,
+so throughput measures serving capacity rather than cache lookups:
+one worker process vs ``--fleet-workers`` processes over the same
+cache directory, same request stream.  The row set gains
+``fleet_scaling`` (N-worker / 1-worker throughput; ≥3x on a warm
+4-worker fleet since the simulated device waits overlap across
+processes) and a per-qid ``bit_identical`` gate: every topic served
+through the fleet must equal the offline ``pipeline(topics)`` frame
+bit-for-bit.
+
 ``--quick`` shrinks the workload for CI; ``--json PATH`` writes
 ``{"rows": [...]}`` with one row per epoch.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import tempfile
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.caching import warm_scenario
-from repro.serve import PipelineService, build_scenario, run_closed_loop
+from repro.serve import (PipelineService, ServeConfig, build_scenario,
+                         build_service, run_closed_loop)
 
 
 def run_epoch(name: str, scenario, cache_dir: str, *, requests: int,
@@ -79,6 +96,59 @@ def run_epoch(name: str, scenario, cache_dir: str, *, requests: int,
     return row
 
 
+def _fleet_bit_identity(svc, scenario) -> bool:
+    """Serve every topic through the fleet and compare per-qid frames
+    against the offline pipeline run, bit for bit."""
+    offline = scenario.pipeline(scenario.topics)
+    qids = [str(q) for q in scenario.topics["qid"].tolist()]
+    queries = scenario.topics["query"].tolist()
+    futs = [(qid, svc.submit(qid, query, **scenario.request_extra.get(qid, {})))
+            for qid, query in zip(qids, queries)]
+    for qid, fut in futs:
+        served = fut.result(120)
+        ref = offline.take(np.nonzero(offline["qid"] == qid)[0])
+        if not served.equals(ref):
+            return False
+    return True
+
+
+def run_fleet_epoch(name: str, cfg: ServeConfig, *, requests: int,
+                    clients: int, seed: int,
+                    check_identity: bool = False) -> Dict:
+    svc = build_service(cfg)
+    try:
+        scenario = cfg.build_scenario()
+        loop = run_closed_loop(svc, scenario, n_requests=requests,
+                               n_clients=clients, seed=seed)
+        identical = (_fleet_bit_identity(svc, scenario)
+                     if check_identity else None)
+        if cfg.workers > 1:
+            report = svc.drain()
+            online = report["online"]
+            exit_codes = report["exit_codes"]
+        else:
+            online = svc.online_stats.as_dict(svc.max_batch)
+            exit_codes = None
+        summary = svc.stats.summary()
+    finally:
+        svc.close()
+    row = {"name": name, "workers": cfg.workers, **loop,
+           "p50_ms": round(summary["p50_ms"], 4),
+           "p99_ms": round(summary["p99_ms"], 4),
+           "hit_rate": round(summary["hit_rate"], 4),
+           "cache_hits": online["cache_hits"],
+           "cache_misses": online["cache_misses"]}
+    if identical is not None:
+        row["bit_identical"] = identical
+    if exit_codes is not None:
+        row["exit_codes"] = {str(k): v for k, v in exit_codes.items()}
+    print(f"[{name}] workers={cfg.workers} "
+          f"throughput={row['throughput_rps']} req/s "
+          f"p50={row['p50_ms']}ms misses={row['cache_misses']}"
+          + (f" bit_identical={identical}" if identical is not None else ""))
+    return row
+
+
 def main(argv: Optional[List[str]] = None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -95,6 +165,12 @@ def main(argv: Optional[List[str]] = None):
     ap.add_argument("--cache-dir", default=None,
                     help="cache root (default: a temp dir per run)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fleet", action="store_true",
+                    help="add the multi-process fleet scaling epochs")
+    ap.add_argument("--fleet-workers", type=int, default=4,
+                    help="fleet size of the scaled epoch (vs 1 worker)")
+    ap.add_argument("--fleet-clients", type=int, default=16,
+                    help="closed-loop clients of the fleet epochs")
     args = ap.parse_args(argv)
 
     requests = args.requests or (120 if args.quick else 600)
@@ -139,12 +215,48 @@ def main(argv: Optional[List[str]] = None):
           f"({warmed['p50_ms'] / max(warm['p50_ms'], 1e-9):.2f}x, "
           f"misses={warmed['cache_misses']})")
 
+    fleet_scaling = None
+    if args.fleet:
+        # fleet epochs: warmed shared cache (mmap read-mostly tier) +
+        # uncacheable simulated device latency; max_batch=1 /
+        # exec_workers=1 model one synchronous replica per process, so
+        # the only parallelism measured is the fleet's
+        fleet_dir = os.path.join(cache_dir, "fleet")
+        base = ServeConfig(pipeline="bm25-sim", scale=scale,
+                           cutoff=args.cutoff, num_results=100,
+                           seed=args.seed, cache_dir=fleet_dir,
+                           backend="mmap:sqlite", max_batch=1,
+                           max_wait_ms=0.0, exec_workers=1)
+        fleet_offline = warm_scenario(None, fleet_dir, config=base)
+        print(f"[fleet_offline] precomputed "
+              f"{fleet_offline['queries_warmed']} query(s) into the "
+              f"shared {base.backend} store")
+        fleet_requests = args.requests or (160 if args.quick else 400)
+        w1 = run_fleet_epoch("fleet_w1", base,
+                             requests=fleet_requests,
+                             clients=args.fleet_clients, seed=args.seed)
+        wn = run_fleet_epoch(f"fleet_w{args.fleet_workers}",
+                             dataclasses.replace(
+                                 base, workers=args.fleet_workers),
+                             requests=fleet_requests,
+                             clients=args.fleet_clients, seed=args.seed,
+                             check_identity=True)
+        rows.extend([w1, wn])
+        fleet_scaling = round(
+            wn["throughput_rps"] / max(w1["throughput_rps"], 1e-9), 2)
+        print(f"fleet scaling 1->{args.fleet_workers}: {fleet_scaling}x "
+              f"(bit_identical={wn['bit_identical']})")
+
     if args.json:
+        payload = {"rows": rows, "requests": requests, "scale": scale,
+                   "clients": args.clients, "max_batch": args.max_batch,
+                   "max_wait_ms": args.max_wait_ms,
+                   "warm_offline": offline}
+        if fleet_scaling is not None:
+            payload["fleet_scaling"] = fleet_scaling
+            payload["fleet_workers"] = args.fleet_workers
         with open(args.json, "w") as f:
-            json.dump({"rows": rows, "requests": requests, "scale": scale,
-                       "clients": args.clients, "max_batch": args.max_batch,
-                       "max_wait_ms": args.max_wait_ms,
-                       "warm_offline": offline}, f, indent=2)
+            json.dump(payload, f, indent=2)
         print(f"[wrote {args.json}]")
     if tmp is not None:
         tmp.cleanup()

@@ -2,8 +2,11 @@
 from .backends import (BACKENDS, CacheBackend, DbmBackend, FileLock,
                        MemoryLRUBackend, PickleDirBackend, SQLiteBackend,
                        atomic_write_bytes, backend_store_exists,
-                       open_backend, resolve_backend_name, split_tiered)
+                       open_backend, registered_selectors,
+                       resolve_backend_name, select_backend, split_mmap,
+                       split_tiered, storage_identity)
 from .tiered import TieredBackend
+from .mmap_tier import MmapTier
 from .provenance import (CacheManifest, ManifestError, ProvenanceError,
                          StaleCacheError, combine_fingerprints,
                          transformer_fingerprint)
@@ -31,9 +34,10 @@ for _cls in (KeyValueCache, ScorerCache, DenseScorerCache, RetrieverCache,
 
 __all__ = [
     "BACKENDS", "CacheBackend", "MemoryLRUBackend", "PickleDirBackend",
-    "DbmBackend", "SQLiteBackend", "TieredBackend", "FileLock",
+    "DbmBackend", "SQLiteBackend", "TieredBackend", "MmapTier", "FileLock",
     "atomic_write_bytes", "backend_store_exists",
-    "open_backend", "resolve_backend_name", "split_tiered",
+    "open_backend", "registered_selectors", "resolve_backend_name",
+    "select_backend", "split_mmap", "split_tiered", "storage_identity",
     "CacheManifest", "ManifestError", "ProvenanceError", "StaleCacheError",
     "combine_fingerprints", "transformer_fingerprint",
     "AccessStats", "CacheBudget", "enforce_dir", "evict_entries",

@@ -53,8 +53,10 @@ except ImportError:                      # pragma: no cover - linux CI
 
 __all__ = ["CacheBackend", "MemoryLRUBackend", "PickleDirBackend",
            "DbmBackend", "SQLiteBackend", "FileLock", "atomic_write_bytes",
-           "open_backend", "resolve_backend_name", "BACKENDS",
-           "split_tiered", "backend_store_exists"]
+           "open_backend", "resolve_backend_name", "select_backend",
+           "BACKENDS", "split_tiered", "split_mmap", "split_combinator",
+           "registered_selectors", "storage_identity",
+           "backend_store_exists"]
 
 
 # ---------------------------------------------------------------------------
@@ -192,6 +194,10 @@ class CacheBackend:
     name: str = ""
     #: whether entries survive the process (drives test parametrization)
     persistent: bool = True
+    #: whether ``items()``/``entry_stats()`` can enumerate the store
+    #: (``mmap:<disk>`` snapshots require it; pickle stores hashed keys
+    #: only and opts out)
+    enumerable: bool = True
 
     def __init__(self, path: Optional[str]):
         self.path = path
@@ -338,6 +344,7 @@ class PickleDirBackend(CacheBackend):
     lost race costs a rewrite, never a torn entry."""
 
     name = "pickle"
+    enumerable = False
 
     def __init__(self, path: str):
         if path is None:
@@ -615,8 +622,44 @@ BACKENDS: Dict[str, Type[CacheBackend]] = {
     "sqlite": SQLiteBackend,
 }
 
-#: default disk tier of the bare ``"tiered"`` selector
+#: default disk tier of the bare ``"tiered"`` / ``"mmap"`` selectors
 TIERED_DEFAULT_DISK = "sqlite"
+
+#: combinator selectors: accelerator tiers composed *over* a persistent
+#: registry backend (``"<combinator>[:<disk>]"``).  ``requires_enumerable``
+#: marks combinators that must enumerate the disk store (the mmap tier
+#: packs a snapshot of every entry, so it cannot sit over ``pickle``).
+_COMBINATORS: Dict[str, Dict[str, bool]] = {
+    "tiered": {"requires_enumerable": False},
+    "mmap": {"requires_enumerable": True},
+}
+
+
+def _combinator_disks(combinator: str) -> List[str]:
+    """Registry disk names a combinator may compose over."""
+    req = _COMBINATORS[combinator]["requires_enumerable"]
+    return sorted(n for n, cls in BACKENDS.items()
+                  if cls.persistent and (cls.enumerable or not req))
+
+
+def _split_combinator_as(combinator: str, name: str) -> Optional[str]:
+    """The validated disk-tier name of a ``"<combinator>[:<disk>]"``
+    selector; ``None`` when ``name`` is not that combinator at all."""
+    if not isinstance(name, str) or \
+            not (name == combinator or name.startswith(combinator + ":")):
+        return None
+    disk = name.partition(":")[2] or TIERED_DEFAULT_DISK
+    if disk not in _combinator_disks(combinator):
+        known = ", ".join(f"'{combinator}:{n}'"
+                          for n in _combinator_disks(combinator))
+        extra = (" that can enumerate its entries"
+                 if _COMBINATORS[combinator]["requires_enumerable"] else "")
+        raise ValueError(
+            f"unknown {combinator} cache selector {name!r}; the disk tier "
+            f"must be a persistent registry backend{extra} — valid "
+            f"selectors are {known} (bare '{combinator}' means "
+            f"'{combinator}:{TIERED_DEFAULT_DISK}')")
+    return disk
 
 
 def split_tiered(name: str) -> Optional[str]:
@@ -624,18 +667,52 @@ def split_tiered(name: str) -> Optional[str]:
     ``"tiered:<disk>"`` selector, validated; ``None`` when ``name`` is
     not a tiered selector at all.  Raises ``ValueError`` for a tiered
     selector over an unknown or non-persistent disk tier."""
-    if not isinstance(name, str) or \
-            not (name == "tiered" or name.startswith("tiered:")):
-        return None
-    disk = name.partition(":")[2] or TIERED_DEFAULT_DISK
-    if disk not in BACKENDS or not BACKENDS[disk].persistent:
-        known = ", ".join(f"'tiered:{n}'" for n in sorted(BACKENDS)
-                          if BACKENDS[n].persistent)
-        raise ValueError(
-            f"unknown tiered cache selector {name!r}; the disk tier must "
-            f"be a persistent registry backend — valid selectors are "
-            f"{known} (bare 'tiered' means 'tiered:{TIERED_DEFAULT_DISK}')")
-    return disk
+    return _split_combinator_as("tiered", name)
+
+
+def split_mmap(name: str) -> Optional[str]:
+    """The disk-tier registry name of an ``"mmap"`` / ``"mmap:<disk>"``
+    selector, validated; ``None`` when ``name`` is not an mmap selector.
+    Raises ``ValueError`` over a disk tier that is unknown,
+    non-persistent, or cannot enumerate its entries (``pickle``)."""
+    return _split_combinator_as("mmap", name)
+
+
+def split_combinator(name: str) -> Optional[Tuple[str, str]]:
+    """``(combinator, disk)`` for a combinator selector, validated;
+    ``None`` for plain registry names (and non-strings)."""
+    for combinator in _COMBINATORS:
+        disk = _split_combinator_as(combinator, name)
+        if disk is not None:
+            return combinator, disk
+    return None
+
+
+def registered_selectors() -> List[str]:
+    """Every valid ``backend=`` selector string: the registry names
+    plus each combinator over each admissible disk tier.  This is the
+    list unknown-selector errors print and the CLI help references."""
+    out = sorted(BACKENDS)
+    for combinator in sorted(_COMBINATORS):
+        out.extend(f"{combinator}:{n}" for n in _combinator_disks(combinator))
+    return out
+
+
+def storage_identity(name) -> Optional[str]:
+    """The disk store a selector ultimately persists into — combinator
+    prefixes stripped (``"tiered:sqlite"`` / ``"mmap:sqlite"`` →
+    ``"sqlite"``).  Combinators are pure accelerators over the same
+    store files, so two selectors with equal storage identity can open
+    the same warm cache directory interchangeably (this is what the
+    manifest staleness check compares).  Unknown/invalid selectors pass
+    through unchanged — the caller's name validation reports them."""
+    if not isinstance(name, str):
+        return name
+    try:
+        combo = split_combinator(name)
+    except ValueError:
+        return name
+    return combo[1] if combo is not None else name
 
 
 def resolve_backend_name(spec: Union[str, CacheBackend, None],
@@ -643,14 +720,17 @@ def resolve_backend_name(spec: Union[str, CacheBackend, None],
     """The registry name a ``backend=`` selector resolves to, validated
     *without* opening a store (so callers can check manifests first).
 
-    Besides the registry names, ``"tiered"`` / ``"tiered:<disk>"``
-    selects :class:`~repro.caching.tiered.TieredBackend` — a memory-LRU
-    front tier over the named disk backend — and normalizes to the
-    explicit ``"tiered:<disk>"`` form (what manifests record).
+    Besides the registry names, the combinator selectors compose an
+    accelerator tier over a named disk backend — ``"tiered[:<disk>]"``
+    (:class:`~repro.caching.tiered.TieredBackend`, a memory-LRU front)
+    and ``"mmap[:<disk>]"``
+    (:class:`~repro.caching.mmap_tier.MmapTier`, a packed read-only
+    snapshot shared across processes) — and normalize to the explicit
+    ``"<combinator>:<disk>"`` form (what manifests record).
 
     Raises ``TypeError`` for selectors that are neither a name, an
     instance nor ``None``, and ``ValueError`` (listing every registered
-    backend) for unknown names.
+    selector) for unknown names.
     """
     if isinstance(spec, CacheBackend):
         return spec.name or type(spec).__name__
@@ -662,46 +742,71 @@ def resolve_backend_name(spec: Union[str, CacheBackend, None],
             f"({', '.join(repr(n) for n in sorted(BACKENDS))}), a "
             f"CacheBackend instance, or None — got "
             f"{type(spec).__name__}: {spec!r}")
-    disk = split_tiered(spec)
-    if disk is not None:
-        return f"tiered:{disk}"
+    combo = split_combinator(spec)
+    if combo is not None:
+        return f"{combo[0]}:{combo[1]}"
     if spec not in BACKENDS:
-        known = ", ".join(repr(n) for n in sorted(BACKENDS))
+        known = ", ".join(repr(n) for n in registered_selectors())
         raise ValueError(
-            f"unknown cache backend {spec!r}; registered backends are "
-            f"{known}, plus 'tiered:<disk>' for a memory-LRU front over "
-            f"a disk backend (pass a CacheBackend instance for a custom "
-            f"store)")
+            f"unknown cache backend {spec!r}; registered selectors are "
+            f"{known} — 'tiered:<disk>' is a memory-LRU front over a disk "
+            f"backend, 'mmap:<disk>' a packed read-only snapshot whose "
+            f"hits skip the inter-process lock (pass a CacheBackend "
+            f"instance for a custom store)")
     return spec
+
+
+def select_backend(selector: Union[str, CacheBackend, None],
+                   default: str = "sqlite") -> str:
+    """Public backend-selection API: validate a ``backend=`` selector
+    and return the normalized registry name it resolves to, without
+    opening (or creating) any store.
+
+    Accepts plain registry names (``"memory"`` / ``"pickle"`` /
+    ``"dbm"`` / ``"sqlite"``), the combinator forms ``"tiered[:<disk>]"``
+    and ``"mmap[:<disk>]"``, a :class:`CacheBackend` instance (resolves
+    to its ``name``), or ``None`` (resolves to ``default``).  Unknown
+    selectors raise ``ValueError`` listing every registered selector
+    (see :func:`registered_selectors`).  This is the single entry point
+    the CLI, :class:`~repro.serve.config.ServeConfig` and the serve
+    fleet route through.
+    """
+    return resolve_backend_name(selector, default)
 
 
 def open_backend(spec: Union[str, CacheBackend, None], path: Optional[str],
                  default: str = "sqlite") -> CacheBackend:
     """Resolve a ``backend=`` argument: an instance passes through, a
-    name is looked up in ``BACKENDS``, ``None`` means ``default``, and
-    ``"tiered[:<disk>]"`` builds a ``TieredBackend`` over the named
-    disk backend.  Unknown selectors raise with the registered names
-    spelled out."""
+    name is looked up in ``BACKENDS``, ``None`` means ``default``,
+    ``"tiered[:<disk>]"`` builds a ``TieredBackend`` and
+    ``"mmap[:<disk>]"`` an ``MmapTier`` over the named disk backend.
+    Unknown selectors raise with the registered selectors spelled
+    out."""
     if isinstance(spec, CacheBackend):
         return spec
     name = resolve_backend_name(spec, default)
-    disk = split_tiered(name)
-    if disk is not None:
-        from .tiered import TieredBackend   # deferred: tiered imports us
-        return TieredBackend(path, disk=disk)
+    combo = split_combinator(name)
+    if combo is not None:
+        combinator, disk = combo
+        if combinator == "tiered":
+            from .tiered import TieredBackend   # deferred: imports us
+            return TieredBackend(path, disk=disk)
+        from .mmap_tier import MmapTier         # deferred: imports us
+        return MmapTier(path, disk=disk)
     return BACKENDS[name](path)
 
 
 def backend_store_exists(name: Optional[str], path: str) -> bool:
     """``store_exists`` by resolved backend *name*, understanding the
-    ``tiered:<disk>`` combinator (whose on-disk footprint is its disk
-    tier's) — for offline inspection without opening a store."""
+    ``tiered:<disk>`` / ``mmap:<disk>`` combinators (whose on-disk
+    footprint is their disk tier's) — for offline inspection without
+    opening a store."""
     try:
-        disk = split_tiered(name) if isinstance(name, str) else None
+        combo = split_combinator(name) if isinstance(name, str) else None
     except ValueError:
         return False
-    if disk is not None:
-        return BACKENDS[disk].store_exists(path)
+    if combo is not None:
+        return BACKENDS[combo[1]].store_exists(path)
     if name in BACKENDS:
         return BACKENDS[name].store_exists(path)
     return False

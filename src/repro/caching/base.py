@@ -213,8 +213,14 @@ class CacheTransformer(Transformer):
                 and m.fingerprint != ours:
             reasons.append(f"recorded fingerprint {m.fingerprint} != "
                            f"expected {ours}")
+        # combinator selectors (tiered:/mmap:) are pure accelerators
+        # over the same store files, so compatibility is decided by the
+        # *storage identity* — a dir warmed with "sqlite" opens warm
+        # under "mmap:sqlite" (the fleet's read-mostly tier), while
+        # "dbm" vs "sqlite" still trips staleness
+        from .backends import storage_identity
         if backend is not None and m.backend is not None \
-                and m.backend != backend:
+                and storage_identity(m.backend) != storage_identity(backend):
             reasons.append(f"recorded backend {m.backend!r} != "
                            f"requested {backend!r}")
         if key_columns and m.key_columns \

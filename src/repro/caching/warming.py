@@ -17,6 +17,7 @@ and the cache-lifecycle CI job).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Any, Dict, Optional
 
@@ -26,6 +27,7 @@ __all__ = ["warm_scenario"]
 
 
 def warm_scenario(scenario: Any, cache_dir: str, *,
+                  config: Any = None,
                   queries: Any = None,
                   budget: Optional[int] = None,
                   backend: Optional[str] = None,
@@ -41,11 +43,21 @@ def warm_scenario(scenario: Any, cache_dir: str, *,
     Parameters
     ----------
     scenario:
-        A scenario name (``"bm25"`` / ``"bm25-mono"`` / ``"mono"``) or
-        an already-built :class:`~repro.serve.registry.ServeScenario`.
+        A scenario name (``"bm25"`` / ``"bm25-mono"`` / ``"mono"`` /
+        ...) or an already-built
+        :class:`~repro.serve.registry.ServeScenario`.
         Names are built with ``scale``/``cutoff``/``num_results``/
         ``seed`` — these MUST match the later serve invocation, or the
         node fingerprints (and hence cache directories) will differ.
+    config:
+        A :class:`~repro.serve.config.ServeConfig` (or kwargs dict)
+        supplying the scenario identity and cache plumbing in one
+        object — the same config a later ``build_service`` call (one
+        process or a fleet) consumes, which removes the
+        "parameters must match" failure mode by construction.  When
+        given it overrides ``scale``/``cutoff``/``num_results``/
+        ``seed``/``backend``/``on_stale`` (and ``scenario``, when that
+        is ``None``).
     cache_dir / backend:
         Where the planner-inserted caches live and which store backs
         them — again forwarded exactly as ``repro serve`` would.
@@ -73,13 +85,24 @@ def warm_scenario(scenario: Any, cache_dir: str, *,
     # lazily keeps the package import-cycle free
     from ..core.frame import ColFrame
     from ..core.plan import ExecutionPlan
-    from ..serve.registry import ServeScenario, build_scenario, \
-        warming_frame
+    from ..serve.config import ServeConfig
+    from ..serve.registry import ServeScenario, warming_frame
 
+    if config is not None:
+        cfg = ServeConfig.coerce(config)
+        backend = cfg.backend if backend is None else backend
+        on_stale = cfg.on_stale
+        seed = cfg.seed
+    else:
+        cfg = ServeConfig(
+            pipeline=scenario if isinstance(scenario, str) else "bm25-mono",
+            scale=scale, cutoff=cutoff, num_results=num_results,
+            seed=seed, cache_dir=cache_dir, backend=backend,
+            on_stale=on_stale)
     if not isinstance(scenario, ServeScenario):
-        scenario = build_scenario(str(scenario), scale=scale,
-                                  cutoff=cutoff,
-                                  num_results=num_results, seed=seed)
+        if scenario is not None and str(scenario) != cfg.pipeline:
+            cfg = dataclasses.replace(cfg, pipeline=str(scenario))
+        scenario = cfg.build_scenario()
     if queries is None:
         frame = warming_frame(scenario, budget=budget,
                               n_requests=requests, n_clients=clients,

@@ -15,6 +15,11 @@ consecutive flags the (simulated) worker is marked for eviction —
 which in a real deployment triggers an elastic restart on the reduced
 mesh (the checkpoint layer's mesh-agnostic manifest is what makes that
 restart possible).
+
+``RetryPolicy`` is the shared retry/backoff envelope: a bounded
+attempt count with exponentially growing (capped) delays.  The serve
+fleet (``serve/fleet.py``) uses it both to pace worker respawns and to
+bound how often an accepted request may be requeued onto survivors.
 """
 from __future__ import annotations
 
@@ -27,11 +32,54 @@ import numpy as np
 
 from .checkpoint import Checkpointer
 
-__all__ = ["RestartableLoop", "StragglerPolicy", "Preemption"]
+__all__ = ["RestartableLoop", "RetryPolicy", "StragglerPolicy",
+           "Preemption"]
 
 
 class Preemption(RuntimeError):
     """Simulated node failure."""
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retries with capped exponential backoff.
+
+    ``max_retries`` counts *retries*, not attempts: a policy with
+    ``max_retries=3`` allows 4 total attempts.  ``delay(attempt)`` is
+    the pause before retry number ``attempt`` (1-based), growing as
+    ``base_delay_s * multiplier**(attempt-1)`` up to ``max_delay_s``.
+    """
+
+    max_retries: int = 3
+    base_delay_s: float = 0.05
+    multiplier: float = 2.0
+    max_delay_s: float = 2.0
+
+    def delay(self, attempt: int) -> float:
+        if attempt <= 0:
+            return 0.0
+        d = self.base_delay_s * self.multiplier ** (attempt - 1)
+        return min(d, self.max_delay_s)
+
+    def allows(self, attempt: int) -> bool:
+        """Whether retry number ``attempt`` (1-based) is still within
+        budget."""
+        return attempt <= self.max_retries
+
+    def call(self, fn: Callable[[], Any], *,
+             retry_on: Tuple[type, ...] = (Exception,),
+             sleep: Callable[[float], None] = time.sleep) -> Any:
+        """Run ``fn`` under this policy: on a ``retry_on`` exception,
+        back off and retry; re-raise once the budget is exhausted."""
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except retry_on:
+                attempt += 1
+                if not self.allows(attempt):
+                    raise
+                sleep(self.delay(attempt))
 
 
 @dataclass

@@ -7,8 +7,9 @@ pipeline (default: the two-stage ``bm25-mono`` retrieve-and-rerank
 composition) and drives it with a closed-loop synthetic request stream
 — the request-level view of the paper's Table-2 mechanism, now through
 the full plan compiler instead of a single scorer stage.  All the real
-logic lives in ``repro.cli.serve``; this module only keeps the legacy
-flag surface (``--requests`` / ``--max-batch`` / ``--no-cache``).
+logic lives in the unified serving surface (``repro.serve.ServeConfig``
++ ``drive_closed_loop``); this module only keeps the legacy flag
+surface (``--requests`` / ``--max-batch`` / ``--no-cache``).
 """
 from __future__ import annotations
 
@@ -29,14 +30,15 @@ def main(argv=None):
     ap.add_argument("--no-cache", action="store_true")
     args = ap.parse_args(argv)
 
-    from ..cli.serve import serve_and_drive
+    from ..serve import ServeConfig, drive_closed_loop
 
-    record = serve_and_drive(
+    cfg = ServeConfig(
         pipeline=args.pipeline, scale=args.scale, cutoff=10,
-        num_results=100, requests=args.requests, clients=args.clients,
-        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
-        workers=4, cache_dir=None,
+        num_results=100, max_batch=args.max_batch,
+        max_wait_ms=args.max_wait_ms, exec_workers=4, cache_dir=None,
         backend=None if args.no_cache else "memory")
+    record = drive_closed_loop(cfg, requests=args.requests,
+                               clients=args.clients)
     print({k: record[k] for k in ("requests", "batches", "hit_rate",
                                   "p50_ms", "p99_ms", "throughput_rps")})
     return record

@@ -1,7 +1,15 @@
+# Online serving: one config (ServeConfig), one factory (build_service),
+# one process (PipelineService) or many (FleetService) — see
+# docs/serving.md.  ScoringService still imports for one more release
+# but is deprecated and intentionally absent from __all__.
+from .config import ServeConfig, build_service, drive_closed_loop
+from .fleet import FleetService
 from .registry import (SERVE_PIPELINES, ServeScenario, build_scenario,
-                       run_closed_loop)
-from .service import PipelineService, ScoringService, ServiceStats
+                       run_closed_loop, warming_frame)
+from .service import PipelineService, ServiceStats
+from .service import ScoringService  # noqa: F401 - deprecated compat import
 
-__all__ = ["PipelineService", "ScoringService", "ServiceStats",
+__all__ = ["ServeConfig", "build_service", "drive_closed_loop",
+           "PipelineService", "FleetService", "ServiceStats",
            "ServeScenario", "SERVE_PIPELINES", "build_scenario",
-           "run_closed_loop"]
+           "run_closed_loop", "warming_frame"]

@@ -13,7 +13,13 @@ topic set it runs against, so the CLI, the launch driver and
   ``dense_topk`` stage (``dense % cutoff``, cutoff fused into the
   kernel's per-block k by the optimizer);
 * ``"hybrid"``     — sparse+dense candidate union reranked by the mono
-  scorer (``(bm25 % cutoff | dense % cutoff) >> text_loader >> mono``).
+  scorer (``(bm25 % cutoff | dense % cutoff) >> text_loader >> mono``);
+* ``"bm25-sim"``   — bm25 retrieval followed by a fixed per-row
+  simulated device latency (``cacheable=False``, so it always
+  executes): a GIL-releasing stand-in for an accelerator-bound
+  reranker, which is what makes fleet throughput scaling measurable
+  on any host (sleeps overlap across worker processes even on one
+  core — same device-latency convention as ``benchmarks/plan_bench``).
 
 ``run_closed_loop`` is the shared traffic generator: N closed-loop
 client threads, each submitting one query at a time and waiting for its
@@ -31,8 +37,8 @@ import numpy as np
 from ..core.frame import ColFrame
 from ..core.pipeline import Transformer
 
-__all__ = ["ServeScenario", "SERVE_PIPELINES", "build_scenario",
-           "run_closed_loop", "warming_frame"]
+__all__ = ["ServeScenario", "SERVE_PIPELINES", "SimulatedLatency",
+           "build_scenario", "run_closed_loop", "warming_frame"]
 
 
 @dataclass
@@ -144,12 +150,57 @@ def _build_hybrid(*, scale: float, cutoff: int, num_results: int,
                     f">> text_loader >> mono")
 
 
+class SimulatedLatency(Transformer):
+    """Identity stage that sleeps ``per_row_ms`` per input row.
+
+    Models an accelerator-bound stage whose cost is proportional to the
+    candidate set (a cross-encoder scoring pass): ``time.sleep``
+    releases the GIL exactly like a device dispatch, so N worker
+    *processes* overlap N requests' latencies even on a single CPU
+    core.  ``cacheable=False`` keeps the planner from memoizing it —
+    the work must happen on every request, warm cache or not, or the
+    fleet benchmark would measure cache lookups instead of serving
+    capacity.  ``augment_only`` stays False for the same reason: the
+    cache-prune pass may defer exclusive augment-only chains behind
+    warm stores, which would skip the simulated work on hits.
+    """
+
+    cacheable = False
+    rank_preserving = True
+
+    def __init__(self, per_row_ms: float = 2.0):
+        self.per_row_ms = float(per_row_ms)
+
+    def transform(self, inp: ColFrame) -> ColFrame:
+        time.sleep(self.per_row_ms * 1e-3 * max(1, len(inp)))
+        return inp
+
+    def signature(self):
+        return ("SimulatedLatency", self.per_row_ms)
+
+
+def _build_bm25_sim(*, scale: float, cutoff: int, num_results: int,
+                    seed: int) -> ServeScenario:
+    from ..ir import InvertedIndex, msmarco_like
+    corpus = msmarco_like(1, scale=scale, seed=seed)
+    index = InvertedIndex.build(corpus.get_corpus_iter())
+    pipeline = (index.bm25(num_results=num_results) % cutoff
+                >> SimulatedLatency())
+    return ServeScenario(
+        name="bm25-sim",
+        pipeline=pipeline,
+        topics=corpus.get_topics(),
+        description=f"bm25 % {cutoff} >> simulated per-row device latency "
+                    f"(uncacheable; the fleet-scaling workload)")
+
+
 SERVE_PIPELINES: Dict[str, Callable[..., ServeScenario]] = {
     "bm25": _build_bm25,
     "bm25-mono": _build_bm25_mono,
     "mono": _build_mono,
     "dense": _build_dense,
     "hybrid": _build_hybrid,
+    "bm25-sim": _build_bm25_sim,
 }
 
 

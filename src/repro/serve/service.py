@@ -30,6 +30,7 @@ the incremental scheduler (``core.executor.StreamingExecutor``):
 from __future__ import annotations
 
 import threading
+import warnings
 from concurrent.futures import Future
 from typing import Any, Dict, List, Optional, Sequence, Union
 
@@ -38,7 +39,9 @@ from ..core.frame import ColFrame
 from ..core.pipeline import Transformer
 from ..core.plan import ExecutionPlan, PlanStats
 
-__all__ = ["PipelineService", "ScoringService", "ServiceStats"]
+# ScoringService is deprecated and deliberately absent: it still
+# imports (one more release) but warns on construction
+__all__ = ["PipelineService", "ServiceStats"]
 
 
 class ServiceStats:
@@ -234,19 +237,27 @@ class PipelineService:
 
 
 class ScoringService:
-    """Compatibility front-end: the paper's §4.2 single-scorer service
-    (``index.bm25() >> cached_scorer`` packaged as a long-lived
-    service), now a thin wrapper over :class:`PipelineService`.
+    """DEPRECATED compatibility front-end: the paper's §4.2
+    single-scorer service (``index.bm25() >> cached_scorer`` packaged
+    as a long-lived service), now a thin wrapper over
+    :class:`PipelineService`.
 
-    ``submit`` queues (query, docno, text) rows; ``flush`` scores the
-    queue in ``max_batch`` chunks through the compiled plan.  Prefer
-    ``PipelineService`` for new code — it serves whole pipelines and
-    micro-batches concurrent clients.
+    Construction emits a :class:`DeprecationWarning`; the import
+    survives one more release, but the class is no longer part of
+    ``serve.__all__``.  Use ``PipelineService`` (optionally wrapping
+    the scorer in a ``ScorerCache``) — it serves whole pipelines,
+    micro-batches concurrent clients and scales to a process fleet via
+    ``serve.build_service(..., workers=N)``.
     """
 
     def __init__(self, scorer: Transformer,
                  cache_path: Optional[str] = None,
                  max_batch: int = 256, use_cache: bool = True):
+        warnings.warn(
+            "ScoringService is deprecated and will be removed in the next "
+            "release; wrap the scorer in a ScorerCache and serve it with "
+            "PipelineService (or serve.build_service)",
+            DeprecationWarning, stacklevel=2)
         from ..caching.scorer import ScorerCache
         self.scorer = scorer
         self.cache = ScorerCache(cache_path, scorer) if use_cache else None

@@ -386,7 +386,11 @@ def test_resolve_backend_name():
     assert resolve_backend_name(None, "dbm") == "dbm"
     assert resolve_backend_name("pickle", "dbm") == "pickle"
     assert resolve_backend_name(MemoryLRUBackend(), "dbm") == "memory"
-    with pytest.raises(ValueError, match="registered backends"):
+    # unknown selectors list every registered selector, combinator
+    # forms (tiered:<disk> / mmap:<disk>) included
+    with pytest.raises(ValueError, match="registered selectors"):
+        resolve_backend_name("redis", "dbm")
+    with pytest.raises(ValueError, match="mmap:sqlite"):
         resolve_backend_name("redis", "dbm")
 
 

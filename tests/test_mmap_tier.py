@@ -1,0 +1,287 @@
+"""MmapTier (caching/mmap_tier.py): packed read-only snapshot over a
+disk backend — selector plumbing, write-shadowing, miss-rate-triggered
+refresh, storage-identity staleness relaxation, and observational
+equivalence with the bare disk backend under random operation sequences
+(property-tested, including across a close/reopen cycle — the same
+harness as tests/test_tiered.py)."""
+import os
+import tempfile
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.caching import (BACKENDS, KeyValueCache, MmapTier,
+                           backend_store_exists, open_backend,
+                           registered_selectors, select_backend, split_mmap,
+                           storage_identity)
+from repro.caching.base import StaleCacheError
+from repro.caching.mmap_tier import PACK_FILE
+from repro.core import ColFrame, GenericTransformer
+
+import numpy as np
+
+#: every disk tier mmap may compose over (pickle cannot enumerate)
+DISK_BACKENDS = ["dbm", "sqlite"]
+
+
+# -- selector plumbing --------------------------------------------------------
+
+def test_split_mmap_selector():
+    assert split_mmap("mmap") == "sqlite"                # default disk
+    assert split_mmap("mmap:dbm") == "dbm"
+    assert split_mmap("sqlite") is None                  # not mmap
+    with pytest.raises(ValueError, match="persistent"):
+        split_mmap("mmap:memory")                        # no store to pack
+    with pytest.raises(ValueError, match="enumerate"):
+        split_mmap("mmap:pickle")                        # hashed keys only
+    with pytest.raises(ValueError, match="mmap"):
+        split_mmap("mmap:redis")
+
+
+def test_select_backend_normalizes_and_validates():
+    assert select_backend("mmap") == "mmap:sqlite"
+    assert select_backend("mmap:dbm") == "mmap:dbm"
+    assert select_backend("tiered") == "tiered:sqlite"
+    assert select_backend(None) == "sqlite"
+    assert select_backend(None, default="dbm") == "dbm"
+    with pytest.raises(ValueError) as e:
+        select_backend("bogus")
+    # the unknown-selector error spells out every registered selector,
+    # combinator forms included
+    for name in registered_selectors():
+        assert repr(name) in str(e.value)
+
+
+def test_registered_selectors_cover_registry_and_combinators():
+    names = registered_selectors()
+    for base in BACKENDS:
+        assert base in names
+    assert "tiered:pickle" in names                      # tiered takes any
+    assert "mmap:sqlite" in names and "mmap:dbm" in names
+    assert "mmap:pickle" not in names                    # ... mmap does not
+    assert "mmap" not in BACKENDS                        # combinator, not entry
+
+
+def test_storage_identity_strips_combinators():
+    assert storage_identity("mmap:sqlite") == "sqlite"
+    assert storage_identity("tiered:dbm") == "dbm"
+    assert storage_identity("sqlite") == "sqlite"
+    assert storage_identity("bogus") == "bogus"          # caller validates
+    assert storage_identity(None) is None
+
+
+def test_open_backend_mmap(tmp_path):
+    b = open_backend("mmap:dbm", str(tmp_path))
+    assert isinstance(b, MmapTier)
+    assert b.name == "mmap:dbm"
+    assert b.disk.name == "dbm"
+    assert b.persistent
+    b.close()
+    b.close()                                            # idempotent
+    b2 = open_backend("mmap", str(tmp_path / "x"))
+    assert b2.disk.name == "sqlite"
+    b2.close()
+
+
+def test_backend_store_exists_dispatches_on_disk_tier(tmp_path):
+    assert not backend_store_exists("mmap:sqlite", str(tmp_path))
+    b = open_backend("mmap:sqlite", str(tmp_path))
+    b.put(b"k", b"v")
+    b.close()
+    assert backend_store_exists("mmap:sqlite", str(tmp_path))
+    assert backend_store_exists("sqlite", str(tmp_path))
+
+
+# -- tier semantics -----------------------------------------------------------
+
+def test_snapshot_serves_warmed_entries(tmp_path):
+    bare = open_backend("sqlite", str(tmp_path))
+    bare.put_many([(b"k1", b"v1"), (b"k2", b"v2")])
+    bare.close()
+    t = open_backend("mmap:sqlite", str(tmp_path))
+    assert os.path.exists(os.path.join(str(tmp_path), PACK_FILE))
+    assert t._snap.get(b"k1") == b"v1"                   # packed at open
+    assert t.get_many([b"k1", b"k2", b"nope"]) == [b"v1", b"v2", None]
+    t.close()
+
+
+def test_writes_go_to_disk_and_are_shadowed(tmp_path):
+    t = open_backend("mmap:sqlite", str(tmp_path))
+    t.put_many([(b"a", b"1")])
+    assert t._snap.get(b"a") is None                     # snapshot lags ...
+    assert t.get(b"a") == b"1"                           # ... reads don't
+    assert t.disk.get(b"a") == b"1"
+    t.refresh()
+    assert t._snap.get(b"a") == b"1"                     # repack catches up
+    t.close()
+    bare = open_backend("sqlite", str(tmp_path))         # reopen WITHOUT tier
+    assert bare.get(b"a") == b"1"
+    bare.close()
+
+
+def test_delete_shadows_until_refresh(tmp_path):
+    t = open_backend("mmap:sqlite", str(tmp_path))
+    t.put(b"k", b"v")
+    t.refresh()                                          # snapshot has k
+    assert t.delete_many([b"k", b"missing"]) == 1
+    assert t.get(b"k") is None                           # not resurrected
+    assert t.get_many([b"k"]) == [None]
+    assert len(t) == 0
+    t.close()
+
+
+def test_foreign_writes_found_via_fall_through_then_trigger_refresh(tmp_path):
+    """A key written by another process is served from disk (snapshot
+    miss) and counts toward the refresh trigger."""
+    t = MmapTier(str(tmp_path), disk="sqlite", refresh_after=3)
+    foreign = open_backend("sqlite", str(tmp_path))      # same store files
+    foreign.put_many([(b"f%d" % i, b"v%d" % i) for i in range(4)])
+    refreshes0 = t.refreshes
+    assert t.get(b"f0") == b"v0"                         # disk fall-through
+    assert t.get(b"f1") == b"v1"
+    assert t.get(b"f2") == b"v2"                         # 3rd find: repack
+    assert t.refreshes == refreshes0 + 1
+    assert t._snap.get(b"f3") == b"v3"                   # snapshot caught up
+    foreign.close()
+    t.close()
+
+
+def test_misses_do_not_trigger_refresh(tmp_path):
+    t = MmapTier(str(tmp_path), disk="sqlite", refresh_after=1)
+    refreshes0 = t.refreshes
+    assert t.get(b"nope") is None                        # true miss
+    assert t.get_many([b"also-nope"]) == [None]
+    assert t.refreshes == refreshes0                     # no pointless repack
+    t.close()
+
+
+def test_parity_views_delegate_to_disk(tmp_path):
+    t = open_backend("mmap:sqlite", str(tmp_path))
+    pairs = [(b"k%d" % i, b"v%d" % i) for i in range(5)]
+    t.put_many(pairs)
+    assert sorted(t.items()) == sorted(pairs)
+    assert sorted(t.entry_stats()) == \
+        sorted((k, len(v)) for k, v in pairs)
+    assert t.stat_entries([b"k0", b"nope"]) == [2, None]
+    t.close()
+
+
+def test_lock_delegates_to_disk_and_allows_nested_puts(tmp_path):
+    """The compute-once critical section must be able to write while
+    held (the kv miss path runs put_many inside lock())."""
+    t = open_backend("mmap:sqlite", str(tmp_path))
+    with t.lock():
+        with t.lock():                                   # re-entrant
+            t.put(b"k", b"v")
+    assert t.get(b"k") == b"v"
+    t.close()
+
+
+# -- cache families over the mmap selector ------------------------------------
+
+def _expander():
+    return GenericTransformer(
+        lambda inp: inp.assign(query=np.array(
+            [q + "!" for q in inp["query"].tolist()], dtype=object)),
+        "expander", key_columns=("qid", "query"), value_columns=("query",))
+
+
+TOPICS = ColFrame({"qid": [f"q{i}" for i in range(6)],
+                   "query": [f"terms {i}" for i in range(6)]})
+
+
+def test_kv_cache_over_mmap_backend(tmp_path):
+    with KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="mmap:sqlite") as kv:
+        assert kv._manifest.backend == "mmap:sqlite"
+        cold = kv(TOPICS)
+        assert kv.stats.misses == len(TOPICS)
+        hot = kv(TOPICS)
+        assert kv.stats.hits == len(TOPICS)
+        direct = _expander()(TOPICS)
+        assert cold.equals(direct) and hot.equals(direct)
+    # a fresh open over the same dir replays from the packed snapshot
+    with KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="mmap:sqlite") as kv2:
+        assert kv2(TOPICS).equals(_expander()(TOPICS))
+        assert kv2.stats.misses == 0
+
+
+def test_storage_identity_relaxes_manifest_staleness(tmp_path):
+    """Combinators are pure accelerators over the same store files, so
+    warming with ``sqlite`` and serving with ``mmap:sqlite`` (the fleet
+    deployment pattern) is NOT a backend mismatch — but a different
+    disk store still is."""
+    t = _expander()
+    with KeyValueCache(str(tmp_path), t, key=("qid", "query"),
+                       value=("query",), backend="sqlite") as kv:
+        kv(TOPICS)
+    with KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                       value=("query",), backend="mmap:sqlite") as kv2:
+        assert kv2(TOPICS).equals(_expander()(TOPICS))
+        assert kv2.stats.misses == 0                     # warm, not stale
+    with pytest.raises(StaleCacheError, match="backend"):
+        KeyValueCache(str(tmp_path), _expander(), key=("qid", "query"),
+                      value=("query",), backend="dbm")
+
+
+# -- observational equivalence (property test) --------------------------------
+
+_OPS = st.lists(
+    st.tuples(st.integers(0, 3),          # 0/1: put, 2: delete, 3: get
+              st.integers(0, 9),          # key id (small space -> collisions)
+              st.integers(0, 99)),        # value id
+    min_size=1, max_size=40)
+
+
+def _apply(backend, ops):
+    """Drive one op sequence, returning every observable result."""
+    seen = []
+    for op, k, v in ops:
+        key = b"key-%d" % k
+        if op in (0, 1):
+            backend.put_many([(key, b"val-%d" % v)])
+        elif op == 2:
+            seen.append(("del", backend.delete_many([key])))
+        else:
+            seen.append(("get", backend.get(key)))
+    keys = [b"key-%d" % i for i in range(10)]
+    seen.append(("get_many", backend.get_many(keys)))
+    seen.append(("len", len(backend)))
+    return seen
+
+
+@given(ops=_OPS)
+@settings(max_examples=15, deadline=None)
+def test_mmap_observationally_equivalent_to_bare_disk(ops):
+    """For any put/get/delete sequence, an MmapTier over disk backend X
+    is indistinguishable from X alone — including after a close/reopen
+    cycle (the snapshot must add speed, never state).  A tiny
+    ``refresh_after`` maximizes mid-sequence repacks."""
+    for disk in DISK_BACKENDS:
+        _check_equivalence(disk, ops)
+
+
+def _check_equivalence(disk, ops):
+    with tempfile.TemporaryDirectory(prefix="mmap-prop-") as tmp:
+        p_mmap = os.path.join(tmp, "mmap")
+        p_bare = os.path.join(tmp, "bare")
+        os.makedirs(p_mmap)
+        t = MmapTier(p_mmap, disk=disk, refresh_after=2)
+        b = open_backend(disk, p_bare)
+        try:
+            assert _apply(t, ops) == _apply(b, ops)
+        finally:
+            t.close()
+            b.close()
+        # reopen both: the surviving state must match too
+        t2 = MmapTier(p_mmap, disk=disk, refresh_after=2)
+        b2 = open_backend(disk, p_bare)
+        try:
+            keys = [b"key-%d" % i for i in range(10)]
+            assert t2.get_many(keys) == b2.get_many(keys)
+            assert len(t2) == len(b2)
+            assert _apply(t2, ops) == _apply(b2, ops)
+        finally:
+            t2.close()
+            b2.close()

@@ -97,19 +97,38 @@ def test_indexing_pipeline_end_to_end():
         assert "expanded" in list(idx1.postings.keys())
 
 
-def test_scoring_service_with_cache():
+def test_pipeline_service_with_cached_scorer():
+    """The §4.2 single-scorer service on its modern surface: a
+    ScorerCache-wrapped MonoScorer behind PipelineService (what the
+    ScoringService deprecation points at)."""
+    from repro.serve import PipelineService
     mono = MonoScorer(CE)
-    svc = ScoringService(mono, max_batch=32)
+    cache = ScorerCache(None, mono)
+    svc = PipelineService(cache, max_batch=32, max_wait_ms=0.0,
+                          max_workers=1)
     docs = CORPUS.docs
-    for i in range(40):
-        svc.submit(f"q{i % 4}", f"query text {i % 4}",
-                   str(docs["docno"][i]), str(docs["text"][i]))
-    out1 = svc.flush()
+    rows = [{"qid": f"q{i % 4}", "query": f"query text {i % 4}",
+             "docno": str(docs["docno"][i]), "text": str(docs["text"][i]),
+             "score": 0.0, "rank": 0} for i in range(40)]
+    out1 = svc.search(rows)
     assert len(out1) == 40
-    for i in range(40):      # identical requests: all hits now
-        svc.submit(f"q{i % 4}", f"query text {i % 4}",
-                   str(docs["docno"][i]), str(docs["text"][i]))
-    svc.flush()
+    out2 = svc.search(rows)             # identical requests: all hits now
+    assert len(out2) == 40
+    assert out2.equals(out1)            # caching changes time, not results
     s = svc.stats.summary()
     assert s["hit_rate"] >= 0.5
+    svc.close()
+    cache.close()
+
+
+def test_scoring_service_deprecated_but_compatible():
+    """The legacy front-end still works (one more release) but warns."""
+    mono = MonoScorer(CE)
+    with pytest.warns(DeprecationWarning, match="PipelineService"):
+        svc = ScoringService(mono, max_batch=32)
+    docs = CORPUS.docs
+    for i in range(8):
+        svc.submit(f"q{i % 2}", f"query text {i % 2}",
+                   str(docs["docno"][i]), str(docs["text"][i]))
+    assert len(svc.flush()) == 8
     svc.close()
