@@ -30,8 +30,8 @@ from .economics import AccessStats, CacheBudget, evict_entries
 from .provenance import CacheManifest, ManifestError, StaleCacheError
 
 __all__ = ["CacheMissError", "CacheStats", "CacheTransformer",
-           "resolve_transformer", "pickle_key", "pickle_value",
-           "unpickle_value"]
+           "n_frame_queries", "resolve_transformer", "pickle_key",
+           "pickle_value", "unpickle_value"]
 
 #: valid ``on_stale=`` policies (see CacheTransformer)
 ON_STALE_POLICIES = ("error", "recompute", "readonly")
@@ -47,11 +47,22 @@ class CacheStats:
     misses: int = 0
     inserts: int = 0
     verified: int = 0
+    #: wall seconds spent inside the *wrapped transformer* on the miss
+    #: path, and the input queries those computes covered.  This is the
+    #: raw recompute cost — cache lookups/inserts excluded — which is
+    #: what the planner's cost model (core/cost.py) needs: the wrapper
+    #: call time a run records for a cached node is dominated by store
+    #: round trips, so folding it would make every cached node look
+    #: exactly as expensive as its cache and the cache-place pass could
+    #: never learn that recompute is cheaper.
+    compute_s: float = 0.0
+    compute_queries: int = 0
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False, compare=False)
 
     def add(self, *, hits: int = 0, misses: int = 0, inserts: int = 0,
-            verified: int = 0) -> None:
+            verified: int = 0, compute_s: float = 0.0,
+            compute_queries: int = 0) -> None:
         """Atomic increment — cache families are shared by the
         concurrent plan executor, so counter updates must not race."""
         with self._lock:
@@ -59,6 +70,8 @@ class CacheStats:
             self.misses += misses
             self.inserts += inserts
             self.verified += verified
+            self.compute_s += compute_s
+            self.compute_queries += compute_queries
 
     @property
     def lookups(self) -> int:
@@ -71,6 +84,18 @@ class CacheStats:
     def __str__(self):
         return (f"hits={self.hits} misses={self.misses} "
                 f"hit_rate={self.hit_rate:.3f}")
+
+
+def n_frame_queries(frame: Any) -> int:
+    """How many input *queries* a frame covers: unique qids when the
+    column exists, else rows.  Per-query is the planner cost model's
+    unit, so the families normalize ``CacheStats.compute_s`` by this."""
+    try:
+        if "qid" in frame:
+            return len(set(frame["qid"].tolist()))
+    except Exception:
+        pass
+    return len(frame)
 
 
 def resolve_transformer(t: Any) -> Optional[Transformer]:

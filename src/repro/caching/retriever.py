@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import hashlib
 import pickle
+import time
 import zlib
 from typing import Any, List, Optional, Tuple
 
@@ -23,7 +24,7 @@ import numpy as np
 
 from ..core.frame import ColFrame
 from .backends import CacheBackend, open_backend, resolve_backend_name
-from .base import CacheTransformer, pickle_key
+from .base import CacheTransformer, n_frame_queries, pickle_key
 
 __all__ = ["RetrieverCache"]
 
@@ -166,7 +167,10 @@ class RetrieverCache(CacheTransformer):
                 return []
             t = self._require_transformer(len(still))
             sub = inp.take(np.asarray(still, dtype=np.int64))
+            t0 = time.perf_counter()
             out = t(sub)
+            self.stats.add(compute_s=time.perf_counter() - t0,
+                           compute_queries=n_frame_queries(sub))
             groups = out.group_indices(list(self.key_cols)) if len(out) else {}
             items = []
             for i in still:

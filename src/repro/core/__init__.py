@@ -12,6 +12,7 @@ from .precompute import (longest_common_prefix, split_on_prefix,
                          PrecomputeStats)
 from .ir import IRNode, PlanGraph, lower, render_explain
 from .rewrite import OPTIMIZER_PASSES, PassStats
+from .cost import CostContext, CostModel
 from .plan import ExecutionPlan, PlanNode, PlanStats, plan_size
 from .compile_opt import compile_pipeline
 from .measures import Measure, parse_measure, evaluate
@@ -27,7 +28,7 @@ __all__ = [
     "PrefixTrie", "run_with_trie", "PrecomputeStats",
     "ExecutionPlan", "PlanNode", "PlanStats", "plan_size",
     "IRNode", "PlanGraph", "lower", "render_explain",
-    "OPTIMIZER_PASSES", "PassStats",
+    "OPTIMIZER_PASSES", "PassStats", "CostContext", "CostModel",
     "compile_pipeline", "Measure", "parse_measure", "evaluate",
     "Experiment", "ExperimentResult",
 ]

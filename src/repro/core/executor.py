@@ -36,6 +36,7 @@ in ``tests/test_rewrite.py``).
 """
 from __future__ import annotations
 
+import heapq
 import queue as queue_mod
 import random
 import threading
@@ -302,14 +303,24 @@ def run_concurrent(graph: PlanGraph, frame: ColFrame,
         for s in range(n_shards):
             indeg[(node.id, s)] = len(_effective_inputs(node))
 
-    ready: deque = deque()
+    # ready tasks pop in critical-path order: the operand-order pass
+    # stamps each node's sched_priority with its own estimated cost plus
+    # the costliest downstream path, so when more tasks are ready than
+    # workers the long pole starts first.  The monotone sequence number
+    # keeps equal-priority tasks FIFO (and, with priorities all zero —
+    # the cost-blind default — reduces to the previous deque order).
+    ready: List[Tuple[float, int, IRNode, int]] = []
+    seq = 0
 
     def complete(node_id: int, s: int) -> None:
+        nonlocal seq
         for child in children.get(node_id, ()):
             key = (child.id, s)
             indeg[key] -= 1
             if indeg[key] == 0:
-                ready.append((child, s))
+                heapq.heappush(ready,
+                               (-child.sched_priority, seq, child, s))
+                seq += 1
 
     for s in range(n_shards):
         complete(graph.source.id, s)
@@ -330,7 +341,7 @@ def run_concurrent(graph: PlanGraph, frame: ColFrame,
 
         def submit_ready() -> None:
             while ready:
-                node, s = ready.popleft()
+                _, _, node, s = heapq.heappop(ready)
                 fut = pool.submit(exec_task, node, s)
                 futures[fut] = (node, s)
 

@@ -48,13 +48,16 @@ from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
                     Union)
 
+from .cost import (CostContext, CostModel, annotate_node_actuals,
+                   compute_node_fingerprints, fold_costs, _round_cost)
 from .executor import (_Recorder, resolve_n_shards, run_concurrent,
                        run_sequential, run_warm)
 from .frame import ColFrame
 from .ir import IRNode, PlanGraph, lower, plan_size, render_explain
 from .pipeline import Transformer, pipeline_hash
 from .precompute import PrecomputeStats, longest_common_prefix
-from .rewrite import (POST_MEMO_PASSES, PassStats, resolve_passes, run_pass)
+from .rewrite import (PLACEMENT_PASSES, POST_MEMO_PASSES, PassStats,
+                      resolve_passes, run_pass)
 
 __all__ = ["ExecutionPlan", "PlanNode", "PlanStats", "plan_size"]
 
@@ -70,7 +73,15 @@ class PlanStats(PrecomputeStats):
     cache_misses: int = 0
     node_times_s: Dict[str, float] = field(default_factory=dict)
     node_exec_counts: Dict[str, int] = field(default_factory=dict)
+    #: raw wrapped-transformer seconds (and the queries they covered)
+    #: spent on cached nodes' miss paths this run — the recompute cost
+    #: the fingerprint-keyed EWMA folds for cached nodes, since their
+    #: ``node_times_s`` is dominated by store round trips (see
+    #: ``caching.base.CacheStats.compute_s``)
+    node_compute_s: Dict[str, float] = field(default_factory=dict)
+    node_compute_queries: Dict[str, int] = field(default_factory=dict)
     wall_time_s: float = 0.0
+    n_queries: int = 0                   # rows in the query frame
     # -- online serving (filled by PipelineService, see serve/service.py) ----
     #: per-node online latency (p50/p99 ms), executions and rows, plus
     #: service-level queue depth / flush-trigger / batch-occupancy stats
@@ -185,8 +196,13 @@ class ExecutionPlan:
         self.graph: PlanGraph = lower(self.pipelines)
         self.nodes_total_naive = sum(plan_size(p) for p in self.pipelines)
 
-        # -- layer 2: optimizer (pre-memo passes) --------------------------
-        pre = [name for name in passes if name not in POST_MEMO_PASSES]
+        self._node_fps: Optional[Dict[int, str]] = None
+        self._plan_manifest_path: Optional[str] = None
+
+        # -- layer 2: optimizer (structural pre-memo passes) ---------------
+        pre = [name for name in passes
+               if name not in POST_MEMO_PASSES
+               and name not in PLACEMENT_PASSES and name != "operand-order"]
         self.pass_stats: List[PassStats] = [
             run_pass(self.graph, name) for name in pre]
         if "cse" in pre and any(p.name == "pushdown" and p.cutoffs_pushed
@@ -198,16 +214,25 @@ class ExecutionPlan:
             self.pass_stats += [run_pass(self.graph, name)
                                 for name in ("normalize", "cse")
                                 if name in pre]
+        # the cost-aware ordering pass runs last of the pre-memo passes,
+        # after the re-round, so it orders the final structural DAG
+        if "operand-order" in passes:
+            self._ensure_cost_ctx()
+            self.pass_stats.append(run_pass(self.graph, "operand-order"))
 
-        self._node_fps: Optional[Dict[int, str]] = None
-        self._plan_manifest_path: Optional[str] = None
         if (cache_dir is not None or memo_factory is not None
                 or cache_backend is not None):
+            # cache placement must decide *before* memos are opened
+            if "cache-place" in passes:
+                self._ensure_cost_ctx()
+                self.pass_stats.append(run_pass(self.graph, "cache-place"))
             self._insert_memos()
             # post-memo passes consult the freshly opened cache manifests
-            self.pass_stats += [run_pass(self.graph, name)
-                                for name in passes
-                                if name in POST_MEMO_PASSES]
+            # (cache-prune) and the manifest's run history (autotune)
+            post = [name for name in passes if name in POST_MEMO_PASSES]
+            if "autotune" in post:
+                self._ensure_cost_ctx()
+            self.pass_stats += [run_pass(self.graph, name) for name in post]
         self._label_nodes()
         # the self-describing record is built lazily — fingerprinting
         # every node is only worth paying for when something consumes it
@@ -256,23 +281,71 @@ class ExecutionPlan:
         transformer fingerprint folded over the fingerprints of its
         input nodes, so a config/code change anywhere upstream changes
         every downstream node's fingerprint (``caching/provenance.py``).
-        Deterministic across processes."""
+        Commutative combine operands fold in sorted order, so the
+        fingerprints — and everything keyed on them: cache provenance,
+        measured costs — are invariant under the ``operand-order``
+        rewrite.  Deterministic across processes."""
         if self._node_fps is None:
-            from ..caching.auto import derive_fingerprint
-            from ..caching.provenance import combine_fingerprints
-            fps: Dict[int, str] = {
-                self.graph.source.id: combine_fingerprints("plan-source")}
-            # graph.nodes is topological — every input precedes its consumer
-            for node in self.graph.nodes:
-                if node.kind == "source":
-                    continue
-                stage_fp = derive_fingerprint(node.stage) \
-                    or combine_fingerprints("sig", repr(node.stage))
-                fps[node.id] = combine_fingerprints(
-                    "node", node.kind, stage_fp,
-                    *[fps[i.id] for i in node.inputs])
-            self._node_fps = fps
+            self._node_fps = compute_node_fingerprints(self.graph)
         return self._node_fps
+
+    # -- cost layer --------------------------------------------------------
+    def _ensure_cost_ctx(self) -> None:
+        """Attach a :class:`~repro.core.cost.CostContext` as
+        ``graph.cost`` (once): the measured-cost EWMA table and run
+        history from the prior plan manifest, plus the microbenchmarked
+        cache round-trip of the resolved backend when this plan will
+        insert caches.  Consumed by the ``operand-order`` /
+        ``cache-place`` / ``autotune`` passes."""
+        if self.graph.cost is not None:
+            return
+        fps = self.node_fingerprints()
+        record: Optional[Dict[str, Any]] = None
+        history: List[Dict[str, Any]] = []
+        if self.cache_dir is not None:
+            from ..caching.provenance import combine_fingerprints
+            plan_id = combine_fingerprints(
+                "plan", *[fps[t.id] for t in self.graph.terminals])
+            prior = os.path.join(self.cache_dir, "plans", f"{plan_id}.json")
+            if os.path.exists(prior):
+                try:
+                    import json
+                    with open(prior, "r", encoding="utf-8") as f:
+                        record = json.load(f)
+                    history = [r for r in record.get("runs", [])
+                               if isinstance(r, dict)]
+                except Exception:
+                    record = None
+        backend = round_trip = None
+        if (self.cache_dir is not None or self.cache_backend is not None
+                or self._memo_factory is not None):
+            from ..caching.backends import (measure_round_trip,
+                                            resolve_backend_name)
+            try:
+                # with no explicit selector each cache family picks its
+                # own default, so there is no single name to promote —
+                # ctx.backend stays None (cache-place still *skips* using
+                # the measured round trip of a representative store)
+                resolved = resolve_backend_name(self.cache_backend,
+                                                default="sqlite")
+                round_trip = measure_round_trip(resolved)
+                if self.cache_backend is not None:
+                    backend = resolved
+            except Exception:
+                backend = round_trip = None
+        self.graph.cost = CostContext(
+            model=CostModel.from_manifest(record), fps=fps,
+            backend=backend, round_trip_s=round_trip, history=history)
+
+    def tuning(self) -> Dict[str, Any]:
+        """Knob values chosen by the ``autotune`` pass (``n_shards``,
+        ``max_batch``, ``max_wait_ms`` — whichever had evidence), flat
+        ``{knob: value}``.  ``serve`` consumes these via
+        ``max_batch="auto"``; offline callers can forward ``n_shards``
+        to :meth:`run`.  Empty when autotune did not run or had no
+        evidence."""
+        return {k: v.get("value") for k, v in self.graph.tuning.items()
+                if isinstance(v, dict)}
 
     # -- planner-inserted memoization --------------------------------------
     def _insert_memos(self) -> None:
@@ -289,18 +362,28 @@ class ExecutionPlan:
         for node in self.graph.nodes:
             if node.kind != "stage":
                 continue
+            if node.cache_skip:
+                continue                 # cache-place: recompute is cheaper
             path = None
             if self.cache_dir is not None:
                 # key the store by the node's full structural position so
                 # the same stage under different prefixes never collides;
-                # sha256 (not hash()) so the path is stable across processes
+                # sha256 (not hash()) so the path is stable across
+                # processes; the commutative-canonical key (when the
+                # normalize pass ran) so it is stable under operand-order
+                # swaps — a reorder must never cool a warm cache
+                basis = node.canon_key if node.canon_key is not None \
+                    else node.key
                 digest = hashlib.sha256(
-                    repr(node.key).encode()).hexdigest()[:16]
+                    repr(basis).encode()).hexdigest()[:16]
                 path = os.path.join(
                     self.cache_dir, pipeline_hash(node.stage) + "-" + digest)
-            node.cache = factory(node.stage, path, **_accepted_kwargs(
-                factory, {**kwargs, "fingerprint": fps[node.id],
-                          "on_stale": self.on_stale}))
+            wanted = {**kwargs, "fingerprint": fps[node.id],
+                      "on_stale": self.on_stale}
+            if node.backend_override is not None:
+                wanted["backend"] = node.backend_override
+            node.cache = factory(node.stage, path,
+                                 **_accepted_kwargs(factory, wanted))
 
     # -- explain / manifests ------------------------------------------------
     def _build_record(self) -> Dict[str, Any]:
@@ -334,6 +417,10 @@ class ExecutionPlan:
                 "inlined": node.inlined,
                 "probe_input": node.probe_input.id
                                if node.probe_input is not None else None,
+                "cost_est_s": _round_cost(node.cost_est_s)
+                              if node.cost_est_s is not None else None,
+                "cost_src": node.cost_src,
+                "cache_skip": node.cache_skip,
             })
         agg = self._aggregate_pass_stats()
         return {
@@ -350,8 +437,12 @@ class ExecutionPlan:
                 "nodes_eliminated": agg["nodes_eliminated"],
                 "cutoffs_pushed": agg["cutoffs_pushed"],
                 "nodes_marked_prunable": agg["nodes_marked_prunable"],
+                "caches_skipped": agg["caches_skipped"],
+                "caches_promoted": agg["caches_promoted"],
+                "inputs_reordered": agg["inputs_reordered"],
                 "pass_stats": [p.as_dict() for p in self.pass_stats],
             },
+            "tuning": dict(self.graph.tuning),
             "runs": [],
         }
 
@@ -362,14 +453,30 @@ class ExecutionPlan:
             "cutoffs_pushed": sum(p.cutoffs_pushed for p in self.pass_stats),
             "nodes_marked_prunable": sum(p.nodes_marked_prunable
                                          for p in self.pass_stats),
+            "caches_skipped": sum(p.caches_skipped for p in self.pass_stats),
+            "caches_promoted": sum(p.caches_promoted
+                                   for p in self.pass_stats),
+            "inputs_reordered": sum(p.inputs_reordered
+                                    for p in self.pass_stats),
         }
 
     def explain(self) -> str:
         """ASCII rendering of the optimized plan: one tree per pipeline
-        with per-node id, relation, provenance fingerprint, cache family
-        and the optimizer passes that touched the node.  Byte-identical
-        to ``repro plan explain`` over this plan's manifest."""
-        return render_explain(self.to_record())
+        with per-node id, relation, provenance fingerprint, cache family,
+        the optimizer passes that touched the node and — when the cost
+        layer ran — estimated-vs-actual per-query cost columns
+        (``cost[est=… act=… src=…]``).  Byte-identical to ``repro plan
+        explain`` over this plan's manifest: actuals come from the same
+        persisted EWMA table the CLI reads."""
+        record = self.to_record()
+        if self._plan_manifest_path is None and self.stats is not None \
+                and self.stats.node_times_s:
+            # no manifest to carry measured costs (in-memory plan):
+            # overlay this run's actuals so explain() still shows them
+            import copy
+            record = copy.deepcopy(record)
+            fold_costs(record, self.stats)
+        return render_explain(record)
 
     def to_record(self) -> Dict[str, Any]:
         """The plan-manifest record (see ``_build_record``), built on
@@ -397,6 +504,10 @@ class ExecutionPlan:
                 record["created_at"] = old.get("created_at",
                                                record["created_at"])
                 record["runs"] = list(old.get("runs", []))
+                # measured per-node costs survive re-planning: they are
+                # fingerprint-keyed, so stale entries simply never match
+                record["costs"] = dict(old.get("costs") or {})
+                annotate_node_actuals(record)
             except Exception:
                 pass
         self._plan_manifest_path = save_plan_manifest(self.cache_dir, record)
@@ -410,7 +521,7 @@ class ExecutionPlan:
             with open(self._plan_manifest_path, "r", encoding="utf-8") as f:
                 record = json.load(f)
             runs = record.setdefault("runs", [])
-            runs.append({
+            run: Dict[str, Any] = {
                 "at": time.time(),
                 "nodes_executed": stats.nodes_executed,
                 "nodes_pruned": stats.nodes_pruned,
@@ -419,8 +530,24 @@ class ExecutionPlan:
                 "n_shards": stats.n_shards,
                 "n_workers": stats.n_workers,
                 "wall_time_s": round(stats.wall_time_s, 4),
-            })
+                "n_queries": stats.n_queries,
+            }
+            online = stats.online or {}
+            if online:
+                run["online"] = {k: online[k] for k in (
+                    "batch_occupancy", "queue_depth_p50", "queue_depth_p99",
+                    "max_batch", "max_wait_ms") if k in online}
+            runs.append(run)
             del runs[:-50]               # keep the tail bounded
+            # fold this run's measured per-node times into the
+            # fingerprint-keyed EWMA cost table (core/cost.py) — the
+            # next compile's cost model reads it back
+            fold_costs(record, stats)
+            if self._record is not None:
+                # keep the in-memory record (explain()) in sync with the
+                # persisted EWMA so both render identical actual columns
+                self._record["costs"] = record.get("costs", {})
+                annotate_node_actuals(self._record)
             from ..caching.backends import atomic_write_bytes
             atomic_write_bytes(
                 self._plan_manifest_path,
@@ -479,7 +606,9 @@ class ExecutionPlan:
         else:
             workers = min(32, shards) if shards > 1 else 1
         cache_base = self._cache_counters()
+        compute_base = self._compute_counters()
         stats = self._new_stats()
+        stats.n_queries = len(frame)
         rec = _Recorder()
         if shards <= 1 and workers <= 1:
             outs = run_sequential(self.graph, frame, batch_size, rec)
@@ -489,6 +618,7 @@ class ExecutionPlan:
             stats.n_shards = len(bounds)
             stats.n_workers = workers
         self._fill_exec_stats(stats, rec)
+        self._fill_compute_stats(stats, compute_base)
         self._finalize_stats(stats, cache_base, t0)
         if stats.n_shards > 1 or stats.n_workers > 1:
             busy = sum(b - a for _, _, a, b in rec.records)
@@ -514,11 +644,14 @@ class ExecutionPlan:
         t0 = time.perf_counter()
         frame = ColFrame.coerce(queries)
         cache_base = self._cache_counters()
+        compute_base = self._compute_counters()
         stats = self._new_stats()
+        stats.n_queries = len(frame)
         rec = _Recorder()
         run_warm(self.graph, frame, batch_size, chunk_rows=chunk_rows,
                  rec=rec)
         self._fill_exec_stats(stats, rec)
+        self._fill_compute_stats(stats, compute_base)
         self._finalize_stats(stats, cache_base, t0)
         return stats
 
@@ -569,6 +702,13 @@ class ExecutionPlan:
         stats.cache_hits = hits - cache_base[0]
         stats.cache_misses = misses - cache_base[1]
         stats.wall_time_s = time.perf_counter() - t0
+        if stats.n_shards > 1 and stats.wall_time_s > 0 \
+                and stats.shard_times_s \
+                and stats.speedup_vs_sequential is None:
+            # sum of per-shard busy spans ≈ the sequential wall this run
+            # would have taken; benchmarks overwrite with a measured ratio
+            stats.speedup_vs_sequential = round(
+                sum(stats.shard_times_s) / stats.wall_time_s, 2)
         self.stats = stats
         self._record_run(stats)
 
@@ -580,3 +720,21 @@ class ExecutionPlan:
                 hits += cs.hits
                 misses += cs.misses
         return hits, misses
+
+    def _compute_counters(self) -> Dict[str, Tuple[float, int]]:
+        """Cumulative raw-compute counters per *cached* node label (see
+        ``CacheStats.compute_s``) — snapshot before a run, delta after."""
+        out: Dict[str, Tuple[float, int]] = {}
+        for node in self.graph.nodes:
+            cs = getattr(node.cache, "stats", None)
+            if cs is not None and node.label is not None:
+                out[node.label] = (float(getattr(cs, "compute_s", 0.0)),
+                                   int(getattr(cs, "compute_queries", 0)))
+        return out
+
+    def _fill_compute_stats(self, stats: PlanStats,
+                            base: Dict[str, Tuple[float, int]]) -> None:
+        for label, (s1, q1) in self._compute_counters().items():
+            s0, q0 = base.get(label, (0.0, 0))
+            stats.node_compute_s[label] = s1 - s0
+            stats.node_compute_queries[label] = q1 - q0

@@ -7,8 +7,8 @@ topic set it runs against, so the CLI, the launch driver and
 * ``"bm25"``       — first-stage retrieval only (``bm25 % cutoff``);
 * ``"bm25-mono"``  — the paper's §4.2 two-stage composition
   (``bm25 % cutoff >> text_loader >> mono_scorer``);
-* ``"mono"``       — the bare pointwise scorer (the legacy
-  ``ScoringService`` workload; requests carry their own text);
+* ``"mono"``       — the bare pointwise scorer (requests carry their
+  own text);
 * ``"dense"``      — neural first-stage retrieval over the Pallas
   ``dense_topk`` stage (``dense % cutoff``, cutoff fused into the
   kernel's per-block k by the optimizer);

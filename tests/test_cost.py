@@ -1,0 +1,378 @@
+"""Cost layer (core/cost.py) and the cost-aware optimizer passes.
+
+Covers the :class:`CostModel` EWMA fold (recompute + cache-path
+channels), manifest round-trips, the per-backend round-trip
+microbenchmark, provenance-fingerprint stability under commutative
+operand swaps, the ``cache-place`` skip/promote criteria, ``autotune``
+evidence handling, explain()'s cost columns and the ``max_batch="auto"``
+serving plumb-through — plus the hard invariant of the whole layer:
+cost-aware plans (``optimize="all"``) are per-qid bit-identical to
+cost-blind plans under the sequential scheduler, the sharded executor
+and the streaming (serving) executor, property-tested over small
+pipeline algebras with warm cost manifests.
+"""
+import tempfile
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.caching.backends import measure_round_trip
+from repro.core import ColFrame, ExecutionPlan
+from repro.core.cost import (CostContext, CostModel, EWMA_ALPHA, fold_costs)
+from repro.core.rewrite import run_pass
+from repro.serve.service import PipelineService
+
+from test_rewrite import (QUERIES, assert_bit_identical, boost,
+                          docno_scorer, make_retriever)
+
+#: the cost-blind reference pass list: every structural pass, none of
+#: the cost-aware ones (operand-order / cache-place / autotune)
+STATIC_PASSES = ["normalize", "cse", "pushdown", "cache-prune"]
+
+
+# ---------------------------------------------------------------------------
+# CostModel — EWMA folding + manifest round-trip
+# ---------------------------------------------------------------------------
+
+def test_observe_seeds_then_blends_ewma():
+    m = CostModel()
+    m.observe("fp", 1.0)
+    assert m.measured_cost("fp") == 1.0
+    m.observe("fp", 2.0)
+    want = EWMA_ALPHA * 2.0 + (1.0 - EWMA_ALPHA) * 1.0
+    assert m.measured_cost("fp") == pytest.approx(want)
+    assert m.measured["fp"]["n"] == 2
+    assert m.measured_cost(None) is None
+    assert m.measured_cost("missing") is None
+
+
+def test_observe_cache_keys_off_recompute_entry():
+    m = CostModel()
+    m.observe_cache("fp", 0.5)              # no recompute entry yet: no-op
+    assert m.measured_cache_cost("fp") is None
+    m.observe("fp", 1.0)
+    m.observe_cache("fp", 0.5)              # seeds
+    assert m.measured_cache_cost("fp") == 0.5
+    m.observe_cache("fp", 1.5)              # blends
+    want = EWMA_ALPHA * 1.5 + (1.0 - EWMA_ALPHA) * 0.5
+    assert m.measured_cache_cost("fp") == pytest.approx(want)
+
+
+def test_manifest_roundtrip_preserves_both_channels():
+    m = CostModel()
+    m.observe("fpA", 2e-3)
+    m.observe_cache("fpA", 4e-4)
+    m.observe("fpB", 1e-5)
+    again = CostModel.from_manifest({"costs": m.to_manifest()})
+    assert again.measured_cost("fpA") == pytest.approx(2e-3)
+    assert again.measured_cache_cost("fpA") == pytest.approx(4e-4)
+    assert again.measured_cost("fpB") == pytest.approx(1e-5)
+    assert again.measured_cache_cost("fpB") is None
+
+
+def test_from_manifest_tolerates_garbage():
+    m = CostModel.from_manifest({"costs": {
+        "ok": {"s_per_query": "0.25", "n": 3},
+        "bad1": {"n": 1},                    # missing s_per_query
+        "bad2": "not-a-dict",
+        "bad3": {"s_per_query": "zebra"},
+    }})
+    assert m.measured_cost("ok") == 0.25
+    assert m.measured_cost("bad1") is None
+    assert m.measured_cost("bad2") is None
+    assert m.measured_cost("bad3") is None
+    assert CostModel.from_manifest(None).measured == {}
+    assert CostModel.from_manifest({"costs": "garbled"}).measured == {}
+
+
+def test_fold_costs_uses_compute_channel_for_cached_nodes():
+    record = {"nodes": [{"label": "cached", "fingerprint": "fpC"},
+                        {"label": "bare", "fingerprint": "fpB"}]}
+
+    class Stats:
+        n_queries = 10
+        node_times_s = {"cached": 1.0, "bare": 0.5}
+        node_compute_s = {"cached": 0.2}     # raw miss-path recompute
+        node_compute_queries = {"cached": 4}
+
+    fold_costs(record, Stats())
+    costs = record["costs"]
+    # cached node: recompute EWMA from the compute channel (0.2s / 4q),
+    # NOT the store-dominated wrapper wall time; remainder is cache path
+    assert costs["fpC"]["s_per_query"] == pytest.approx(0.05)
+    assert costs["fpC"]["cache_s_per_query"] == pytest.approx(0.08)
+    # uncached node: wall time over the run's query count
+    assert costs["fpB"]["s_per_query"] == pytest.approx(0.05)
+
+    class AllHits:
+        n_queries = 10
+        node_times_s = {"cached": 0.3}
+        node_compute_s = {"cached": 0.0}
+        node_compute_queries = {"cached": 0}  # recomputed nothing
+
+    fold_costs(record, AllHits())
+    costs = record["costs"]
+    # an all-hit run contributes NO recompute observation (a near-zero
+    # one would talk the planner into believing recompute is free)...
+    assert costs["fpC"]["s_per_query"] == pytest.approx(0.05)
+    assert costs["fpC"]["n"] == 1
+    # ...but its wrapper time is a pure cache-path sample, EWMA-folded
+    want = EWMA_ALPHA * 0.03 + (1.0 - EWMA_ALPHA) * 0.08
+    assert costs["fpC"]["cache_s_per_query"] == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# round-trip microbenchmark
+# ---------------------------------------------------------------------------
+
+def test_measure_round_trip_positive_and_memoized():
+    v = measure_round_trip("sqlite")
+    assert 0.0 < v < 1.0
+    assert measure_round_trip("sqlite") == v   # per-process memo
+
+
+# ---------------------------------------------------------------------------
+# fingerprints — invariant under commutative operand order
+# ---------------------------------------------------------------------------
+
+def test_fingerprints_invariant_under_operand_swap():
+    p1 = ExecutionPlan([make_retriever("A") + make_retriever("B", base=8.0)],
+                       optimize="none")
+    p2 = ExecutionPlan([make_retriever("B", base=8.0) + make_retriever("A")],
+                       optimize="none")
+    fp1 = p1.node_fingerprints()[p1.graph.terminals[0].id]
+    fp2 = p2.node_fingerprints()[p2.graph.terminals[0].id]
+    assert fp1 == fp2
+
+
+# ---------------------------------------------------------------------------
+# cache-place — skip/promote criteria
+# ---------------------------------------------------------------------------
+
+def _graph_with_ctx(model, round_trip_s, backend="sqlite"):
+    plan = ExecutionPlan([make_retriever("A") >> docno_scorer("S")],
+                         optimize=["normalize"])
+    graph = plan.graph
+    fps = plan.node_fingerprints()
+    graph.cost = CostContext(model=model, fps=fps, backend=backend,
+                             round_trip_s=round_trip_s)
+    return graph, fps
+
+
+def _stage_node(graph, name):
+    return next(n for n in graph.nodes
+                if n.kind == "stage" and name in (n.label or ""))
+
+
+def test_cache_place_skips_measured_cheap_nodes():
+    plan = ExecutionPlan([make_retriever("A") >> docno_scorer("S")],
+                         optimize=["normalize"])
+    graph, fps = plan.graph, plan.node_fingerprints()
+    cheap = _stage_node(graph, "A")
+    model = CostModel({fps[cheap.id]: {"s_per_query": 1e-7, "n": 3,
+                                       "updated_at": 0.0}})
+    graph.cost = CostContext(model=model, fps=fps, backend="sqlite",
+                             round_trip_s=1e-5)
+    stats = run_pass(graph, "cache-place")
+    assert cheap.cache_skip is True
+    assert cheap.cost_src == "measured"
+    assert stats.caches_skipped == 1
+    # the scorer had no measured entry: default evidence never loses a
+    # cache, however cheap the prior says it is
+    assert _stage_node(graph, "S").cache_skip is False
+
+
+def test_cache_place_promotes_hot_expensive_nodes():
+    plan = ExecutionPlan([make_retriever("A") >> docno_scorer("S")],
+                         optimize=["normalize"])
+    graph, fps = plan.graph, plan.node_fingerprints()
+    hot = _stage_node(graph, "A")
+    model = CostModel({fps[hot.id]: {"s_per_query": 1e-3, "n": 3,
+                                     "updated_at": 0.0}})
+    graph.cost = CostContext(model=model, fps=fps, backend="sqlite",
+                             round_trip_s=1e-5)
+    stats = run_pass(graph, "cache-place")
+    assert hot.cache_skip is False
+    assert hot.backend_override == "tiered:sqlite"
+    assert stats.caches_promoted == 1
+
+
+def test_cache_place_measured_cache_path_blocks_marginal_skips():
+    plan = ExecutionPlan([make_retriever("A") >> docno_scorer("S")],
+                         optimize=["normalize"])
+    graph, fps = plan.graph, plan.node_fingerprints()
+    node = _stage_node(graph, "A")
+    # est*2 beats the per-entry round trip, but the node's MEASURED
+    # cache path is cheaper still (e.g. a memory-fronted tier): the
+    # skip must not fire — alt is min(round_trip, cache_path)
+    model = CostModel({fps[node.id]: {"s_per_query": 1e-7, "n": 3,
+                                      "updated_at": 0.0,
+                                      "cache_s_per_query": 1e-8}})
+    graph.cost = CostContext(model=model, fps=fps, backend="sqlite",
+                             round_trip_s=1e-5)
+    run_pass(graph, "cache-place")
+    assert node.cache_skip is False
+
+
+def test_cache_place_never_fires_on_cheap_round_trip():
+    # round trip cheaper than recompute: skipping can only lose — the
+    # est*2 < alt guard cannot fire when alt <= est
+    plan = ExecutionPlan([make_retriever("A") >> docno_scorer("S")],
+                         optimize=["normalize"])
+    graph, fps = plan.graph, plan.node_fingerprints()
+    node = _stage_node(graph, "A")
+    model = CostModel({fps[node.id]: {"s_per_query": 1e-3, "n": 3,
+                                      "updated_at": 0.0}})
+    graph.cost = CostContext(model=model, fps=fps, backend="sqlite",
+                             round_trip_s=1e-6)
+    stats = run_pass(graph, "cache-place")
+    assert node.cache_skip is False
+    assert stats.caches_skipped == 0
+
+
+def test_cache_place_noops_without_cost_context():
+    plan = ExecutionPlan([make_retriever("A")], optimize=["normalize"])
+    stats = run_pass(plan.graph, "cache-place")
+    assert stats.caches_skipped == 0
+    assert all(not n.cache_skip for n in plan.graph.nodes)
+
+
+# ---------------------------------------------------------------------------
+# autotune — knob selection from evidence
+# ---------------------------------------------------------------------------
+
+def test_autotune_prefers_measured_shard_history():
+    plan = ExecutionPlan([make_retriever("A")], optimize=["normalize"])
+    graph = plan.graph
+    graph.cost = CostContext(history=[
+        {"n_queries": 4, "wall_time_s": 1.0, "n_shards": 1},
+        {"n_queries": 4, "wall_time_s": 0.2, "n_shards": 3},
+    ])
+    run_pass(graph, "autotune")
+    assert graph.tuning["n_shards"] == {"value": 3,
+                                        "source": "measured-history"}
+
+
+def test_autotune_batch_knobs_from_online_stats():
+    plan = ExecutionPlan([make_retriever("A")], optimize=["normalize"])
+    graph = plan.graph
+    graph.cost = CostContext(history=[
+        {"n_queries": 8, "wall_time_s": 0.1, "n_shards": 1,
+         "online": {"batch_occupancy": 0.95, "max_batch": 16,
+                    "max_wait_ms": 2.0, "queue_depth_p99": 4.0}},
+    ])
+    run_pass(graph, "autotune")
+    assert graph.tuning["max_batch"]["value"] == 32   # saturated: doubled
+    assert graph.tuning["max_wait_ms"]["value"] == 2.0
+
+
+def test_autotune_no_history_no_knobs():
+    plan = ExecutionPlan([make_retriever("A")], optimize=["normalize"])
+    plan.graph.cost = CostContext()
+    run_pass(plan.graph, "autotune")
+    assert plan.graph.tuning.get("max_batch") is None
+    assert plan.tuning() == {k: v.get("value")
+                             for k, v in plan.graph.tuning.items()}
+
+
+# ---------------------------------------------------------------------------
+# explain() — cost columns
+# ---------------------------------------------------------------------------
+
+def test_explain_renders_cost_columns(tmp_path):
+    def build():
+        return [make_retriever("A", 4) >> docno_scorer("S")]
+
+    first = ExecutionPlan(build(), cache_dir=str(tmp_path),
+                          cache_backend="sqlite", optimize="all")
+    assert "cost[est=" in first.explain()     # estimates exist pre-run
+    first.run(QUERIES)
+    again = ExecutionPlan(build(), cache_dir=str(tmp_path),
+                          cache_backend="sqlite", optimize="all")
+    text = again.explain()
+    assert "cost[est=" in text
+    assert "act=" in text                     # actuals from the manifest
+    assert "src=measured" in text
+
+
+# ---------------------------------------------------------------------------
+# serving — max_batch="auto" plumb-through
+# ---------------------------------------------------------------------------
+
+def test_max_batch_auto_resolves_without_evidence(tmp_path):
+    svc = PipelineService(make_retriever("A", 4), cache_dir=str(tmp_path),
+                          cache_backend="sqlite", max_batch="auto",
+                          max_wait_ms="auto")
+    try:
+        assert svc.max_batch == 32            # fallback defaults
+        assert svc.max_wait_ms == 2.0
+        out = svc.search(QUERIES)
+        assert len(out) > 0
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# the invariant: costs never change results
+# ---------------------------------------------------------------------------
+
+def _run_cost_vs_blind(build, run_kw=None):
+    """Warm a cost manifest, then compare fresh cost-aware vs cost-blind
+    compiles of the same pipelines over the same cache dir."""
+    run_kw = run_kw or {}
+    with tempfile.TemporaryDirectory() as td:
+        warm = ExecutionPlan(build(), cache_dir=td, cache_backend="sqlite",
+                             optimize="all")
+        warm.run(QUERIES)
+        warm.run(QUERIES)                     # fold measured costs + history
+        outs_all, stats_all = ExecutionPlan(
+            build(), cache_dir=td, cache_backend="sqlite",
+            optimize="all").run(QUERIES, **run_kw)
+        outs_blind, _ = ExecutionPlan(
+            build(), cache_dir=td, cache_backend="sqlite",
+            optimize=STATIC_PASSES).run(QUERIES, **run_kw)
+        assert_bit_identical(outs_all, outs_blind)
+        return stats_all
+
+
+@settings(max_examples=6, deadline=None)
+@given(shape=st.sampled_from(["sum", "weighted", "cse-twins", "chain"]),
+       k=st.integers(min_value=2, max_value=5),
+       w=st.sampled_from([0.5, 1.0, 2.0, 3.0]),
+       n=st.integers(min_value=3, max_value=6))
+def test_cost_aware_plans_bit_identical(shape, k, w, n):
+    def build():
+        a = make_retriever("A", n)
+        b = make_retriever("B", n, base=8.0)
+        if shape == "sum":
+            return [(a + b) % k >> docno_scorer("S")]
+        if shape == "weighted":
+            return [(w * a + b) % k]
+        if shape == "cse-twins":
+            return [a + b, b + a]
+        return [a >> boost("bst", factor=w) % k]
+
+    _run_cost_vs_blind(build)                              # sequential
+    _run_cost_vs_blind(build, {"n_shards": 2, "max_workers": 2})  # sharded
+
+
+def test_cost_aware_streaming_bit_identical():
+    def build():
+        return (make_retriever("A", 5)
+                + make_retriever("B", 5, base=8.0)) % 4
+
+    with tempfile.TemporaryDirectory() as td:
+        warm = ExecutionPlan([build()], cache_dir=td, cache_backend="sqlite",
+                             optimize="all")
+        warm.run(QUERIES)
+        warm.run(QUERIES)
+        outs = {}
+        for key, opt in (("all", "all"), ("blind", STATIC_PASSES)):
+            svc = PipelineService(build(), cache_dir=td,
+                                  cache_backend="sqlite", optimize=opt,
+                                  max_batch="auto", max_wait_ms=0.0)
+            try:
+                outs[key] = svc.search(QUERIES)
+            finally:
+                svc.close()
+        assert_bit_identical([outs["all"]], [outs["blind"]])

@@ -288,8 +288,8 @@ def test_cache_prune_skips_warm_upstream_chain(tmp_path):
         assert s1.nodes_pruned == 0 and calls["ann"] == 1
     # a fresh plan consults the now-warm manifest and defers the chain
     with ExecutionPlan(pipes, cache_dir=str(tmp_path)) as warm:
-        assert warm.pass_stats[-1].name == "cache-prune"
-        assert warm.pass_stats[-1].nodes_marked_prunable == 1
+        prune = next(p for p in warm.pass_stats if p.name == "cache-prune")
+        assert prune.nodes_marked_prunable == 1
         outs2, s2 = warm.run(QUERIES)
         assert s2.nodes_pruned == 1
         assert calls["ann"] == 1         # annotate never ran warm
@@ -371,15 +371,18 @@ def test_optimize_rejects_unknown_passes():
     with pytest.raises(ValueError, match="unknown optimizer pass"):
         ExecutionPlan([a], optimize=["cse", "bogus"])
     assert set(OPTIMIZER_PASSES) == {"normalize", "cse", "pushdown",
-                                     "cache-prune"}
+                                     "operand-order", "cache-place",
+                                     "cache-prune", "autotune"}
 
 
 def test_plan_stats_carry_optimizer_accounting():
     a = make_retriever("A")
     b = make_retriever("B", base=8.0)
     _, stats = ExecutionPlan([a + b, b + a, a % 3]).run(QUERIES)
-    assert stats.optimizer_passes == ["normalize", "cse", "pushdown"]
-    assert set(stats.pass_times_s) == {"normalize", "cse", "pushdown"}
+    assert stats.optimizer_passes == ["normalize", "cse", "pushdown",
+                                      "operand-order"]
+    assert set(stats.pass_times_s) == {"normalize", "cse", "pushdown",
+                                       "operand-order"}
     assert all(t >= 0 for t in stats.pass_times_s.values())
     assert stats.nodes_eliminated > 0
     assert "eliminated=" in str(stats)
@@ -394,7 +397,7 @@ def test_explain_lists_every_node_and_pass():
     b = make_retriever("B", base=8.0)
     plan = ExecutionPlan([a + b, b + a])
     text = plan.explain()
-    assert "passes=['normalize', 'cse', 'pushdown']" in text
+    assert "passes=['normalize', 'cse', 'pushdown', 'operand-order']" in text
     assert "shared, see above" in text   # the merged combine
     for node in plan.graph.nodes:
         if node.kind != "source":
@@ -576,7 +579,8 @@ def test_cse_reruns_after_pushdown_merges_fused_twins():
     _, stats = plan.run(QUERIES)
     assert stats.nodes_executed == 2
     assert stats.optimizer_passes == ["normalize", "cse", "pushdown",
-                                      "normalize", "cse"]
-    assert set(stats.pass_times_s) == {"normalize", "cse", "pushdown"}
+                                      "normalize", "cse", "operand-order"]
+    assert set(stats.pass_times_s) == {"normalize", "cse", "pushdown",
+                                       "operand-order"}
     run_both([CutRetriever("R", n=8) % 3 >> boost("pb2"),
               CutRetriever("R", n=3) >> boost("pb2")])
