@@ -55,6 +55,50 @@ def backend_hit_rows(n_entries: int = 2000, repeats: int = 7) -> List[Dict]:
     return rows
 
 
+def key_build_rows(n_rows: int = 2000, repeats: int = 7) -> List[Dict]:
+    """Per-row key construction cost (``_keys_of`` hot path): the
+    legacy per-row schemes — zip+pickle (KeyValueCache) and
+    SHA256-of-pickle (RetrieverCache) — vs the vectorized four-lane
+    FNV digest fresh directories negotiate (caching/codecs.py), on
+    string keys (worst case for the digest: per-byte folds) and on
+    numeric keys (where the byte matrix comes straight from the column
+    buffers and the digest wins outright)."""
+    import hashlib
+
+    from repro.caching import vector_keys
+    from repro.caching.base import pickle_key
+    qids = np.empty(n_rows, dtype=object)
+    qids[:] = [f"q{i}" for i in range(n_rows)]
+    queries = np.empty(n_rows, dtype=object)
+    queries[:] = [f"query text {i % 97}" for i in range(n_rows)]
+    ids = np.arange(n_rows, dtype=np.int64)
+    scores = np.linspace(0.0, 1.0, n_rows)
+
+    def legacy_pickle():
+        cols = [qids.tolist(), queries.tolist()]
+        return [pickle_key(t) for t in zip(*cols)]
+
+    def legacy_sha256():
+        cols = [qids.tolist(), queries.tolist()]
+        return [hashlib.sha256(pickle_key(t)).digest() for t in zip(*cols)]
+
+    def legacy_pickle_num():
+        cols = [ids.tolist(), scores.tolist()]
+        return [pickle_key(t) for t in zip(*cols)]
+
+    rows = []
+    for name, fn in (
+            ("key_build_str_pickle", legacy_pickle),
+            ("key_build_str_sha256_pickle", legacy_sha256),
+            ("key_build_str_vector", lambda: vector_keys([qids, queries])),
+            ("key_build_num_pickle", legacy_pickle_num),
+            ("key_build_num_vector", lambda: vector_keys([ids, scores]))):
+        fn()                               # warm (allocator, caches)
+        best = min(_timed(fn)[1] for _ in range(repeats))
+        rows.append({"name": name, "us_per_row": best / n_rows * 1e6})
+    return rows
+
+
 def run(n_rows: int = 2000, scale: float = 0.05) -> List[Dict]:
     corpus = msmarco_like(1, scale=scale)
     index = InvertedIndex.build(corpus.get_corpus_iter())
@@ -110,6 +154,7 @@ def run(n_rows: int = 2000, scale: float = 0.05) -> List[Dict]:
                      "us_per_row": t_r / len(docs) * 1e6})
 
     rows.extend(backend_hit_rows(n_entries=n_rows))
+    rows.extend(key_build_rows(n_rows=n_rows))
     return rows
 
 

@@ -466,6 +466,124 @@ def bench_optimizer_cost(cache_dir: str, quick: bool = False) -> Dict:
             "result_checksum": static["result_checksum"]}
 
 
+# -- suite 6: asynchronous cache data plane (--suite dataplane) --------------
+
+#: simulated remote-tier round trip per ``get_many`` call.  Local page-
+#: cache reads finish in microseconds — prefetch has nothing to hide
+#: there — so the suite models the regime the data plane exists for (a
+#: shared store behind real storage/network latency) the same way the
+#: concurrent suite models model latency: a GIL-releasing sleep.
+REMOTE_SIM_RT_S = 0.010
+
+
+def _register_remote_sim():
+    """Register the ``remote-sim`` backend: a pickle store whose reads
+    pay a fixed round trip.  Benchmark-only — registered here, never in
+    ``repro.caching``."""
+    from repro.caching.backends import BACKENDS, PickleDirBackend
+
+    class RemoteSimBackend(PickleDirBackend):
+        name = "remote-sim"
+
+        def get_many(self, keys):
+            time.sleep(REMOTE_SIM_RT_S)
+            return super().get_many(keys)
+
+    BACKENDS.setdefault("remote-sim", RemoteSimBackend)
+
+
+def _dataplane_workload(quick: bool):
+    """Four independent cached retrievers — four query-keyed prefetches
+    the executor can issue concurrently at submit time."""
+    n_queries = 24 if quick else 48
+    topics = ColFrame({"qid": [f"q{i}" for i in range(n_queries)],
+                       "query": [f"terms {i}" for i in range(n_queries)]})
+
+    def make_retr(name, n_docs=12):
+        def fn(inp):
+            rows = []
+            for qid, query in zip(inp["qid"].tolist(),
+                                  inp["query"].tolist()):
+                for i in range(n_docs):
+                    rows.append({"qid": qid, "query": query,
+                                 "docno": f"{name}_d{i}",
+                                 "score": float(n_docs - i)})
+            return add_ranks(ColFrame.from_dicts(rows))
+        return GenericTransformer(fn, name, one_to_many=True,
+                                  key_columns=("qid", "query"))
+
+    systems = [make_retr(f"dp_retr{k}") % 8 for k in range(4)]
+    return topics, systems
+
+
+def _dataplane_leg(topics, systems, cache_dir: str, *, prefetch: bool,
+                   repeats: int = 3) -> Dict:
+    """Best-of-N warm run over an already-populated dir.  The static
+    pass list keeps the cost-aware optimizer from re-planning the
+    caches between legs (this suite measures the data plane, not
+    cache placement)."""
+    best, stats, outs = float("inf"), None, None
+    for _ in range(repeats):
+        with ExecutionPlan(systems, cache_dir=cache_dir,
+                           cache_backend="remote-sim",
+                           optimize=STATIC_PASSES,
+                           prefetch=prefetch) as plan:
+            t0 = time.perf_counter()
+            outs, stats = plan.run(topics)
+            best = min(best, time.perf_counter() - t0)
+    return {"wall_s": best,
+            "cache_hits": stats.cache_hits,
+            "cache_misses": stats.cache_misses,
+            "cache_prefetched": stats.cache_prefetched,
+            "result_checksum": frame_checksum(outs)}
+
+
+def bench_dataplane(cache_dir: str, quick: bool = False) -> Dict:
+    """Query-keyed prefetch on vs off over one warm cache directory.
+
+    One invocation: a cold run populates the store (write-behind on,
+    the plan's default), then warm runs with prefetch off (synchronous
+    inline ``get_many``) and on (submit-time fetches on the I/O pool)
+    are timed best-of-3.  Asserts bit-identical result checksums across
+    every leg, honest attribution (prefetched == 0 when off, > 0 when
+    on, never exceeding hits), and the wall-clock floor the CI
+    dataplane-smoke job gates on: with four caches behind a
+    ~10 ms-round-trip store, the synchronous warm run pays the round
+    trips serially while the prefetching run overlaps them, so ≥1.3×
+    is a conservative bar (~2× expected)."""
+    _register_remote_sim()
+    topics, systems = _dataplane_workload(quick)
+    n_q = len(topics)
+    cold = _dataplane_leg(topics, systems, cache_dir,
+                          prefetch=True, repeats=1)
+    assert cold["cache_misses"] == n_q * len(systems), \
+        f"cold leg expected all misses: {cold}"
+    off = _dataplane_leg(topics, systems, cache_dir, prefetch=False)
+    on = _dataplane_leg(topics, systems, cache_dir, prefetch=True)
+
+    assert off["result_checksum"] == cold["result_checksum"], \
+        "warm synchronous run changed result bits"
+    assert on["result_checksum"] == cold["result_checksum"], \
+        "prefetch changed result bits"
+    assert off["cache_misses"] == 0 and on["cache_misses"] == 0, \
+        "warm legs missed — write-behind flush lost entries"
+    assert off["cache_prefetched"] == 0, \
+        "prefetch-off leg reported prefetched hits"
+    assert 0 < on["cache_prefetched"] <= on["cache_hits"], \
+        f"dishonest prefetch attribution: {on}"
+    speedup = off["wall_s"] / max(on["wall_s"], 1e-9)
+    return {"name": "dataplane_prefetch_warm",
+            "round_trip_s": REMOTE_SIM_RT_S,
+            "n_queries": n_q,
+            "n_caches": len(systems),
+            "t_warm_sync_s": round(off["wall_s"], 4),
+            "t_warm_prefetch_s": round(on["wall_s"], 4),
+            "speedup": round(speedup, 2),
+            "warm_hits": on["cache_hits"],
+            "prefetched": on["cache_prefetched"],
+            "result_checksum": on["result_checksum"]}
+
+
 def run(quick: bool = False, cache_dir: Optional[str] = None,
         optimize: str = "all") -> List[Dict]:
     if quick:
@@ -492,11 +610,15 @@ def main(argv: Optional[List[str]] = None):
     ap.add_argument("--cache-dir", metavar="DIR", default=None,
                     help="run the concurrent suite against a persistent "
                          "planner cache dir (cold/warm cache-compat CI)")
-    ap.add_argument("--suite", choices=["all", "bench_optimizer_cost"],
+    ap.add_argument("--suite",
+                    choices=["all", "bench_optimizer_cost", "dataplane"],
                     default="all",
                     help="'bench_optimizer_cost' runs only the cost-aware "
                          "optimizer suite (requires --cache-dir; run it "
-                         "twice over one dir: cold priors, then measured)")
+                         "twice over one dir: cold priors, then measured); "
+                         "'dataplane' runs the async-data-plane suite "
+                         "(prefetch on/off over one warm dir, requires "
+                         "--cache-dir)")
     args = ap.parse_args(argv)
     optimize = "none" if args.no_optimize else "all"
     if args.suite == "bench_optimizer_cost":
@@ -508,6 +630,13 @@ def main(argv: Optional[List[str]] = None):
             json.dump({"suite": "bench_optimizer_cost", "rows": rows},
                       f, indent=2)
         print("[wrote BENCH_optimizer.json]")
+    elif args.suite == "dataplane":
+        if args.cache_dir is None:
+            ap.error("--suite dataplane requires --cache-dir")
+        rows = [bench_dataplane(args.cache_dir, quick=args.quick)]
+        with open("BENCH_dataplane.json", "w") as f:
+            json.dump({"suite": "dataplane", "rows": rows}, f, indent=2)
+        print("[wrote BENCH_dataplane.json]")
     else:
         rows = run(quick=args.quick, cache_dir=args.cache_dir,
                    optimize=optimize)

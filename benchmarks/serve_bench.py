@@ -67,10 +67,10 @@ from repro.serve import (PipelineService, ServeConfig, build_scenario,
 
 def run_epoch(name: str, scenario, cache_dir: str, *, requests: int,
               clients: int, max_batch: int, max_wait_ms: float,
-              workers: int, seed: int) -> Dict:
+              workers: int, seed: int, prefetch: bool = True) -> Dict:
     svc = PipelineService(scenario.pipeline, cache_dir=cache_dir,
                           max_batch=max_batch, max_wait_ms=max_wait_ms,
-                          max_workers=workers)
+                          max_workers=workers, prefetch=prefetch)
     try:
         loop = run_closed_loop(svc, scenario, n_requests=requests,
                                n_clients=clients, seed=seed)
@@ -78,7 +78,7 @@ def run_epoch(name: str, scenario, cache_dir: str, *, requests: int,
         online = svc.online_stats.as_dict(svc.max_batch)
     finally:
         svc.close()
-    row = {"name": name, **loop,
+    row = {"name": name, "prefetch": prefetch, **loop,
            "p50_ms": round(summary["p50_ms"], 4),
            "p99_ms": round(summary["p99_ms"], 4),
            "hit_rate": round(summary["hit_rate"], 4),
@@ -165,6 +165,13 @@ def main(argv: Optional[List[str]] = None):
     ap.add_argument("--cache-dir", default=None,
                     help="cache root (default: a temp dir per run)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="ablation: serve every epoch with the async "
+                         "data plane's query-keyed prefetch disabled "
+                         "(PipelineService(prefetch=False)); without "
+                         "this flag a serve_warm_noprefetch epoch is "
+                         "added so the artifact carries the paired "
+                         "comparison either way")
     ap.add_argument("--fleet", action="store_true",
                     help="add the multi-process fleet scaling epochs")
     ap.add_argument("--fleet-workers", type=int, default=4,
@@ -184,16 +191,32 @@ def main(argv: Optional[List[str]] = None):
         tmp = tempfile.TemporaryDirectory(prefix="serve-bench-")
         cache_dir = tmp.name
 
+    prefetch = not args.no_prefetch
     rows = []
     for epoch in ("serve_cold", "serve_warm"):
         rows.append(run_epoch(epoch, scenario, cache_dir,
                               requests=requests, clients=args.clients,
                               max_batch=args.max_batch,
                               max_wait_ms=args.max_wait_ms,
-                              workers=args.workers, seed=args.seed))
+                              workers=args.workers, seed=args.seed,
+                              prefetch=prefetch))
     cold, warm = rows
     print(f"warm/cold p50: {warm['p50_ms']}/{cold['p50_ms']}ms "
           f"({cold['p50_ms'] / max(warm['p50_ms'], 1e-9):.1f}x)")
+
+    if prefetch:
+        # ablation epoch: same warm directory, prefetch off — the JSON
+        # artifact then carries the paired data-plane comparison
+        noprefetch = run_epoch("serve_warm_noprefetch", scenario, cache_dir,
+                               requests=requests, clients=args.clients,
+                               max_batch=args.max_batch,
+                               max_wait_ms=args.max_wait_ms,
+                               workers=args.workers, seed=args.seed,
+                               prefetch=False)
+        rows.append(noprefetch)
+        print(f"warm p50 prefetch on/off: {warm['p50_ms']}/"
+              f"{noprefetch['p50_ms']}ms (misses="
+              f"{noprefetch['cache_misses']})")
 
     # warmed-start epoch: precompute a FRESH directory offline, then
     # measure the first-ever service over it (same process, so the JIT

@@ -13,6 +13,10 @@ from .provenance import (CacheManifest, ManifestError, ProvenanceError,
 from .economics import (AccessStats, CacheBudget, enforce_dir,
                         evict_entries)
 from .base import CacheMissError, CacheStats, CacheTransformer
+from .codecs import (KV_CODEC, RETRIEVER_CODEC, KNOWN_CODECS, scalar_key,
+                     vector_keys)
+from .dataplane import (StagingMap, WriteBehindWriter, io_pool,
+                        prefetch_default, write_behind_default)
 from .warming import warm_scenario
 from .kv import KeyValueCache
 from .scorer import ScorerCache
@@ -43,6 +47,10 @@ __all__ = [
     "AccessStats", "CacheBudget", "enforce_dir", "evict_entries",
     "warm_scenario",
     "CacheMissError", "CacheStats", "CacheTransformer",
+    "KV_CODEC", "RETRIEVER_CODEC", "KNOWN_CODECS", "scalar_key",
+    "vector_keys",
+    "StagingMap", "WriteBehindWriter", "io_pool", "prefetch_default",
+    "write_behind_default",
     "KeyValueCache", "ScorerCache", "DenseScorerCache", "RetrieverCache",
     "IndexerCache", "Lazy", "Artifact", "to_hub", "from_hub", "hub_dir",
     "BucketedRunner", "bucket_size", "pad_batch",

@@ -198,6 +198,11 @@ class CacheBackend:
     #: (``mmap:<disk>`` snapshots require it; pickle stores hashed keys
     #: only and opts out)
     enumerable: bool = True
+    #: whether moving this backend's reads onto the I/O pool can pay
+    #: (see ``caching/dataplane.py``): disk stores say yes, while a
+    #: memory-speed read path (the in-process LRU, the mmap snapshot
+    #: tier) opts out — staging a dict lookup only adds bookkeeping
+    prefetchable: bool = True
 
     def __init__(self, path: Optional[str]):
         self.path = path
@@ -292,6 +297,7 @@ class MemoryLRUBackend(CacheBackend):
 
     name = "memory"
     persistent = False
+    prefetchable = False                 # reads are already a dict lookup
 
     def __init__(self, path: Optional[str] = None, *,
                  capacity: int = 1_000_000):

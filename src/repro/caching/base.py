@@ -47,6 +47,13 @@ class CacheStats:
     misses: int = 0
     inserts: int = 0
     verified: int = 0
+    #: how many of ``hits`` were served from the prefetch staging map
+    #: rather than an inline backend read.  Counted *here*, by the node
+    #: that consumed the entry — the I/O pool never touches stats — so
+    #: hit rates stay honest under overlap: ``hits``/``misses`` are
+    #: identical with prefetch on or off, and ``prefetched`` only says
+    #: how many round trips left the critical path.
+    prefetched: int = 0
     #: wall seconds spent inside the *wrapped transformer* on the miss
     #: path, and the input queries those computes covered.  This is the
     #: raw recompute cost — cache lookups/inserts excluded — which is
@@ -61,7 +68,7 @@ class CacheStats:
                                   repr=False, compare=False)
 
     def add(self, *, hits: int = 0, misses: int = 0, inserts: int = 0,
-            verified: int = 0, compute_s: float = 0.0,
+            verified: int = 0, prefetched: int = 0, compute_s: float = 0.0,
             compute_queries: int = 0) -> None:
         """Atomic increment — cache families are shared by the
         concurrent plan executor, so counter updates must not race."""
@@ -70,6 +77,7 @@ class CacheStats:
             self.misses += misses
             self.inserts += inserts
             self.verified += verified
+            self.prefetched += prefetched
             self.compute_s += compute_s
             self.compute_queries += compute_queries
 
@@ -143,11 +151,22 @@ class CacheTransformer(Transformer):
                  *, verify_fraction: float = 0.0,
                  fingerprint: Optional[str] = None,
                  on_stale: str = "error",
-                 budget: Any = None):
+                 budget: Any = None,
+                 async_writes: Optional[bool] = None):
         if on_stale not in ON_STALE_POLICIES:
             raise ValueError(f"on_stale must be one of {ON_STALE_POLICIES}, "
                              f"got {on_stale!r}")
         self._transformer_raw = transformer
+        # write-behind is *opt-in* (the plan compiler passes True for
+        # planner-inserted caches): deferring puts keeps compute-once
+        # exact within a process but relaxes it across processes
+        # sharing a directory, and a bare family must preserve the
+        # strict cross-process contract its docstring promises
+        self._async_writes = bool(async_writes) if async_writes is not None \
+            else False
+        self._staging = None                  # StagingMap, see dataplane.py
+        self._writer = None                   # WriteBehindWriter or None
+        self.codec: Optional[str] = None      # negotiated via the manifest
         self._budget = CacheBudget.coerce(budget)
         #: in-memory {backend key: [last_used_ts, hits]} deltas, merged
         #: into the directory's access.json sidecar by _flush_access
@@ -176,11 +195,19 @@ class CacheTransformer(Transformer):
 
     def _open_manifest(self, *, backend: Optional[str],
                        key_columns: Sequence[str] = (),
-                       value_columns: Sequence[str] = ()) -> None:
+                       value_columns: Sequence[str] = (),
+                       codec: Optional[str] = None) -> None:
         """Validate (or create) this directory's manifest.
 
         Families call this *before* opening their store, so that the
         ``recompute`` policy can wipe a stale directory first.
+
+        ``codec`` is the serialization scheme this family would use for
+        a *fresh* directory (see ``caching/codecs.py``); an existing
+        directory keeps whatever its manifest records — ``None`` means
+        the legacy pickle scheme, so pre-codec dirs stay warm — and a
+        manifest naming a codec this build does not know trips the
+        normal staleness machinery (the entries are unreadable to us).
         """
         try:
             existing = CacheManifest.load(self.path)
@@ -191,7 +218,8 @@ class CacheTransformer(Transformer):
             existing = None
         if existing is not None:
             reasons = self._stale_reasons(existing, backend,
-                                          key_columns, value_columns)
+                                          key_columns, value_columns,
+                                          codec)
             if reasons:
                 if self.on_stale == "error":
                     raise StaleCacheError(
@@ -211,7 +239,8 @@ class CacheTransformer(Transformer):
                 fingerprint=self.provenance_fingerprint,
                 transformer=self._transformer_label(),
                 key_columns=list(key_columns),
-                value_columns=list(value_columns))
+                value_columns=list(value_columns),
+                codec=codec)
             self._manifest.save(self.path)
         else:
             # adopt (incl. pre-provenance dirs); record our fingerprint
@@ -228,10 +257,13 @@ class CacheTransformer(Transformer):
             if self._budget.record_in(self._manifest) \
                     and not self._temporary:
                 self._manifest.save(self.path)
+        #: the scheme every subsequent read/write of this store uses
+        self.codec = getattr(self._manifest, "codec", None)
 
     def _stale_reasons(self, m: CacheManifest, backend: Optional[str],
                        key_columns: Sequence[str],
-                       value_columns: Sequence[str]) -> list:
+                       value_columns: Sequence[str],
+                       codec: Optional[str] = None) -> list:
         reasons = []
         ours = self.provenance_fingerprint
         if ours is not None and m.fingerprint is not None \
@@ -256,6 +288,14 @@ class CacheTransformer(Transformer):
                 and list(value_columns) != list(m.value_columns):
             reasons.append(f"recorded value columns {m.value_columns} != "
                            f"requested {list(value_columns)}")
+        # a recorded codec we don't implement means the stored bytes are
+        # unreadable to this build; a recorded codec of None is always
+        # fine (the legacy pickle scheme every build speaks)
+        recorded_codec = getattr(m, "codec", None)
+        if recorded_codec is not None and recorded_codec != codec:
+            reasons.append(f"recorded codec {recorded_codec!r} is not "
+                           f"supported here (this build speaks "
+                           f"{codec!r} and the legacy pickle scheme)")
         return reasons
 
     def _transformer_label(self) -> Optional[str]:
@@ -280,9 +320,12 @@ class CacheTransformer(Transformer):
                     pass
 
     def _update_manifest(self) -> None:
-        """Refresh last-use timestamp and entry count on disk."""
+        """Refresh last-use timestamp and entry count on disk.  A
+        manifest refresh is a write-behind flush point: the recorded
+        entry count must describe the *durable* store."""
         if self._manifest is None or self.readonly or self._temporary:
             return
+        self._drain_writes()
         try:
             n = len(self)                    # families define __len__
         except Exception:
@@ -345,6 +388,7 @@ class CacheTransformer(Transformer):
         if backend is None:
             raise NotImplementedError(
                 f"{type(self).__name__} does not support budget eviction")
+        self._drain_writes()                 # evict over the durable store
         self._flush_access()
         created = self._manifest.created_at \
             if self._manifest is not None else 0.0
@@ -382,6 +426,187 @@ class CacheTransformer(Transformer):
         hits, misses = self.pop_call_counts()
         return out, hits, misses
 
+    # -- asynchronous data plane (see caching/dataplane.py) ------------------
+    # Families that own a backend call ``_init_dataplane()`` after
+    # opening it; everything here degrades to the synchronous path when
+    # they don't (``_staging``/``_writer`` stay None).
+
+    def _init_dataplane(self) -> None:
+        from .dataplane import StagingMap, WriteBehindWriter, \
+            write_behind_default
+        backend = getattr(self, "_backend", None)
+        if backend is None:                   # pragma: no cover - guard
+            return
+        self._staging = StagingMap()
+        if self._async_writes and write_behind_default() \
+                and not self.readonly:
+            # the writer drains under the backend's re-entrant lock
+            # (taken before its own flush lock) so background drains,
+            # lock-holding barriers and flush points order consistently
+            self._writer = WriteBehindWriter(backend.put_many,
+                                             lock=backend.lock)
+
+    @property
+    def prefetchable(self) -> bool:
+        """Whether prefetching this cache's backend can pay: the
+        backend must exist and not already be a memory-speed read path
+        (backends declare via ``prefetchable``; the in-memory LRU and
+        the mmap snapshot tier opt out — staging a dict/page-cache read
+        only adds bookkeeping)."""
+        backend = getattr(self, "_backend", None)
+        return backend is not None and self._staging is not None \
+            and bool(getattr(backend, "prefetchable", True))
+
+    def prefetch_columns(self) -> Optional[Tuple[str, ...]]:
+        """The input columns that fully determine this cache's keys, or
+        ``None`` when the family does not support key prefetch.
+        Executors use this to decide *when* a node's keys are known:
+        at submit time if the source frame carries the columns, else
+        the moment the upstream node completes."""
+        return None
+
+    def prefetch_keys(self, frame: Any) -> List[bytes]:
+        """Backend keys for ``frame`` — overridden by families that
+        support prefetch."""
+        raise NotImplementedError
+
+    def prefetch_async(self, frame: Any):
+        """Issue ``get_many`` for ``frame``'s keys on the I/O pool;
+        results land in the staging map for the next ``transform`` /
+        ``serve_from_store`` over the same keys.  Returns the pool
+        future (``None`` when there is nothing to fetch).  No stats,
+        no access notes — accounting happens at consumption.
+        """
+        if not self.prefetchable or self._closed:
+            return None
+        try:
+            keys = self.prefetch_keys(frame)
+        except (NotImplementedError, KeyError):
+            return None
+        todo = self._staging.covered(keys)
+        if not todo:
+            return None
+        backend = self._backend
+        staging = self._staging
+        writer = self._writer
+
+        def fetch():
+            want = todo
+            if writer is not None:
+                pending = writer.overlay_many(want)
+                if pending:
+                    staging.deposit(pending.items())
+                    want = [k for k in want if k not in pending]
+                    if not want:
+                        return
+            staging.deposit(zip(want, backend.get_many(want)))
+
+        from .dataplane import io_pool
+        fut = io_pool().submit(fetch)
+        self._staging.track(fut, todo)
+        return fut
+
+    def discard_staging(self) -> None:
+        """Drop unconsumed staged entries (run teardown)."""
+        if self._staging is not None:
+            self._staging.discard()
+
+    def _lookup_many(self, keys: Sequence[bytes]
+                     ) -> Tuple[List[Optional[bytes]], int]:
+        """Read ``keys`` through the data plane: the write-behind
+        overlay first (pending entries must be visible), then the
+        staging map, then the backend for whatever remains.  Returns
+        ``(blobs, n_prefetched)`` — the second number is how many
+        non-None blobs came out of the staging map, for
+        ``CacheStats.prefetched`` attribution by the caller."""
+        n = len(keys)
+        out: List[Optional[bytes]] = [None] * n
+        remaining = list(range(n))
+        if self._writer is not None:
+            pending = self._writer.overlay_many(keys)
+            if pending:
+                remaining = []
+                for i, k in enumerate(keys):
+                    v = pending.get(k)
+                    if v is not None:
+                        out[i] = v
+                    else:
+                        remaining.append(i)
+        prefetched = 0
+        if remaining and self._staging is not None:
+            # pop_many waits on any in-flight prefetch covering these
+            # keys before looking — the consumer must not race past a
+            # fetch that is about to land and hit the backend twice
+            staged = self._staging.pop_many([keys[i] for i in remaining])
+            if staged:
+                left = []
+                for i in remaining:
+                    k = keys[i]
+                    if k in staged:
+                        out[i] = staged[k]   # may be a staged miss (None)
+                        if staged[k] is not None:
+                            prefetched += 1
+                    else:
+                        left.append(i)
+                remaining = left
+        if remaining:
+            fetched = self._backend.get_many([keys[i] for i in remaining])
+            for i, v in zip(remaining, fetched):
+                out[i] = v
+        return out, prefetched
+
+    def _recheck_many(self, keys: Sequence[bytes]
+                      ) -> List[Optional[bytes]]:
+        """The locked miss-path recheck: the write-behind overlay (a
+        racing thread's compute may still be pending) then the backend.
+        The staging map is deliberately *not* consulted — its deposits
+        predate the lock and were already offered to ``_lookup_many``."""
+        if self._writer is None:
+            return self._backend.get_many(keys)
+        pending = self._writer.overlay_many(keys)
+        out: List[Optional[bytes]] = [pending.get(k) for k in keys]
+        remaining = [i for i, v in enumerate(out) if v is None]
+        if remaining:
+            fetched = self._backend.get_many([keys[i] for i in remaining])
+            for i, v in zip(remaining, fetched):
+                out[i] = v
+        return out
+
+    def _store_many(self, items: Sequence[Tuple[bytes, bytes]]) -> None:
+        """Miss-path put: enqueue on the write-behind writer when one
+        is live, else write through synchronously.  Called inside the
+        compute-once critical section either way — the *enqueue* under
+        the lock is the sentinel that keeps in-process compute-once
+        exact (the recheck sees the overlay), while durability is
+        deferred to :meth:`_write_barrier` / the flush points."""
+        if self._writer is not None:
+            self._writer.put(list(items))
+        else:
+            self._backend.put_many(items)
+
+    def _write_barrier(self) -> None:
+        """Durability barrier before the backend's cross-process lock is
+        released (see ``WriteBehindWriter.barrier``): other processes'
+        locked rechecks cannot see the in-memory overlay, so the puts
+        must be on disk by the time they can acquire the lock — this is
+        what keeps compute-exactly-once exact across processes under
+        write-behind."""
+        if self._writer is not None:
+            self._writer.barrier()
+
+    def _drain_writes(self) -> None:
+        """Synchronously flush pending write-behind state (flush points:
+        ``close()``, ``drain()``, manifest refresh, eviction, store
+        enumeration)."""
+        if self._writer is not None:
+            self._writer.flush()
+
+    def drain(self) -> None:
+        """Make every accepted write durable and the sidecars current —
+        the executor/service quiescence hook (graceful fleet drain)."""
+        self._drain_writes()
+        self._flush_access()
+
     # -- wrapped transformer -------------------------------------------------
     @property
     def transformer(self) -> Optional[Transformer]:
@@ -400,6 +625,11 @@ class CacheTransformer(Transformer):
     def close(self) -> None:
         if self._closed:
             return
+        if self._writer is not None:
+            try:
+                self._writer.close()     # final write-behind flush
+            except Exception:
+                pass                     # entries recompute; never corrupt
         if not self.budget.empty() and not self.readonly:
             try:
                 self.evict()             # automatic budget enforcement
@@ -410,6 +640,7 @@ class CacheTransformer(Transformer):
             self._update_manifest()
         except Exception:
             pass                         # manifest refresh is best-effort
+        self.discard_staging()
         self._close_backend()
         if self._temporary:
             shutil.rmtree(self.path, ignore_errors=True)

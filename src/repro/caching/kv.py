@@ -22,6 +22,8 @@ from ..core.frame import ColFrame
 from .backends import CacheBackend, open_backend, resolve_backend_name
 from .base import (CacheTransformer, n_frame_queries, pickle_key,
                    pickle_value, unpickle_value)
+from .codecs import (KV_CODEC, decode_kv_batch, decode_kv_value,
+                     encode_kv_value, vector_keys)
 
 __all__ = ["KeyValueCache"]
 
@@ -38,21 +40,25 @@ class KeyValueCache(CacheTransformer):
                  backend: Any = None,
                  fingerprint: Optional[str] = None,
                  on_stale: str = "error",
-                 budget: Any = None):
+                 budget: Any = None,
+                 async_writes: Optional[bool] = None):
         super().__init__(path, transformer, verify_fraction=verify_fraction,
                          fingerprint=fingerprint, on_stale=on_stale,
-                         budget=budget)
+                         budget=budget, async_writes=async_writes)
         self.key_cols: Tuple[str, ...] = \
             (key,) if isinstance(key, str) else tuple(key)
         self.value_cols: Tuple[str, ...] = \
             (value,) if isinstance(value, str) else tuple(value)
         # manifest check precedes the store open so a stale directory
-        # can be wiped under on_stale="recompute"
+        # can be wiped under on_stale="recompute"; fresh dirs negotiate
+        # the vectorized codec, pre-codec dirs stay on pickled keys
         self._open_manifest(
             backend=resolve_backend_name(backend, self.default_backend),
-            key_columns=self.key_cols, value_columns=self.value_cols)
+            key_columns=self.key_cols, value_columns=self.value_cols,
+            codec=KV_CODEC)
         self._backend: CacheBackend = open_backend(
             backend, self.path, default=self.default_backend)
+        self._init_dataplane()
 
     # -- backend -------------------------------------------------------------
     @property
@@ -63,12 +69,33 @@ class KeyValueCache(CacheTransformer):
         self._backend.close()
 
     def __len__(self) -> int:
+        self._drain_writes()             # enumeration is a flush point
         return len(self._backend)
 
     # -- transform -----------------------------------------------------------
     def _keys_of(self, frame: ColFrame) -> List[bytes]:
+        if len(frame) == 0:
+            return []
+        if self.codec == KV_CODEC:
+            return vector_keys([frame[c] for c in self.key_cols])
         cols = [frame[c].tolist() for c in self.key_cols]
-        return [pickle_key(t) for t in zip(*cols)] if len(frame) else []
+        return [pickle_key(t) for t in zip(*cols)]
+
+    # -- codec dispatch (negotiated per directory, see _open_manifest) -------
+    def _encode_value(self, vals: Tuple) -> bytes:
+        return encode_kv_value(vals) if self.codec == KV_CODEC \
+            else pickle_value(vals)
+
+    def _decode_value(self, blob: bytes) -> Tuple:
+        return decode_kv_value(blob) if self.codec == KV_CODEC \
+            else unpickle_value(blob)
+
+    # -- prefetch (keys derive from the input frame alone) -------------------
+    def prefetch_columns(self) -> Optional[Tuple[str, ...]]:
+        return self.key_cols
+
+    def prefetch_keys(self, frame: ColFrame) -> List[bytes]:
+        return self._keys_of(frame)
 
     def _transform_single(self, inp: ColFrame,
                           key: bytes) -> Optional[ColFrame]:
@@ -77,11 +104,12 @@ class KeyValueCache(CacheTransformer):
         lookup plumbing and full-frame value assembly on a hit.
         Returns ``None`` on a miss (the generic path then handles the
         compute-once protocol)."""
-        blob = self._backend.get(key)
+        blobs, prefetched = self._lookup_many([key])
+        blob = blobs[0]
         if blob is None:
             return None
-        vals = unpickle_value(blob)
-        self.stats.add(hits=1)
+        vals = self._decode_value(blob)
+        self.stats.add(hits=1, prefetched=prefetched)
         self._note_call(1, 0)
         self._note_access([key])
         out = inp
@@ -105,16 +133,33 @@ class KeyValueCache(CacheTransformer):
                 return hit
             found: List[Optional[bytes]] = [None]   # already probed —
             # the compute-once recheck under the lock re-queries anyway
+            prefetched = 0
         else:
-            found = self._backend.get_many(keys)
+            found, prefetched = self._lookup_many(keys)
         miss_idx = [i for i, v in enumerate(found) if v is None]
 
+        if not miss_idx and self.codec == KV_CODEC \
+                and self.verify_fraction == 0:
+            cols = decode_kv_batch(found, len(self.value_cols))
+            if cols is not None:
+                # warm all-float batch: one frombuffer/reshape instead
+                # of N pickle.loads + per-row column assembly
+                self.stats.add(hits=len(keys), prefetched=prefetched)
+                self._note_call(len(keys), 0)
+                self._note_access(keys)
+                out_frame = inp
+                for ci, c in enumerate(self.value_cols):
+                    out_frame = out_frame.assign(
+                        **{c: np.ascontiguousarray(cols[:, ci])})
+                return out_frame
+
         values: List[Optional[Tuple]] = \
-            [unpickle_value(v) if v is not None else None for v in found]
+            [self._decode_value(v) if v is not None else None for v in found]
 
         if miss_idx:
             miss_idx = self._fill_misses(inp, keys, values, miss_idx)
-        self.stats.add(hits=len(keys) - len(miss_idx), misses=len(miss_idx))
+        self.stats.add(hits=len(keys) - len(miss_idx), misses=len(miss_idx),
+                       prefetched=prefetched)
         self._note_call(len(keys) - len(miss_idx), len(miss_idx))
         self._note_access(keys)          # hits + fresh inserts alike
 
@@ -150,13 +195,13 @@ class KeyValueCache(CacheTransformer):
         concurrent).  Run cold warm-ups uncached, or accept first-run
         serialization for never-recompute semantics."""
         with self._backend.lock():
-            recheck = self._backend.get_many([keys[i] for i in miss_idx])
+            recheck = self._recheck_many([keys[i] for i in miss_idx])
             still = []
             for i, blob in zip(miss_idx, recheck):
                 if blob is None:
                     still.append(i)
                 else:
-                    values[i] = unpickle_value(blob)
+                    values[i] = self._decode_value(blob)
             if not still:
                 return []
             t = self._require_transformer(len(still))
@@ -179,12 +224,17 @@ class KeyValueCache(CacheTransformer):
             new_items = []
             for j, (k, idxs) in enumerate(uniq.items()):
                 val = tuple(out[c][j] for c in self.value_cols)
-                new_items.append((k, pickle_value(val)))
+                new_items.append((k, self._encode_value(val)))
                 for i in idxs:
                     values[i] = val
             if not self.readonly:        # stale-readonly: never insert
-                self._backend.put_many(new_items)
+                # under write-behind this *enqueues* inside the locked
+                # section (the racing recheck sees the overlay); the
+                # barrier makes it durable before the lock releases so
+                # other processes' rechecks see it too
+                self._store_many(new_items)
                 self.stats.add(inserts=len(new_items))
+            self._write_barrier()
             return still
 
     # -- determinism verification (beyond paper §6) ---------------------------

@@ -129,6 +129,10 @@ class MmapTier(CacheBackend):
     to the disk tier."""
 
     persistent = True
+    #: snapshot hits are lock-free page-cache reads — prefetching them
+    #: onto the I/O pool would only copy memory-speed lookups into a
+    #: staging map, so the data plane skips this tier entirely
+    prefetchable = False
 
     def __init__(self, path: Optional[str], *,
                  disk: str = "sqlite",

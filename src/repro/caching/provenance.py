@@ -280,6 +280,15 @@ class CacheManifest:
     max_entries: Optional[int] = None      # entry-count budget
     max_bytes: Optional[int] = None        # store-size budget (bytes)
     ttl_seconds: Optional[float] = None    # entry time-to-live
+    # -- serialization scheme (see caching/codecs.py) ----------------------
+    #: recorded when a store is *created*; ``None`` (including every
+    #: directory that predates the field) means the legacy pickled
+    #: keys/values scheme, so pre-existing warm dirs stay warm.  An
+    #: optional field rather than a version bump: older builds load a
+    #: manifest that carries it (unknown fields are filtered out on
+    #: load) and keep serving the directory with whatever scheme the
+    #: family negotiates.
+    codec: Optional[str] = None
     format_version: int = MANIFEST_VERSION
 
     @classmethod

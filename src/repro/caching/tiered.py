@@ -50,6 +50,11 @@ class TieredBackend(CacheBackend):
     promote-on-hit)."""
 
     persistent = True
+    #: still worth prefetching: the front only absorbs *repeat* reads,
+    #: so a run's first pass over a warm store pays the disk tier's
+    #: round trip — exactly the read the I/O pool can overlap (and the
+    #: promote-on-hit then happens on the pool thread for free)
+    prefetchable = True
 
     def __init__(self, path: Optional[str], *,
                  disk: str = "sqlite",

@@ -217,6 +217,8 @@ def _actual_entries(dirpath: str, backend: Optional[str]) -> Optional[int]:
     disk = _disk_name(backend)
     if backend == "memory":
         return None                      # in-process only; nothing on disk
+    if disk is None and backend not in ("dense", "log"):
+        return None                      # selector unknown to this build
     if not _store_exists(dirpath, backend):
         return 0
     if disk is not None:

@@ -43,6 +43,7 @@ from .ir import IRNode, PlanGraph
 
 __all__ = ["CostModel", "CostContext", "compute_node_fingerprints",
            "fold_costs", "annotate_node_actuals", "analytic_stage_cost",
+           "should_prefetch", "PREFETCH_MIN_ROUND_TRIP_S",
            "EWMA_ALPHA", "DEFAULT_STAGE_COST_S", "DEFAULT_COMBINE_COST_S"]
 
 #: EWMA weight of the newest observation (0.4 ≈ the last ~4 runs carry
@@ -246,6 +247,37 @@ class CostContext:
     def invalidate_subtrees(self) -> None:
         """Drop memoized subtree costs (after a structural rewrite)."""
         self._subtree.clear()
+
+
+#: per-entry store round trip (seconds) below which a backend behaves
+#: like memory — moving its reads to the I/O pool would only add
+#: handoff overhead, so the prefetch gate refuses to stamp such nodes
+PREFETCH_MIN_ROUND_TRIP_S = 2e-6
+
+
+def should_prefetch(round_trip_s: Optional[float], *,
+                    overlap_s: Optional[float] = None) -> bool:
+    """Cost gate for the asynchronous data plane: is issuing a node's
+    warm-path store reads on the background I/O pool worth it?
+
+    * ``round_trip_s`` — measured per-entry round trip of the selected
+      backend (``caching.backends.measure_round_trip``); ``None`` means
+      unmeasured, which passes the gate — the backend's own
+      ``prefetchable`` flag already vetoes memory-speed tiers, so an
+      unknown figure is presumed disk-like.
+    * ``overlap_s`` — optional estimate of the compute window the fetch
+      would hide behind (e.g. wave-0's estimated cost).  When provided
+      and ≤ 0 there is nothing to overlap with, so the gate refuses.
+
+    Like every cost decision this influences scheduling only: prefetch
+    on/off is per-qid bit-identical (property-tested in
+    ``tests/test_dataplane.py``).
+    """
+    if overlap_s is not None and overlap_s <= 0.0:
+        return False
+    if round_trip_s is None:
+        return True
+    return float(round_trip_s) >= PREFETCH_MIN_ROUND_TRIP_S
 
 
 def fold_costs(record: Dict[str, Any], stats: Any) -> None:

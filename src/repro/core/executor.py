@@ -214,6 +214,69 @@ def _exec_with_probe(node: IRNode, probe_frame: ColFrame,
     return out
 
 
+class _Prefetcher:
+    """Issues cache ``get_many`` calls on the I/O pool the moment a
+    node's keys are knowable, for every plan node stamped ``prefetch``.
+
+    A cache's keys derive from the frame its node consumes
+    (``prefetch_columns``), so the fetch can start when that *feeding*
+    node completes: for query-keyed families fed by the source
+    (retrievers, probe nodes) that is submit time — the reads overlap
+    wave-0 compute — and for doc-keyed families (``ScorerCache``) it is
+    the upstream retriever's completion, overlapping sibling branches.
+    The executors call :meth:`node_ready` for the source and after
+    every node; the mapping here decides which caches that feeds.
+
+    Results land in each cache's staging map; the consuming
+    ``transform``/``serve_from_store`` pops them, so accounting and
+    compute-once semantics are untouched (see ``caching/dataplane.py``).
+    """
+
+    def __init__(self, graph: PlanGraph):
+        #: feeding-node id → [(consumer node, its cache)]
+        self._by_feed: Dict[int, List[Tuple[IRNode, Any]]] = {}
+        for node in graph.nodes:
+            if node.kind != "stage" or node.inlined or not node.prefetch:
+                continue
+            cache = node.cache
+            if cache is None or not getattr(cache, "prefetchable", False):
+                continue
+            cols = cache.prefetch_columns() \
+                if hasattr(cache, "prefetch_columns") else None
+            if not cols:
+                continue
+            feeds = _effective_inputs(node)
+            if len(feeds) != 1:
+                continue
+            self._by_feed.setdefault(feeds[0].id, []).append((node, cache))
+
+    @classmethod
+    def for_graph(cls, graph: PlanGraph) -> Optional["_Prefetcher"]:
+        pf = cls(graph)
+        return pf if pf._by_feed else None
+
+    def node_ready(self, node_id: int, frame: ColFrame) -> None:
+        """``node_id``'s output exists — start fetching for every cache
+        it feeds whose key columns the frame carries.  Pass the source
+        id at submit time to kick off query-keyed prefetches."""
+        for _, cache in self._by_feed.get(node_id, ()):
+            cols = cache.prefetch_columns()
+            if cols and all(c in frame for c in cols):
+                try:
+                    cache.prefetch_async(frame)
+                except Exception:
+                    pass                 # a failed prefetch is a non-fetch
+
+    def close(self) -> None:
+        """Run teardown: drop staged entries nobody consumed."""
+        for entries in self._by_feed.values():
+            for _, cache in entries:
+                try:
+                    cache.discard_staging()
+                except Exception:
+                    pass
+
+
 def run_sequential(graph: PlanGraph, frame: ColFrame,
                    batch_size: Optional[int],
                    rec: Optional[_Recorder] = None) -> List[ColFrame]:
@@ -221,6 +284,7 @@ def run_sequential(graph: PlanGraph, frame: ColFrame,
     results.  Execution records accumulate into ``rec``."""
     rec = rec if rec is not None else _Recorder()
     results: Dict[int, ColFrame] = {graph.source.id: frame}
+    pf = _Prefetcher.for_graph(graph)
 
     def evaluate(node: IRNode) -> ColFrame:
         memo = results.get(node.id)
@@ -235,9 +299,19 @@ def run_sequential(graph: PlanGraph, frame: ColFrame,
             out = _exec_node(node, ins, batch_size)
             rec.add(node.label, 0, t0, time.perf_counter())
         results[node.id] = out
+        if pf is not None:
+            pf.node_ready(node.id, out)
         return out
 
-    return [evaluate(t) for t in graph.terminals]
+    try:
+        if pf is not None:
+            # query-keyed prefetches start before any compute: sibling
+            # pipelines' store reads overlap the first chain's work
+            pf.node_ready(graph.source.id, frame)
+        return [evaluate(t) for t in graph.terminals]
+    finally:
+        if pf is not None:
+            pf.close()
 
 
 def run_warm(graph: PlanGraph, frame: ColFrame,
@@ -292,10 +366,16 @@ def run_concurrent(graph: PlanGraph, frame: ColFrame,
     """
     bounds = _shard_bounds(frame, n_shards)
     n_shards = len(bounds)
+    pf = _Prefetcher.for_graph(graph)
 
     results: Dict[Tuple[int, int], ColFrame] = {}
     for s, (lo, hi) in enumerate(bounds):
-        results[(graph.source.id, s)] = frame.take(np.arange(lo, hi))
+        shard = frame.take(np.arange(lo, hi))
+        results[(graph.source.id, s)] = shard
+        if pf is not None:
+            # per-shard query-keyed prefetch at submit time, before any
+            # task is scheduled — the store reads overlap wave 0
+            pf.node_ready(graph.source.id, shard)
 
     schedulable, children = _wave_edges(graph)
     indeg: Dict[Tuple[int, int], int] = {}
@@ -336,23 +416,31 @@ def run_concurrent(graph: PlanGraph, frame: ColFrame,
             rec.add(node.label, s, t0, time.perf_counter())
         results[(node.id, s)] = out
 
-    with ThreadPoolExecutor(max_workers=workers) as pool:
-        futures: Dict[Any, Tuple[IRNode, int]] = {}
+    try:
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            futures: Dict[Any, Tuple[IRNode, int]] = {}
 
-        def submit_ready() -> None:
-            while ready:
-                _, _, node, s = heapq.heappop(ready)
-                fut = pool.submit(exec_task, node, s)
-                futures[fut] = (node, s)
+            def submit_ready() -> None:
+                while ready:
+                    _, _, node, s = heapq.heappop(ready)
+                    fut = pool.submit(exec_task, node, s)
+                    futures[fut] = (node, s)
 
-        submit_ready()
-        while futures:
-            done, _ = wait(set(futures), return_when=FIRST_COMPLETED)
-            for fut in done:
-                node, s = futures.pop(fut)
-                fut.result()                 # propagate task errors
-                complete(node.id, s)
             submit_ready()
+            while futures:
+                done, _ = wait(set(futures), return_when=FIRST_COMPLETED)
+                for fut in done:
+                    node, s = futures.pop(fut)
+                    fut.result()                 # propagate task errors
+                    if pf is not None:
+                        # doc-keyed consumers of this node start their
+                        # store reads now, overlapping sibling branches
+                        pf.node_ready(node.id, results[(node.id, s)])
+                    complete(node.id, s)
+                submit_ready()
+    finally:
+        if pf is not None:
+            pf.close()
 
     outs = [ColFrame.concat([results[(t.id, s)] for s in range(n_shards)])
             for t in graph.terminals]
@@ -612,6 +700,7 @@ class StreamingExecutor:
         self.graph = graph
         self.terminal = graph.terminals[0]
         self._schedulable, self._children = _wave_edges(graph)
+        self._prefetcher = _Prefetcher.for_graph(graph)
         self.coalescing = all(n.shardable for n in graph.nodes
                               if n.kind == "stage")
         self.batch_size = batch_size
@@ -680,6 +769,8 @@ class StreamingExecutor:
             self._idle.wait_for(lambda: self._inflight == 0,
                                 timeout=timeout)
         self._pool.shutdown(wait=True)
+        if self._prefetcher is not None:
+            self._prefetcher.close()
 
     def __enter__(self) -> "StreamingExecutor":
         return self
@@ -779,6 +870,11 @@ class StreamingExecutor:
             rows.extend(qid_rows[q])
         frame = ColFrame.from_dicts(rows)   # before any state mutation
         n_rows_in = sum(len(r.rows) for r in reqs)
+        if self._prefetcher is not None:
+            # query-keyed store reads start before the batch is even
+            # scheduled — they overlap this batch's wave-0 compute (and
+            # any other batch in flight)
+            self._prefetcher.node_ready(self.graph.source.id, frame)
         with self._lock:
             s = self._seq
             self._seq += 1
@@ -846,6 +942,10 @@ class StreamingExecutor:
             self._results[(node.id, s)] = out
             meta.hits += hits
             meta.misses += misses
+        if self._prefetcher is not None:
+            # doc-keyed caches fed by this node (scorers after a
+            # retriever) can start fetching for this batch now
+            self._prefetcher.node_ready(node.id, out)
         self.stats.node(node.label).record(dt_ms, rows=len(out))
         if node is self.terminal:
             self._finalize(s, out)

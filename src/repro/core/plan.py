@@ -49,7 +49,8 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
                     Union)
 
 from .cost import (CostContext, CostModel, annotate_node_actuals,
-                   compute_node_fingerprints, fold_costs, _round_cost)
+                   compute_node_fingerprints, fold_costs, should_prefetch,
+                   _round_cost)
 from .executor import (_Recorder, resolve_n_shards, run_concurrent,
                        run_sequential, run_warm)
 from .frame import ColFrame
@@ -71,6 +72,10 @@ class PlanStats(PrecomputeStats):
     nodes_planned: int = 0               # unique DAG nodes (excl. source)
     cache_hits: int = 0                  # memo hits across inserted caches
     cache_misses: int = 0
+    #: subset of ``cache_hits`` served from the I/O-pool staging map
+    #: (``caching/dataplane.py``) — attributed to the consuming node at
+    #: consumption time, so hits+misses stay exactly the request count
+    cache_prefetched: int = 0
     node_times_s: Dict[str, float] = field(default_factory=dict)
     node_exec_counts: Dict[str, int] = field(default_factory=dict)
     #: raw wrapped-transformer seconds (and the queries they covered)
@@ -174,6 +179,16 @@ class ExecutionPlan:
         forest; a list of pass names (drawn from
         ``repro.core.rewrite.OPTIMIZER_PASSES``) runs exactly those, in
         the given order.
+    prefetch:
+        Asynchronous data plane (``caching/dataplane.py``): when True
+        (default), planner-inserted caches on prefetchable backends are
+        stamped so the executors issue their warm-path store reads on a
+        background I/O pool as soon as each node's input frame exists,
+        overlapping compute; miss-path writes move to a bounded
+        write-behind queue flushed on ``close()``/``drain()``.  Results
+        are per-qid bit-identical with and without it (property-tested);
+        gated per node by :func:`repro.core.cost.should_prefetch` and
+        globally by ``REPRO_PREFETCH=0`` / ``REPRO_WRITE_BEHIND=0``.
     """
 
     def __init__(self, pipelines: Sequence[Transformer], *,
@@ -182,7 +197,8 @@ class ExecutionPlan:
                  memo_factory: Optional[Callable[..., Any]] = None,
                  on_stale: str = "error",
                  cache_budget: Any = None,
-                 optimize: Union[str, Sequence[str], None] = "all"):
+                 optimize: Union[str, Sequence[str], None] = "all",
+                 prefetch: bool = True):
         self.pipelines: List[Transformer] = list(pipelines)
         self.cache_dir = cache_dir
         self.cache_backend = cache_backend
@@ -190,6 +206,7 @@ class ExecutionPlan:
         self._memo_factory = memo_factory
         self.on_stale = on_stale
         self.optimize = optimize
+        self.prefetch = bool(prefetch)
         passes = resolve_passes(optimize)
 
         # -- layer 1: lowering ---------------------------------------------
@@ -379,11 +396,40 @@ class ExecutionPlan:
                 path = os.path.join(
                     self.cache_dir, pipeline_hash(node.stage) + "-" + digest)
             wanted = {**kwargs, "fingerprint": fps[node.id],
-                      "on_stale": self.on_stale}
+                      "on_stale": self.on_stale,
+                      # planner-inserted caches opt into write-behind:
+                      # the plan's close()/collect path drains them, and
+                      # relaxing cross-process puts from exactly-once to
+                      # at-least-once-with-identical-results is safe for
+                      # deterministic transformers (hand-wrapped caches
+                      # keep synchronous puts unless asked)
+                      "async_writes": True}
             if node.backend_override is not None:
                 wanted["backend"] = node.backend_override
             node.cache = factory(node.stage, path,
                                  **_accepted_kwargs(factory, wanted))
+        self._stamp_prefetch()
+
+    def _stamp_prefetch(self) -> None:
+        """Mark which memoized nodes the executors should prefetch:
+        plan opt-in (``prefetch=``), a global kill switch
+        (``REPRO_PREFETCH=0``), the backend's ``prefetchable`` flag
+        (memory-speed tiers decline), and the cost gate
+        (:func:`~repro.core.cost.should_prefetch` on the measured store
+        round trip).  Purely a scheduling decision — results are
+        identical either way."""
+        from ..caching.dataplane import prefetch_default
+        if not (self.prefetch and prefetch_default()):
+            return
+        cost = self.graph.cost
+        round_trip = cost.round_trip_s if cost is not None else None
+        if not should_prefetch(round_trip):
+            return
+        for node in self.graph.nodes:
+            cache = node.cache
+            if cache is None or not getattr(cache, "prefetchable", False):
+                continue
+            node.prefetch = True
 
     # -- explain / manifests ------------------------------------------------
     def _build_record(self) -> Dict[str, Any]:
@@ -527,6 +573,7 @@ class ExecutionPlan:
                 "nodes_pruned": stats.nodes_pruned,
                 "cache_hits": stats.cache_hits,
                 "cache_misses": stats.cache_misses,
+                "cache_prefetched": stats.cache_prefetched,
                 "n_shards": stats.n_shards,
                 "n_workers": stats.n_workers,
                 "wall_time_s": round(stats.wall_time_s, 4),
@@ -556,10 +603,20 @@ class ExecutionPlan:
             pass
 
     def close(self) -> None:
-        """Close planner-inserted caches (flushes temporary stores)."""
+        """Close planner-inserted caches (flushes temporary stores and
+        write-behind queues)."""
         for node in self.graph.nodes:
             if node.cache is not None and hasattr(node.cache, "close"):
                 node.cache.close()
+
+    def drain(self) -> None:
+        """Make planner-inserted caches durable without closing them:
+        flush each family's write-behind queue and access log
+        (``caching/dataplane.py``).  A crash after ``drain()`` returns
+        loses nothing; a crash before it recomputes pending entries."""
+        for node in self.graph.nodes:
+            if node.cache is not None and hasattr(node.cache, "drain"):
+                node.cache.drain()
 
     def __enter__(self) -> "ExecutionPlan":
         return self
@@ -695,12 +752,13 @@ class ExecutionPlan:
                     if spans else 0.0)
 
     def _finalize_stats(self, stats: PlanStats,
-                        cache_base: Tuple[int, int], t0: float) -> None:
+                        cache_base: Tuple[int, int, int], t0: float) -> None:
         stats.stage_invocations_saved = \
             stats.nodes_total - stats.nodes_executed
-        hits, misses = self._cache_counters()
+        hits, misses, prefetched = self._cache_counters()
         stats.cache_hits = hits - cache_base[0]
         stats.cache_misses = misses - cache_base[1]
+        stats.cache_prefetched = prefetched - cache_base[2]
         stats.wall_time_s = time.perf_counter() - t0
         if stats.n_shards > 1 and stats.wall_time_s > 0 \
                 and stats.shard_times_s \
@@ -712,14 +770,15 @@ class ExecutionPlan:
         self.stats = stats
         self._record_run(stats)
 
-    def _cache_counters(self) -> Tuple[int, int]:
-        hits = misses = 0
+    def _cache_counters(self) -> Tuple[int, int, int]:
+        hits = misses = prefetched = 0
         for node in self.graph.nodes:
             cs = getattr(node.cache, "stats", None)
             if cs is not None:
                 hits += cs.hits
                 misses += cs.misses
-        return hits, misses
+                prefetched += getattr(cs, "prefetched", 0)
+        return hits, misses, prefetched
 
     def _compute_counters(self) -> Dict[str, Tuple[float, int]]:
         """Cumulative raw-compute counters per *cached* node label (see

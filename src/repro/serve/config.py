@@ -55,6 +55,12 @@ class ServeConfig:
     backend: Optional[str] = None
     on_stale: str = "error"
     optimize: Union[str, Sequence[str], None] = "all"
+    #: asynchronous cache data plane (``caching/dataplane.py``): issue
+    #: warm-path store reads on a background I/O pool as soon as a
+    #: batch's frame exists and buffer miss-path writes behind.  Results
+    #: are per-qid bit-identical either way — ``False`` is the ablation
+    #: knob (``serve_bench --no-prefetch``)
+    prefetch: bool = True
 
     # -- micro-batching / executor knobs ------------------------------------
     #: positive int, or ``"auto"`` to take the compiled plan's autotuned
@@ -122,7 +128,8 @@ class ServeConfig:
                     on_stale=self.on_stale, optimize=self.optimize,
                     max_batch=self.max_batch, max_wait_ms=self.max_wait_ms,
                     max_workers=self.exec_workers,
-                    queue_capacity=self.queue_capacity)
+                    queue_capacity=self.queue_capacity,
+                    prefetch=self.prefetch)
 
     def single(self) -> "ServeConfig":
         """This config as one worker process sees it (``workers=1``)."""

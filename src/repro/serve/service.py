@@ -140,11 +140,13 @@ class PipelineService:
                  max_wait_ms: Union[float, str] = 2.0,
                  max_workers: int = 4, queue_capacity: int = 1024,
                  batch_size: Optional[int] = None,
-                 reservoir_capacity: int = 4096):
+                 reservoir_capacity: int = 4096,
+                 prefetch: bool = True):
         self.pipeline = pipeline
         self.plan = ExecutionPlan([pipeline], cache_dir=cache_dir,
                                   cache_backend=cache_backend,
-                                  on_stale=on_stale, optimize=optimize)
+                                  on_stale=on_stale, optimize=optimize,
+                                  prefetch=prefetch)
         tuned = self.plan.tuning()
         if max_batch == "auto":
             max_batch = int(tuned.get("max_batch", 32))
@@ -158,6 +160,7 @@ class PipelineService:
         self.max_batch = self._exec.max_batch
         self.max_wait_ms = float(max_wait_ms)
         self._compute_base = self.plan._compute_counters()
+        self._cache_base = self.plan._cache_counters()
         self._closed = False
 
     # -- request path --------------------------------------------------------
@@ -182,6 +185,13 @@ class PipelineService:
         """Dispatch pending submissions without waiting for the batch
         window."""
         self._exec.flush()
+
+    def drain(self) -> None:
+        """Make the service's caches durable without stopping it: flush
+        each planner-inserted cache's write-behind queue and access log
+        (``caching/dataplane.py``).  Long-lived services call this at
+        quiet points; ``close()`` always drains."""
+        self.plan.drain()
 
     # -- stats / introspection -----------------------------------------------
     def _on_batch(self, *, n_requests: int, latencies_ms: List[float],
@@ -221,6 +231,12 @@ class PipelineService:
         self.plan._fill_compute_stats(stats, self._compute_base)
         stats.cache_hits = s.cache_hits
         stats.cache_misses = s.cache_misses
+        # staged-served subset of the hits (dataplane prefetch) — read
+        # from the family counters, which attribute a prefetched hit to
+        # the *consuming* node at consumption time, so it is always a
+        # subset of the hits counted above (never an extra lookup)
+        stats.cache_prefetched = \
+            self.plan._cache_counters()[2] - self._cache_base[2]
         stats.online = s.as_dict(self.max_batch)
         stats.online.setdefault("max_batch", self.max_batch)
         stats.online.setdefault("max_wait_ms", self.max_wait_ms)

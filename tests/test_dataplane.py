@@ -1,0 +1,513 @@
+"""Asynchronous cache data plane (caching/dataplane.py, caching/codecs.py):
+vectorized key building bit-identical to the scalar reference, columnar
+codec roundtrips and per-directory negotiation, staging-map pop-once /
+in-flight-wait semantics, write-behind overlay durability (readable
+before flush, durable after, recompute-never-corrupt after a SIGKILL
+inside the pre-flush window), and query-keyed prefetch preserving
+per-qid bit-identity and honest hit/miss accounting under all three
+executors."""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.caching import (KV_CODEC, RETRIEVER_CODEC, CacheManifest,
+                           KeyValueCache, RetrieverCache, StagingMap,
+                           StaleCacheError, WriteBehindWriter, scalar_key,
+                           vector_keys)
+from repro.caching.codecs import (decode_columnar_frame, decode_kv_batch,
+                                  decode_kv_value, encode_columnar_frame,
+                                  encode_kv_value)
+from repro.core import ColFrame, ExecutionPlan, GenericTransformer, add_ranks
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SUBPROC_ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO_ROOT, "src")}
+
+QUERIES = ColFrame({"qid": ["q1", "q2", "q3"],
+                    "query": ["alpha", "beta", "gamma"]})
+SORT = ["qid", "docno"]
+
+
+class CountingStage(GenericTransformer):
+    def __init__(self, name, fn=None, **kw):
+        self.calls = 0
+
+        def wrapped(inp, _fn=fn):
+            self.calls += 1
+            return _fn(inp) if _fn else inp
+        super().__init__(wrapped, name, **kw)
+
+
+def make_cacheable_retriever(name="R", n=4):
+    def retr_fn(inp):
+        rows = []
+        for qid, query in zip(inp["qid"].tolist(), inp["query"].tolist()):
+            for i in range(n):
+                rows.append({"qid": qid, "query": query,
+                             "docno": f"{name}_d{i}",
+                             "score": 9.0 - i + 0.125 * len(query)})
+        return add_ranks(ColFrame.from_dicts(rows))
+    return CountingStage(name, retr_fn,
+                         one_to_many=True, key_columns=("qid", "query"))
+
+
+# -- vectorized key building (satellite: _keys_of hot path) -------------------
+
+_COL_KINDS = st.sampled_from(["int", "float", "str"])
+
+
+def _column_for(kind, n, rng_seed):
+    rng = np.random.default_rng(rng_seed)
+    if kind == "int":
+        return rng.integers(-10**9, 10**9, size=n).astype(np.int64)
+    if kind == "float":
+        vals = rng.standard_normal(n) * 1e3
+        vals[rng.random(n) < 0.1] = 0.0
+        return vals.astype(np.float64)
+    lens = rng.integers(0, 12, size=n)
+    col = np.empty(n, dtype=object)
+    col[:] = ["".join(chr(97 + int(c)) for c in rng.integers(0, 26, size=l))
+              for l in lens]
+    return col
+
+
+@settings(max_examples=40, deadline=None)
+@given(kinds=st.lists(_COL_KINDS, min_size=1, max_size=3),
+       n=st.integers(min_value=1, max_value=64),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_vector_keys_match_scalar_reference(kinds, n, seed):
+    """The vectorized digest must be bit-identical to the scalar
+    reference for every row — this is what keeps warm dirs warm."""
+    cols = [_column_for(k, n, seed + i) for i, k in enumerate(kinds)]
+    vec = vector_keys(cols)
+    assert len(vec) == n and all(len(k) == 16 * len(cols) for k in vec)
+    for r in range(n):
+        values = [c[r] for c in cols]
+        dkinds = [np.asarray(c).dtype.kind if c.dtype != object else "O"
+                  for c in cols]
+        assert vec[r] == scalar_key(values, dkinds)
+
+
+def test_vector_keys_batch_composition_independent():
+    """A row's key must not depend on what other rows share the batch
+    (masked per-position fold) — otherwise re-batching would miss."""
+    qids = np.array(["q1", "q22", "q333", "q4444"], dtype=object)
+    scores = np.array([1.5, -2.0, 0.0, 1e12])
+    full = vector_keys([qids, scores])
+    for i in range(4):
+        alone = vector_keys([qids[i:i + 1], scores[i:i + 1]])
+        assert alone[0] == full[i]
+    # and distinct rows get distinct keys
+    assert len(set(full)) == 4
+
+
+def test_vector_keys_cross_scalar_fallback_boundary():
+    """Batches wider than the vector width fall back to per-row scalar
+    digests — both paths must produce the same bytes."""
+    from repro.caching import codecs
+    n = 32
+    col = np.arange(n).astype(np.int64)
+    wide = vector_keys([col])
+    try:
+        codecs._MAX_VECTOR_WIDTH, saved = 8, codecs._MAX_VECTOR_WIDTH
+        narrow = vector_keys([col])
+    finally:
+        codecs._MAX_VECTOR_WIDTH = saved
+    assert wide == narrow
+
+
+# -- value codecs -------------------------------------------------------------
+
+def test_kv_value_codec_roundtrips():
+    for vals in [(1.5,), (0.0, -3.25, 1e-300), ("text", 2.0), (None,),
+                 (np.float64(7.125), np.int64(3))]:
+        got = decode_kv_value(encode_kv_value(vals))
+        assert len(got) == len(vals)
+        for g, v in zip(got, vals):
+            if isinstance(v, (float, np.floating, int, np.integer)) \
+                    and not isinstance(v, bool):
+                assert float(g) == float(v)      # exact: bit-identity
+            else:
+                assert g == v
+
+
+def test_kv_batch_decode_all_float_fast_path():
+    blobs = [encode_kv_value((1.5, -2.25)), encode_kv_value((0.0, 1e9))]
+    mat = decode_kv_batch(blobs, 2)
+    assert mat is not None and mat.shape == (2, 2)
+    assert mat.tolist() == [[1.5, -2.25], [0.0, 1e9]]
+    # one pickled value disables the fast path (None, not garbage)
+    assert decode_kv_batch([blobs[0], encode_kv_value(("s", 1.0))], 2) is None
+    assert decode_kv_batch(blobs, 3) is None     # column-count mismatch
+
+
+def test_columnar_frame_roundtrip_bit_identity():
+    n = 7
+    cols = [
+        ("qid", np.array(["q1"] * n, dtype=object)),
+        ("docno", np.array([f"d{i}" for i in range(n)], dtype=object)),
+        ("score", np.linspace(-1.0, 1.0, n) * np.pi),
+        ("rank", np.arange(n, dtype=np.int64)),
+    ]
+    out = decode_columnar_frame(encode_columnar_frame(cols, n))
+    assert set(out) == {"qid", "docno", "score", "rank"}
+    # floats roundtrip bit-for-bit (float64 preserved, no f32 cast)
+    assert out["score"].tobytes() == cols[2][1].tobytes()
+    assert out["rank"].tolist() == list(range(n))
+    assert out["docno"].tolist() == [f"d{i}" for i in range(n)]
+
+
+# -- codec negotiation via the manifest ---------------------------------------
+
+def _strip_codec(dirpath):
+    m = CacheManifest.load(dirpath)
+    m.codec = None
+    m.save(dirpath)
+
+
+def test_fresh_dir_records_codec(tmp_path):
+    c = KeyValueCache(str(tmp_path / "kv"), lambda f: f.assign(
+        out=f["text"].astype(object)), key="text", value="out")
+    assert c.codec == KV_CODEC
+    c.close()
+    assert CacheManifest.load(str(tmp_path / "kv")).codec == KV_CODEC
+    r = RetrieverCache(str(tmp_path / "ret"), make_cacheable_retriever())
+    assert r.codec == RETRIEVER_CODEC
+    r.close()
+
+
+def test_legacy_dir_without_codec_stays_warm_on_pickle(tmp_path):
+    """A directory whose manifest predates the codec field keeps its
+    pickled keys/values forever — reopening must hit, not re-key."""
+    path = str(tmp_path / "kv")
+    upper = GenericTransformer(
+        lambda f: f.assign(out=np.array(
+            [t.upper() for t in f["text"].tolist()], dtype=object)), "U")
+    frame = ColFrame({"text": ["a", "b", "c"]})
+    c1 = KeyValueCache(path, upper, key="text", value="out")
+    c1.close()
+    _strip_codec(path)                   # simulate a pre-codec build
+    c2 = KeyValueCache(path, upper, key="text", value="out")
+    assert c2.codec is None
+    c2.transform(frame)
+    assert c2.stats.misses == 3
+    c2.close()
+    c3 = KeyValueCache(path, upper, key="text", value="out")
+    assert c3.codec is None              # negotiation sticks to legacy
+    out = c3.transform(frame)
+    assert c3.stats.hits == 3 and c3.stats.misses == 0
+    assert out["out"].tolist() == ["A", "B", "C"]
+    c3.close()
+
+
+def test_unknown_codec_is_stale(tmp_path):
+    path = str(tmp_path / "kv")
+    KeyValueCache(path, lambda f: f, key="text", value="text").close()
+    m = CacheManifest.load(path)
+    m.codec = "kv-quantum-42"            # from a future build
+    m.save(path)
+    with pytest.raises(StaleCacheError, match="codec"):
+        KeyValueCache(path, lambda f: f, key="text", value="text")
+    # recompute policy wipes and renegotiates the current codec
+    c = KeyValueCache(path, lambda f: f, key="text", value="text",
+                      on_stale="recompute")
+    assert c.codec == KV_CODEC
+    c.close()
+
+
+# -- staging map --------------------------------------------------------------
+
+def test_staging_map_pop_once_and_none_misses():
+    s = StagingMap()
+    s.deposit([(b"k1", b"v1"), (b"k2", None)])
+    assert len(s) == 2
+    got = s.pop_many([b"k1", b"k2", b"k3"])
+    assert got == {b"k1": b"v1", b"k2": None}    # staged miss is a result
+    assert s.pop_many([b"k1"]) == {}             # consumed at most once
+    s.deposit([(b"k4", b"v4")])
+    s.discard()
+    assert s.pop_many([b"k4"]) == {}
+
+
+def test_staging_map_covered_dedups_inflight():
+    from concurrent.futures import Future
+    s = StagingMap()
+    s.deposit([(b"a", b"1")])
+    fut = Future()
+    s.track(fut, [b"b"])
+    assert s.covered([b"a", b"b", b"c"]) == [b"c"]
+    fut.set_result(None)                 # done callback untracks
+    assert s.covered([b"b"]) == [b"b"]
+
+
+def test_staging_map_pop_waits_for_inflight_fetch():
+    from concurrent.futures import Future
+    s = StagingMap()
+    fut = Future()
+    s.track(fut, [b"k"])
+
+    def land():
+        time.sleep(0.05)
+        s.deposit([(b"k", b"v")])
+        fut.set_result(None)
+
+    t = threading.Thread(target=land)
+    t.start()
+    try:
+        assert s.pop_many([b"k"]) == {b"k": b"v"}   # waited, no re-read
+    finally:
+        t.join()
+
+
+# -- write-behind writer ------------------------------------------------------
+
+class _RecordingStore:
+    def __init__(self, fail_times=0):
+        self.rows = {}
+        self.calls = 0
+        self.fail_times = fail_times
+
+    def put_many(self, items):
+        self.calls += 1
+        if self.fail_times > 0:
+            self.fail_times -= 1
+            raise OSError("transient store failure")
+        self.rows.update(items)
+
+
+def test_write_behind_overlay_readable_until_durable(monkeypatch):
+    monkeypatch.setenv("REPRO_WRITE_BEHIND_HOLD", "1")
+    store = _RecordingStore()
+    w = WriteBehindWriter(store.put_many)
+    w.put([(b"k1", b"v1"), (b"k2", b"v2")])
+    assert w.pending == 2 and store.rows == {}     # held: nothing durable
+    assert w.overlay_many([b"k1", b"k3"]) == {b"k1": b"v1"}
+    assert w.barrier() is None and store.rows == {}   # barrier honors HOLD
+    w.flush()
+    assert store.rows == {b"k1": b"v1", b"k2": b"v2"}
+    assert w.pending == 0 and w.overlay_many([b"k1"]) == {}
+    w.close()
+    with pytest.raises(RuntimeError):
+        w.put([(b"k3", b"v3")])
+
+
+def test_write_behind_failed_flush_keeps_entries_pending(monkeypatch):
+    monkeypatch.setenv("REPRO_WRITE_BEHIND_HOLD", "1")
+    store = _RecordingStore(fail_times=1)
+    w = WriteBehindWriter(store.put_many)
+    w.put([(b"k", b"v")])
+    with pytest.raises(OSError):
+        w.flush()
+    # the entry stays readable and re-flushable — never silently lost
+    assert w.pending == 1 and w.overlay_many([b"k"]) == {b"k": b"v"}
+    w.flush()
+    assert store.rows == {b"k": b"v"}
+
+
+def test_write_behind_last_value_wins_and_order_preserved():
+    store = _RecordingStore()
+    w = WriteBehindWriter(store.put_many)
+    w._hold = True                       # deterministic pending state
+    w.put([(b"k", b"v1")])
+    w.put([(b"k", b"v2"), (b"j", b"w")])
+    assert w.pending == 2                # rewrite coalesced in place
+    w.flush()
+    assert store.rows == {b"k": b"v2", b"j": b"w"}
+
+
+def test_kv_cache_async_writes_threads_compute_exactly_once(tmp_path):
+    calls = []
+
+    def upper(f):
+        calls.extend(f["text"].tolist())
+        return f.assign(out=np.array(
+            [t.upper() for t in f["text"].tolist()], dtype=object))
+
+    c = KeyValueCache(str(tmp_path / "kv"), GenericTransformer(upper, "U"),
+                      key="text", value="out", async_writes=True)
+    frame = ColFrame({"text": [f"t{i}" for i in range(8)]})
+    outs = [None] * 4
+
+    def run(slot):
+        outs[slot] = c.transform(frame)
+
+    threads = [threading.Thread(target=run, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sorted(calls) == sorted(f"t{i}" for i in range(8))   # once each
+    for o in outs:
+        assert o["out"].tolist() == [f"T{i}" for i in range(8)]
+    c.close()
+    warm = KeyValueCache(str(tmp_path / "kv"), GenericTransformer(upper, "U"),
+                         key="text", value="out")
+    warm.transform(frame)
+    assert warm.stats.hits == 8          # every write became durable
+    warm.close()
+
+
+# -- prefetch: bit-identity + attribution across executors --------------------
+
+def _run_plan(tmp_path, *, prefetch, run_kw=None):
+    retr = make_cacheable_retriever()
+    boost = CountingStage("boost", lambda f: add_ranks(
+        f.assign(score=f["score"] * 2.0)))
+    pipelines = [retr % 3, retr >> boost]
+    with ExecutionPlan(pipelines, cache_dir=str(tmp_path),
+                       prefetch=prefetch) as plan:
+        outs, stats = plan.run(QUERIES, **(run_kw or {}))
+    return outs, stats
+
+
+@pytest.mark.parametrize("run_kw", [
+    pytest.param(None, id="sequential"),
+    pytest.param({"n_shards": 3, "max_workers": 3}, id="concurrent"),
+])
+def test_prefetch_bit_identity_and_attribution(tmp_path, run_kw):
+    """Warm runs with prefetch on vs off must be bit-identical per qid
+    and report identical hit/miss counts; prefetched hits attribute to
+    the consuming node (CacheStats.prefetched ≤ hits, > 0 when on)."""
+    cold_outs, cold = _run_plan(tmp_path, prefetch=True, run_kw=run_kw)
+    assert cold.cache_misses == len(QUERIES) and cold.cache_hits == 0
+    assert cold.cache_prefetched == 0    # misses are never "prefetched"
+
+    on_outs, on = _run_plan(tmp_path, prefetch=True, run_kw=run_kw)
+    off_outs, off = _run_plan(tmp_path, prefetch=False, run_kw=run_kw)
+    assert on.cache_hits == off.cache_hits == len(QUERIES)
+    assert on.cache_misses == off.cache_misses == 0
+    assert on.cache_prefetched > 0       # staged entries actually served
+    assert on.cache_prefetched <= on.cache_hits
+    assert off.cache_prefetched == 0
+    for got, want, base in zip(on_outs, off_outs, cold_outs):
+        cols = ["qid", "docno", "score", "rank"]
+        assert got.sort_values(SORT).equals(
+            want.sort_values(SORT), cols=cols, rtol=0, atol=0)
+        assert got.sort_values(SORT).equals(
+            base.sort_values(SORT), cols=cols, rtol=0, atol=0)
+
+
+def test_prefetch_streaming_service_bit_identity(tmp_path):
+    """The streaming executor (PipelineService) prefetches at submit
+    time; warm results must match the offline run bit for bit and the
+    service's plan stats must attribute the prefetched hits."""
+    from repro.serve import PipelineService
+    retr = make_cacheable_retriever()
+    pipeline = retr % 3
+    offline = pipeline(QUERIES)
+    with ExecutionPlan([pipeline], cache_dir=str(tmp_path)) as plan:
+        plan.run(QUERIES)                # warm the store
+
+    results = {}
+    for prefetch in (True, False):
+        svc = PipelineService(pipeline, cache_dir=str(tmp_path),
+                              prefetch=prefetch, max_wait_ms=0.0)
+        try:
+            results[prefetch] = svc.search(QUERIES)
+            stats = svc.plan_stats()
+            if prefetch:
+                assert stats.cache_prefetched > 0
+            else:
+                assert stats.cache_prefetched == 0
+        finally:
+            svc.close()
+    cols = ["qid", "docno", "score", "rank"]
+    for frame in results.values():
+        assert frame.sort_values(SORT).equals(
+            offline.sort_values(SORT), cols=cols, rtol=0, atol=0)
+
+
+def test_prefetch_kill_switch(tmp_path, monkeypatch):
+    _run_plan(tmp_path, prefetch=True)   # cold
+    monkeypatch.setenv("REPRO_PREFETCH", "0")
+    _, stats = _run_plan(tmp_path, prefetch=True)
+    assert stats.cache_hits == len(QUERIES)
+    assert stats.cache_prefetched == 0   # env veto beats the plan kwarg
+
+
+# -- crash consistency (satellite: SIGKILL before flush) ----------------------
+
+_CRASH_SCRIPT = textwrap.dedent("""\
+    import sys, time
+    from repro.core import ColFrame, ExecutionPlan, GenericTransformer, \\
+        add_ranks
+
+    def retr(inp):
+        rows = [{"qid": q, "query": t, "docno": f"d{i}", "score": 5.0 - i}
+                for q, t in zip(inp["qid"].tolist(), inp["query"].tolist())
+                for i in range(3)]
+        return add_ranks(ColFrame.from_dicts(rows))
+
+    a = GenericTransformer(retr, "A", one_to_many=True,
+                           key_columns=("qid", "query"))
+    Q = ColFrame({"qid": ["q1", "q2"], "query": ["x", "y"]})
+    if sys.argv[2] == "crash":
+        plan = ExecutionPlan([a % 2], cache_dir=sys.argv[1])
+        _, stats = plan.run(Q)
+        assert stats.cache_misses == 2, stats.cache_misses
+        print("READY", flush=True)
+        time.sleep(60)                   # killed here — before any flush
+    else:
+        with ExecutionPlan([a % 2], cache_dir=sys.argv[1]) as plan:
+            _, s1 = plan.run(Q)
+            _, s2 = plan.run(Q)
+        print(s1.cache_hits, s1.cache_misses,
+              s2.cache_hits, s2.cache_misses)
+""")
+
+
+def test_sigkill_before_flush_recomputes_never_corrupts(tmp_path):
+    """Kill a worker inside the pre-flush window (REPRO_WRITE_BEHIND_HOLD
+    keeps every put pending): the store must verify clean, the entries
+    recompute on reopen, and nothing double-counts."""
+    from repro.cli import main as cli_main
+    env = {**SUBPROC_ENV, "REPRO_WRITE_BEHIND_HOLD": "1"}
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _CRASH_SCRIPT, str(tmp_path), "crash"],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env)
+    try:
+        line = proc.stdout.readline()
+        assert line.strip() == "READY", (line, proc.stderr.read())
+        os.kill(proc.pid, signal.SIGKILL)
+        proc.wait(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    # 1) the directory is verifiable — crash lost entries, corrupted none
+    assert cli_main(["cache", "verify", str(tmp_path)]) == 0
+    # 2) a fresh process recomputes exactly the lost entries, then hits
+    p = subprocess.run(
+        [sys.executable, "-c", _CRASH_SCRIPT, str(tmp_path), "reopen"],
+        capture_output=True, text=True, env=SUBPROC_ENV, timeout=120)
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert p.stdout.split() == ["0", "2", "2", "0"]
+    assert cli_main(["cache", "verify", str(tmp_path)]) == 0
+
+
+@pytest.mark.slow
+def test_fleet_worker_sigkill_leaves_store_verifiable(tmp_path):
+    """Fleet variant: SIGKILL one worker mid-service, finish the run on
+    the survivors, and the shared cache directory still verifies."""
+    from repro.cli import main as cli_main
+    from repro.serve import FleetService, ServeConfig
+    cfg = ServeConfig(pipeline="bm25", scale=0.02, cutoff=5, num_results=10,
+                      seed=0, max_batch=4, max_wait_ms=0.0, exec_workers=1,
+                      warm_start=False, workers=2, cache_dir=str(tmp_path))
+    scenario = cfg.build_scenario()
+    qids = [str(q) for q in scenario.topics["qid"].tolist()]
+    queries = scenario.topics["query"].tolist()
+    with FleetService(cfg) as svc:
+        first = [svc.submit(q, t) for q, t in zip(qids[:3], queries[:3])]
+        assert all(f.result(120) is not None for f in first)
+        svc.kill_worker()                # chaos: pending writes die with it
+        rest = [svc.submit(q, t) for q, t in zip(qids[3:6], queries[3:6])]
+        assert all(f.result(120) is not None for f in rest)
+        svc.drain()                      # survivors flush + refresh manifests
+    assert cli_main(["cache", "verify", str(tmp_path)]) == 0
